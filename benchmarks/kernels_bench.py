@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference path on CPU
+(the Pallas kernels run in interpret mode here — TPU timings are the
+roofline estimates in EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+
+
+def _t(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(emit=print):
+    k = jax.random.key(0)
+    q = jax.random.normal(k, (8, 512, 64), jnp.float32)
+    kk = jax.random.normal(k, (4, 512, 64), jnp.float32)
+    f = jax.jit(lambda a, b, c: R.flash_attention_ref(a, b, c))
+    emit(f"kernel_ref,flash_512,{_t(f, q, kk, kk):.0f},us_per_call")
+
+    qd = jax.random.normal(k, (8, 4, 2, 64), jnp.float32)
+    kd = jax.random.normal(k, (8, 4, 1024, 64), jnp.float32)
+    lens = jnp.full((8,), 800, jnp.int32)
+    g = jax.jit(lambda a, b, c, l: R.decode_attention_ref(a, b, c, l))
+    emit(f"kernel_ref,decode_1k,{_t(g, qd, kd, kd, lens):.0f},us_per_call")
+
+    x = jax.random.normal(k, (12, 64, 32), jnp.float32)
+    b = jax.random.normal(k, (12, 64, 16), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(k, (12, 64, 1), jnp.float32))
+    cum = jnp.cumsum(-dt * 0.5, axis=1)
+    h = jax.jit(lambda *a: R.ssd_chunk_ref(*a))
+    emit(f"kernel_ref,ssd_chunk,{_t(h, x, b, b, dt, cum):.0f},us_per_call")
+
+    xn = jax.random.normal(k, (4096, 1024), jnp.float32)
+    s = jnp.ones((1024,), jnp.float32)
+    rn = jax.jit(lambda a, b: R.rmsnorm_ref(a, b))
+    emit(f"kernel_ref,rmsnorm_4Mx,{_t(rn, xn, s):.0f},us_per_call")
+
+
+if __name__ == "__main__":
+    main()

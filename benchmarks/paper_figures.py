@@ -1,0 +1,137 @@
+"""One benchmark per paper table/figure, driven by the roofline simulator
+(H200 constants for 1:1 comparison with the paper's numbers; see
+``--hw v5e`` for the TPU deployment this framework targets)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.roofline.terms import H200, V5E
+from repro.sim import (simulate, bursty_trace, azure_code_trace,
+                       mooncake_conv_trace, uniform_trace)
+from repro.sim.costmodel import CostModel, Strategy
+
+STRATS = ("dp", "tp", "sp", "shift")
+
+
+def _run(cfg, trace, hw, **kw):
+    return {s: simulate(cfg, trace, s, hw=hw, **kw) for s in STRATS}
+
+
+def table2_complexity(hw=H200, emit=print):
+    """Paper Table 2: comm volume/compute scaling of TP vs SP."""
+    cfg = get_config("llama-70b")
+    cm = CostModel(cfg, hw=hw)
+    for n in (2, 4, 8):
+        b_tp = cm._comm_bytes(4096, Strategy("tp", n))
+        b_sp = cm._comm_bytes(4096, Strategy("sp", n))
+        emit(f"table2,comm_ratio_tp_over_sp_n{n},{b_tp / b_sp:.1f},"
+             f"tp={b_tp/2**20:.0f}MiB sp={b_sp/2**20:.0f}MiB per 4k tokens")
+
+
+def table5_bursty(hw=H200, emit=print):
+    """Paper Table 5 / Fig 7: bursty workload stats per parallelism."""
+    cfg = get_config("llama-70b")
+    res = _run(cfg, bursty_trace(), hw)
+    for s, r in res.items():
+        emit(f"table5,{s},ttft_p50_ms={r['ttft_p50_ms']:.0f},"
+             f"tpot_p50_ms={r['tpot_p50_ms']:.1f},"
+             f"peak_tput={r['peak_tput_tok_s']:.0f}")
+    ok = (res["shift"]["ttft_p50_ms"] <= res["tp"]["ttft_p50_ms"]
+          and res["shift"]["peak_tput_tok_s"] >= 1.2 * res["tp"]["peak_tput_tok_s"])
+    emit(f"table5,claim_shift_beats_tp,{ok},paper: lowest TTFT + higher peak tput")
+    return res
+
+
+def fig9_azure(hw=H200, emit=print):
+    cfg = get_config("llama-70b")
+    res = _run(cfg, azure_code_trace(), hw)
+    for s, r in res.items():
+        emit(f"fig9,{s},completion_p50_s={r['completion_p50_s']:.1f},"
+             f"completion_p99_s={r['completion_p99_s']:.1f},"
+             f"ttft_p50_ms={r['ttft_p50_ms']:.0f}")
+    return res
+
+
+def fig10_mooncake(hw=H200, emit=print):
+    cfg = get_config("qwen-32b")
+    res = _run(cfg, mooncake_conv_trace(), hw)
+    for s, r in res.items():
+        emit(f"fig10,{s},completion_p50_s={r['completion_p50_s']:.1f},"
+             f"ttft_p99_ms={r['ttft_p99_ms']:.0f},done={r['n_done']}")
+    return res
+
+
+def fig12_tradeoff(hw=H200, emit=print):
+    """Latency vs throughput, 4k in / 250 out (paper Fig 12)."""
+    for name in ("llama-70b", "qwen-32b"):
+        cfg = get_config(name)
+        cm = CostModel(cfg, hw=hw)
+        for s in ("dp", "tp", "sp"):
+            ttft = cm.iteration_time(4096, 0, 4096, Strategy(s, 8))
+            tpot = cm.iteration_time(0, 1, 4096, Strategy(s, 8))
+            emit(f"fig12,{name},{s},min_ttft_ms={1e3*ttft:.0f},"
+                 f"min_tpot_ms={1e3*tpot:.2f}")
+        # peak throughput under saturation
+        res = _run(cfg, uniform_trace(n=256, rate=50.0), hw)
+        for s, r in res.items():
+            emit(f"fig12,{name},{s},peak_tput={r['peak_tput_tok_s']:.0f}")
+
+
+def fig13_context(hw=H200, emit=print):
+    """TTFT/TPOT/throughput across input context sizes (paper Fig 13)."""
+    cfg = get_config("llama-70b")
+    cm = CostModel(cfg, hw=hw)
+    for ctx in (2048, 8192, 32768, 131072):
+        row = [f"fig13,ctx={ctx}"]
+        for s in ("dp", "tp", "sp"):
+            ttft = cm.iteration_time(ctx, 0, ctx, Strategy(s, 8))
+            tpot = cm.iteration_time(0, 1, ctx, Strategy(s, 8))
+            row.append(f"{s}_ttft_ms={1e3*ttft:.0f}")
+            row.append(f"{s}_tpot_ms={1e3*tpot:.2f}")
+        emit(",".join(row))
+
+
+def fig14_arrival(hw=H200, emit=print):
+    """Completion time vs arrival rate (paper Fig 14): 8k in / 250 out."""
+    cfg = get_config("llama-70b")
+    for rate in (0.25, 1.0, 4.0, 16.0):
+        res = _run(cfg, uniform_trace(n=64, rate=rate, n_in=8192, n_out=250), hw)
+        best = min(("dp", "tp", "sp"),
+                   key=lambda s: res[s]["completion_p50_s"])
+        ok = res["shift"]["completion_p50_s"] <= res[best]["completion_p50_s"] * 1.1
+        emit(f"fig14,rate={rate},shift={res['shift']['completion_p50_s']:.1f}s,"
+             f"dp={res['dp']['completion_p50_s']:.1f}s,"
+             f"tp={res['tp']['completion_p50_s']:.1f}s,"
+             f"sp={res['sp']['completion_p50_s']:.1f}s,"
+             f"shift_within_10pct_of_best={ok}")
+
+
+def fig15_breakdown(hw=H200, emit=print):
+    """Component cost breakdown (paper Fig 15)."""
+    for name in ("llama-70b", "qwen-32b"):
+        cfg = get_config(name)
+        cm = CostModel(cfg, hw=hw)
+        for s in ("tp", "sp"):
+            st = Strategy(s, 8)
+            full = cm.iteration_time(4096, 64, 8192, st)
+            comm = cm._comm_bytes(4096 + 64, st) / (hw.ici_bw * cm.ici_eff)
+            ovh = cm.overhead_s
+            emit(f"fig15,{name},{s},iter_ms={1e3*full:.1f},"
+                 f"comm_ms={1e3*comm:.2f},engine_overhead_ms={1e3*ovh:.1f}")
+
+
+def fig17_models(hw=H200, emit=print):
+    """Across paper models incl. MoE (paper Fig 17 / §4.6)."""
+    for name in ("llama-70b", "qwen-32b", "llama4-17b-16e", "qwen-30b-a3b"):
+        cfg = get_config(name)
+        res = _run(cfg, uniform_trace(n=128, rate=20.0, n_in=4096, n_out=250), hw)
+        emit(f"fig17,{name},tp_peak={res['tp']['peak_tput_tok_s']:.0f},"
+             f"sp_peak={res['sp']['peak_tput_tok_s']:.0f},"
+             f"shift_peak={res['shift']['peak_tput_tok_s']:.0f},"
+             f"shift_over_tp={res['shift']['peak_tput_tok_s']/max(res['tp']['peak_tput_tok_s'],1):.2f}x")
+
+
+ALL = (table2_complexity, table5_bursty, fig9_azure, fig10_mooncake,
+       fig12_tradeoff, fig13_context, fig14_arrival, fig15_breakdown,
+       fig17_models)

@@ -1,0 +1,92 @@
+"""§Roofline builder: reads dry-run artifacts and emits the per-(arch x
+shape x mode) three-term table (TPU v5e constants)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.terms import roofline_terms, V5E
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load_artifacts(pattern="*.json"):
+    arts = []
+    for p in sorted(glob.glob(os.path.join(ART, pattern))):
+        with open(p) as f:
+            a = json.load(f)
+        if not a.get("policy_skip"):
+            arts.append(a)
+    return arts
+
+
+def model_flops(art, shape_tokens):
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active."""
+    mult = 6 if art["shape"].startswith("train") else 2
+    return mult * art["params_active"] * shape_tokens
+
+
+def tokens_of(art):
+    from repro.configs import SHAPES_BY_NAME
+    s = SHAPES_BY_NAME[art["shape"]]
+    if s.kind == "decode":
+        return s.global_batch
+    return s.global_batch * s.seq_len
+
+
+def analytic_flops_dev(art):
+    """Per-device FLOPs from the config (XLA's cost_analysis does not
+    multiply while-loop bodies by their trip count, so scanned layers are
+    undercounted there; the HLO number is kept as a diagnostic)."""
+    from repro.configs import get_config, SHAPES_BY_NAME
+    from repro.sim.costmodel import CostModel
+    cfg = get_config(art["arch"])
+    s = SHAPES_BY_NAME[art["shape"]]
+    cm = CostModel(cfg)
+    if s.kind == "decode":
+        f = cm._flops(s.global_batch, s.seq_len)
+    elif s.kind == "prefill":
+        f = cm._flops(s.global_batch * s.seq_len, s.seq_len // 2)
+    else:  # train: fwd+bwd = 3x, +remat recompute ~ 4x forward
+        f = 4 * cm._flops(s.global_batch * s.seq_len, s.seq_len // 2)
+    # padded q heads / replicated kv burn extra FLOPs -> track separately
+    return f / art["devices"]
+
+
+def row(art):
+    n = art["devices"]
+    flops_dev = analytic_flops_dev(art)
+    hbm_dev = art.get("analytic_hbm_traffic",
+                      art["cost"]["bytes_accessed"])
+    coll_dev = art["collective_bytes_analytic"]["total"]
+    terms = roofline_terms(flops_dev, hbm_dev, coll_dev, V5E)
+    mf = model_flops(art, tokens_of(art))
+    useful = mf / max(flops_dev * n, 1)
+    return {
+        "cell": f"{art['arch']}×{art['shape']}",
+        "mesh": "pod2" if art["multi_pod"] else "pod1",
+        "mode": art["mode"],
+        **{k: terms[k] for k in ("t_compute", "t_memory", "t_collective",
+                                 "dominant", "roofline_fraction")},
+        "useful_flops_ratio": useful,
+        "fits": art["fits_hbm"],
+        "mem_gib": art["analytic_memory"]["resident"] / 2 ** 30,
+        "hlo_flops_dev": art["cost"]["flops"],
+    }
+
+
+def main(emit=print):
+    arts = load_artifacts()
+    emit("cell,mesh,mode,t_compute_s,t_memory_s,t_collective_s,dominant,"
+         "roofline_fraction,useful_flops_ratio,fits,mem_gib")
+    for a in arts:
+        r = row(a)
+        emit(f"{r['cell']},{r['mesh']},{r['mode']},{r['t_compute']:.4g},"
+             f"{r['t_memory']:.4g},{r['t_collective']:.4g},{r['dominant']},"
+             f"{r['roofline_fraction']:.3f},{r['useful_flops_ratio']:.3f},"
+             f"{r['fits']},{r['mem_gib']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

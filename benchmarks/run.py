@@ -1,0 +1,31 @@
+# One function per paper table/figure. Prints ``name,...`` CSV rows.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import paper_figures as PF
+    from benchmarks import kernels_bench
+    from benchmarks import roofline
+
+    print("# Shift Parallelism benchmark harness")
+    print("# section,key,values...  (simulator uses H200 constants for 1:1")
+    print("# comparison with the paper; dry-run roofline targets TPU v5e)")
+    for fn in PF.ALL:
+        t = time.time()
+        fn()
+        print(f"# {fn.__name__} done in {time.time()-t:.1f}s", flush=True)
+
+    kernels_bench.main()
+    try:
+        roofline.main()
+    except Exception as e:  # artifacts may not exist yet
+        print(f"# roofline table skipped: {e!r}")
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

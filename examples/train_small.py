@@ -1,0 +1,45 @@
+"""Train a reduced model for a few hundred steps with the full substrate:
+Ulysses training step, ZeRO-1 AdamW, checkpointing, synthetic pipeline.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticCorpus, TokenBatcher
+from repro.models import build_model
+from repro.training import Trainer, save_checkpoint
+from repro.training.optimizer import AdamWConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt", default="/tmp/repro_train_small")
+args = ap.parse_args()
+
+cfg = get_config("qwen2-1.5b").reduced()
+model = build_model(cfg, dtype=jnp.float32)
+tr = Trainer(model, AdamWConfig(lr=2e-3), microbatch=2)
+params = model.init_params(jax.random.key(0))
+opt = tr.init_opt_state(params)
+step = jax.jit(tr.wrapped(tr.opt_specs(jax.eval_shape(lambda: params))),
+               donate_argnums=(0, 1))
+
+data = TokenBatcher(SyntheticCorpus(cfg.vocab_size), batch=8, seq_len=64)
+t0 = time.time()
+for i in range(args.steps):
+    toks, labels = next(data)
+    params, opt, loss = step(params, opt, jnp.asarray(toks),
+                             jnp.asarray(labels))
+    if i % 25 == 0 or i == args.steps - 1:
+        print(f"step {i:4d}  loss {float(loss):.4f}  "
+              f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)")
+save_checkpoint(args.ckpt, args.steps, params, opt)
+print(f"checkpoint saved to {args.ckpt}")
+data.close()

@@ -1,0 +1,30 @@
+"""Config registry: ``get_config("qwen3-8b")`` / ``--arch qwen3-8b``."""
+from __future__ import annotations
+
+from .base import (
+    ModelConfig, MLAConfig, MoEConfig, SSMConfig, RGLRUConfig, ShapeSpec,
+    TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, ALL_SHAPES, SHAPES_BY_NAME,
+    applicable_shapes,
+)
+from .archs import ASSIGNED, PAPER_MODELS
+
+_REGISTRY = {c.name: c for c in ASSIGNED + PAPER_MODELS}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}") from None
+
+
+def list_archs(assigned_only: bool = False):
+    return [c.name for c in (ASSIGNED if assigned_only else ASSIGNED + PAPER_MODELS)]
+
+
+__all__ = [
+    "ModelConfig", "MLAConfig", "MoEConfig", "SSMConfig", "RGLRUConfig",
+    "ShapeSpec", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "ALL_SHAPES", "SHAPES_BY_NAME", "applicable_shapes",
+    "get_config", "list_archs", "ASSIGNED", "PAPER_MODELS",
+]

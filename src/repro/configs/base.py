@@ -1,0 +1,287 @@
+"""Model / shape / parallelism configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The model zoo
+(`repro.models`) consumes these; nothing else in the framework hard-codes an
+architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds used in layer_pattern / prefix / suffix.
+#   "attn"   : full-attention transformer block (attention + MLP)
+#   "local"  : sliding-window attention block (attention + MLP)
+#   "moe"    : attention + MoE-FFN block
+#   "rglru"  : RG-LRU recurrent block (Griffin / RecurrentGemma)
+#   "ssd"    : Mamba-2 SSD block (attention-free)
+#   "enc"    : encoder self-attention block (bidirectional, no cache)
+#   "dec"    : decoder block with self-attn cache + cross-attention
+# ---------------------------------------------------------------------------
+LAYER_KINDS = ("attn", "local", "moe", "rglru", "ssd", "enc", "dec")
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2/V3)."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def cache_dim(self) -> int:
+        # compressed latent + decoupled rope key, per token per layer
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0          # per-expert intermediate size
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0          # shared-expert intermediate (0 -> d_ff_expert)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001  # load-balance aux loss (training only)
+    dispatch_dtype: str = "bf16"    # "int8" halves EP all-to-all traffic
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block parameters."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64               # intra-chunk SSD block length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """RG-LRU (RecurrentGemma / Griffin) recurrent block."""
+
+    lru_width: int = 0            # 0 -> d_model
+    conv1d_width: int = 4
+    block_width_multiple: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+
+    # block layout ---------------------------------------------------------
+    layer_pattern: tuple = ("attn",)     # repeated; see LAYER_KINDS
+    prefix_layers: tuple = ()            # run before the repeated pattern
+    suffix_layers: tuple = ()            # run after the repeated pattern
+
+    # attention options ------------------------------------------------------
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    local_window: int = 0                # for "local" blocks
+    rope_theta: float = 1e4
+    logits_soft_cap: float = 0.0
+    mla: Optional[MLAConfig] = None
+
+    # ffn ---------------------------------------------------------------------
+    act: str = "silu"                    # silu (SwiGLU) | gelu (plain MLP)
+    norm: str = "rmsnorm"                # rmsnorm | layernorm
+    moe: Optional[MoEConfig] = None
+
+    # recurrent / ssm -----------------------------------------------------------
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # enc-dec / multimodal -------------------------------------------------------
+    encoder_layers: int = 0              # whisper-style encoder depth
+    encoder_seq: int = 1500              # encoder sequence length (stub frontend)
+    frontend: str = "none"               # none | vision_stub | audio_stub
+    frontend_seq: int = 0                # number of frontend embedding tokens
+
+    # heads / training ------------------------------------------------------------
+    mtp_depth: int = 0                   # DeepSeek-V3 multi-token prediction
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    max_position: int = 1 << 20
+
+    # citation tag from the assignment table
+    source: str = ""
+
+    # -------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    # derived -------------------------------------------------------------------
+    @property
+    def layer_kinds(self) -> tuple:
+        """Concrete kind of every layer, in execution order."""
+        kinds = list(self.prefix_layers)
+        body = self.num_layers - len(self.prefix_layers) - len(self.suffix_layers)
+        assert body >= 0 and (not self.layer_pattern or body % len(self.layer_pattern) == 0), (
+            f"{self.name}: {self.num_layers} layers do not tile with pattern "
+            f"{self.layer_pattern} + prefix {self.prefix_layers} + suffix {self.suffix_layers}"
+        )
+        reps = body // len(self.layer_pattern) if self.layer_pattern else 0
+        kinds += list(self.layer_pattern) * reps
+        kinds += list(self.suffix_layers)
+        return tuple(kinds)
+
+    @property
+    def pattern_repeats(self) -> int:
+        body = self.num_layers - len(self.prefix_layers) - len(self.suffix_layers)
+        return body // len(self.layer_pattern) if self.layer_pattern else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k in ("ssd", "rglru") for k in self.layer_kinds)
+
+    @property
+    def has_full_attention(self) -> bool:
+        return any(k in ("attn", "moe", "dec", "enc") for k in self.layer_kinds)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no layer attends to unbounded context (long_500k eligible)."""
+        return not self.has_full_attention
+
+    def num_params(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, dh = self.d_model, self.head_dim
+        n = self.vocab_size * d  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        for kind in self.layer_kinds:
+            if kind in ("attn", "local", "moe", "dec", "enc"):
+                if self.mla is not None:
+                    m = self.mla
+                    n += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * (
+                        m.qk_nope_head_dim + m.qk_rope_head_dim)
+                    n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    n += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                    n += self.num_heads * m.v_head_dim * d
+                else:
+                    n += d * dh * (self.num_heads + 2 * self.num_kv_heads)  # qkv
+                    n += self.num_heads * dh * d                            # o
+                if kind == "dec":  # cross attention
+                    n += d * dh * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * dh * d
+            # ffn
+            if kind == "moe":
+                mo = self.moe
+                n += mo.num_experts * 3 * d * mo.d_ff_expert
+                n += mo.num_shared_experts * 3 * d * (mo.d_ff_shared or mo.d_ff_expert)
+                n += d * mo.num_experts  # router
+            elif kind in ("attn", "local", "dec", "enc"):
+                mult = 3 if self.act in ("silu", "geglu") else 2
+                n += mult * d * self.d_ff
+            elif kind == "ssd":
+                s = self.ssm
+                di = s.d_inner(d)
+                nh = s.n_heads(d)
+                n += d * (2 * di + 2 * s.d_state + nh)  # in_proj (x, z, B, C, dt)
+                n += di * d                              # out_proj
+                n += s.d_conv * (di + 2 * s.d_state)     # conv
+            elif kind == "rglru":
+                r = self.rglru
+                w = r.lru_width or d
+                n += 2 * d * w + w * d        # in (x,y branches) + out
+                n += r.conv1d_width * w + 2 * w * (w // 8 if False else 1)  # conv + gates (approx)
+                n += 2 * w * w // 8           # block-diag gate projections (approx)
+        return int(n)
+
+    def active_params(self) -> int:
+        """Active parameters per token (MoE: only routed top-k)."""
+        if self.moe is None:
+            return self.num_params()
+        mo = self.moe
+        n_moe_layers = sum(1 for k in self.layer_kinds if k == "moe")
+        full = self.num_params()
+        all_expert = n_moe_layers * mo.num_experts * 3 * self.d_model * mo.d_ff_expert
+        active_expert = n_moe_layers * mo.top_k * 3 * self.d_model * mo.d_ff_expert
+        return int(full - all_expert + active_expert)
+
+    # reduced config for CPU smoke tests ---------------------------------------
+    def reduced(self) -> "ModelConfig":
+        pat = len(self.layer_pattern) or 1
+        nl = pat * max(1, 2 // pat)  # at least one full pattern repetition
+        nl += len(self.prefix_layers[:1]) + len(self.suffix_layers[:1])
+        kw = dict(
+            num_layers=nl,
+            prefix_layers=self.prefix_layers[:1],
+            suffix_layers=self.suffix_layers[:1],
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq=16,
+            frontend_seq=min(self.frontend_seq, 8),
+            mtp_depth=min(self.mtp_depth, 1),
+        )
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                  qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+        if self.moe is not None:
+            kw["moe"] = replace(self.moe, num_experts=4, top_k=min(self.moe.top_k, 2),
+                                d_ff_expert=32, d_ff_shared=32)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=16, chunk=8)
+        if self.rglru is not None:
+            kw["rglru"] = RGLRUConfig(lru_width=64, conv1d_width=4)
+        if self.local_window:
+            kw["local_window"] = 8
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned per architecture; see the assignment table)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def applicable_shapes(cfg: ModelConfig) -> tuple:
+    """Shapes that are well-defined for this architecture.
+
+    ``long_500k`` requires sub-quadratic context handling; it is skipped for
+    pure full-attention archs (recorded in DESIGN.md / EXPERIMENTS.md).
+    """
+    shapes = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.sub_quadratic:
+        shapes.append(LONG_500K)
+    return tuple(shapes)

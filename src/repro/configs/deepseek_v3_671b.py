@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch deepseek-v3-671b``)."""
+from .archs import DEEPSEEK_V3_671B
+
+CONFIG = DEEPSEEK_V3_671B

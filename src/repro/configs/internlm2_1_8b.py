@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch internlm2-1-8b``)."""
+from .archs import INTERNLM2_1_8B
+
+CONFIG = INTERNLM2_1_8B

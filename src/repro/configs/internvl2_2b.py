@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch internvl2-2b``)."""
+from .archs import INTERNVL2_2B
+
+CONFIG = INTERNVL2_2B

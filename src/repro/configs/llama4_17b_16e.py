@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch llama4-17b-16e``)."""
+from .archs import LLAMA4_17B_16E
+
+CONFIG = LLAMA4_17B_16E

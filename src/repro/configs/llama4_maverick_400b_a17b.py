@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch llama4-maverick-400b``)."""
+from .archs import LLAMA4_MAVERICK_400B
+
+CONFIG = LLAMA4_MAVERICK_400B

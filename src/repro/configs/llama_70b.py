@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch llama-70b``)."""
+from .archs import LLAMA_70B
+
+CONFIG = LLAMA_70B

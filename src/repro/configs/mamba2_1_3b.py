@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch mamba2-1-3b``)."""
+from .archs import MAMBA2_1_3B
+
+CONFIG = MAMBA2_1_3B

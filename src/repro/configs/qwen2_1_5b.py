@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch qwen2-1-5b``)."""
+from .archs import QWEN2_1_5B
+
+CONFIG = QWEN2_1_5B

@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch qwen2-7b``)."""
+from .archs import QWEN2_7B
+
+CONFIG = QWEN2_7B

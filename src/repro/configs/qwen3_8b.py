@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch qwen3-8b``)."""
+from .archs import QWEN3_8B
+
+CONFIG = QWEN3_8B

@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch qwen-30b-a3b``)."""
+from .archs import QWEN_30B_A3B
+
+CONFIG = QWEN_30B_A3B

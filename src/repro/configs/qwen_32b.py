@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch qwen-32b``)."""
+from .archs import QWEN_32B
+
+CONFIG = QWEN_32B

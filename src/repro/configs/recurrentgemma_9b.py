@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch recurrentgemma-9b``)."""
+from .archs import RECURRENTGEMMA_9B
+
+CONFIG = RECURRENTGEMMA_9B

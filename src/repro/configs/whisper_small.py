@@ -1,0 +1,4 @@
+"""Selectable config module (``--arch whisper-small``)."""
+from .archs import WHISPER_SMALL
+
+CONFIG = WHISPER_SMALL

@@ -1,0 +1,15 @@
+# The paper's primary contribution: Ulysses SP for inference + Shift
+# Parallelism (dynamic SP<->TP switching over an invariant KV cache).
+from .ulysses import (
+    ulysses_scatter_heads, ulysses_gather_heads, expand_kv_for_send,
+)
+from .invariance import (
+    head_order_base, head_order_shift, cache_specs_equal, verify_invariance,
+)
+from .policy import ThresholdPolicy, AdaptivePolicy
+
+__all__ = [
+    "ulysses_scatter_heads", "ulysses_gather_heads", "expand_kv_for_send",
+    "head_order_base", "head_order_shift", "cache_specs_equal",
+    "verify_invariance", "ThresholdPolicy", "AdaptivePolicy",
+]

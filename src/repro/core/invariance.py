@@ -1,0 +1,63 @@
+"""KV-cache invariance (paper §3.3.1, Fig. 6).
+
+Base config (SP=s, TP=t): after the Ulysses all-to-all, device
+(sp_rank=i, tp_rank=j) owns head sub-block ``j*s + i``.  The shift config
+(TP=s*t) must shard head dimensions in the *same* order — in JAX, both are
+expressed by sharding head dimensions over the axis tuple ``(tp, sp)``
+(tp-major).  ``verify_invariance`` proves the property *structurally*: the
+byte-range → device map of the cache sharding must be identical under both
+configurations, so switching configs shares the cache with zero data
+movement.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.parallel import Layout
+
+
+def head_order_base(sp: int, tp: int):
+    """Global model-rank (= i*tp + j) that owns each head sub-block in the
+    base config. Paper's example (sp=3, tp=2) -> [0, 2, 4, 1, 3, 5]."""
+    order = np.empty(sp * tp, dtype=int)
+    for i in range(sp):
+        for j in range(tp):
+            order[j * sp + i] = i * tp + j
+    return order.tolist()
+
+
+def head_order_shift(sp: int, tp: int):
+    """Rank order the shift config must traverse to load weight shards so
+    that rank g gets the same heads it owns in the base config — the paper's
+    SP_TP group (e.g. [[0, 2, 4, 1, 3, 5]])."""
+    return head_order_base(sp, tp)
+
+
+def cache_specs_equal(shape, sharding_a: NamedSharding, sharding_b: NamedSharding) -> bool:
+    """Structural equality of two shardings for a given global shape: every
+    device must be assigned exactly the same index ranges."""
+    ma = sharding_a.devices_indices_map(tuple(shape))
+    mb = sharding_b.devices_indices_map(tuple(shape))
+    if set(ma) != set(mb):
+        return False
+    return all(ma[d] == mb[d] for d in ma)
+
+
+def verify_invariance(cache_tree_shapes, base_specs, shift_specs, mesh) -> bool:
+    """Check every leaf of the KV-cache pytree: base vs shift sharding must
+    map identical index ranges to identical devices."""
+    shapes = jax.tree.leaves(cache_tree_shapes)
+    specs_a = jax.tree.leaves(base_specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    specs_b = jax.tree.leaves(shift_specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(shapes) == len(specs_a) == len(specs_b)
+    for sh, pa, pb in zip(shapes, specs_a, specs_b):
+        shape = sh.shape if hasattr(sh, "shape") else sh
+        a = NamedSharding(mesh, pa)
+        b = NamedSharding(mesh, pb)
+        if not cache_specs_equal(shape, a, b):
+            return False
+    return True

@@ -1,0 +1,41 @@
+"""Shift decision policies (paper Algorithm 2 + beyond-paper adaptive).
+
+``ThresholdPolicy`` is the paper's rule: batched-token count above a fixed
+threshold -> base (SP) config, below -> shift (TP) config.
+
+``AdaptivePolicy`` (beyond-paper) evaluates the same three-term roofline cost
+model used in §Roofline for both configs at the *actual* iteration
+composition and picks the cheaper one; the crossover replaces the hand-tuned
+constant and adapts to model/hardware automatically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ThresholdPolicy:
+    threshold: int = 64           # batched tokens per iteration
+
+    def use_base(self, n_tokens: int, n_prefill_tokens: int = 0) -> bool:
+        return n_tokens > self.threshold
+
+
+@dataclass
+class AdaptivePolicy:
+    """Pick argmin of predicted iteration latency (roofline cost model)."""
+
+    cost_model: object            # repro.sim.costmodel.CostModel
+    sp: int
+    tp: int
+
+    def use_base(self, n_tokens: int, n_prefill_tokens: int = 0) -> bool:
+        from repro.sim.costmodel import Strategy
+        n_decode = max(n_tokens - n_prefill_tokens, 0)
+        n = self.sp * self.tp
+        ctx = max(n_tokens, 1)
+        t_base = self.cost_model.iteration_time(
+            n_prefill_tokens, n_decode, ctx, Strategy("sp", n))
+        t_shift = self.cost_model.iteration_time(
+            n_prefill_tokens, n_decode, ctx, Strategy("tp", n))
+        return t_base <= t_shift

@@ -1,0 +1,85 @@
+"""Ulysses sequence parallelism for inference (paper §3.2, Algorithm 1).
+
+The *fused* all-to-all: the paper replaces the training-era ``3×h`` exchange
+with ``h + 2·h_kv`` head slots (GQA) and replicates KV heads inside the send
+buffer when the parallel degree exceeds ``h_kv``.  Here, several tensors with
+different head counts and inner widths (q, k, v — and for SSD blocks x, B, C,
+dt, z) are packed into **one** ``lax.all_to_all`` per direction.
+
+Conventions: tensors are ``[B, S_local, H_local_tp, C]`` before the scatter
+and ``[B, S_full, H_per_rank, C]`` after (sequence gathered, heads split).
+For decode, the "sequence" axis is the flattened token batch — the paper's
+load-balancing padding guarantees it divides SP.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import HeadPlan, Layout
+
+
+def expand_kv_for_send(kv, plan: HeadPlan, sp: int, tp_rank):
+    """Replicate KV head slots inside the a2a send buffer (paper §3.2.1).
+
+    kv: [B, S_loc, n_loc, C] — this tp-rank's kv slots
+    (``n_loc = h_kv_exp_base / tp``). Returns
+    ``[B, S_loc, sp*kv_per_rank, C]`` arranged so that after the fused a2a,
+    sp-rank ``i`` holds exactly the kv slots aligned with its q slots."""
+    send_map = jnp.asarray(plan.a2a_send_map(sp))          # [tp, sp*kv_per_rank]
+    idx = jnp.take(send_map, tp_rank, axis=0)              # tp_rank may be traced
+    return jnp.take(kv, idx, axis=2)
+
+
+def ulysses_scatter_heads(ts: Sequence[jax.Array], lay: Layout) -> List[jax.Array]:
+    """seq-sharded / heads-per-tp  ->  seq-full / head-sharded.
+
+    One fused all-to-all over the SP axis for the whole tensor list (the
+    paper's fused QKV communication). No-op when SP == 1 (shift config)."""
+    if lay.sp <= 1:
+        return list(ts)
+    n = lay.sp
+    metas, cols = [], []
+    for t in ts:
+        b, s, h, c = t.shape
+        assert h % n == 0, f"head dim {h} !% sp {n}"
+        cols.append(t.reshape(b, s, n, (h // n) * c))      # dest-major head chunks
+        metas.append((h // n, c))
+    buf = jnp.concatenate(cols, axis=-1)                   # [B, S_loc, n, K]
+    out = jax.lax.all_to_all(buf, lay.sp_axis, split_axis=2, concat_axis=1,
+                             tiled=True)                   # [B, S_loc*n, 1, K]
+    out = out[:, :, 0, :]                                  # [B, S_full, K]
+    res, off = [], 0
+    b, s_full, _ = out.shape
+    for hp, c in metas:
+        res.append(out[..., off:off + hp * c].reshape(b, s_full, hp, c))
+        off += hp * c
+    return res
+
+
+def ulysses_gather_heads(ts: Sequence[jax.Array], lay: Layout) -> List[jax.Array]:
+    """Inverse: seq-full / head-sharded -> seq-sharded / heads-per-tp."""
+    if lay.sp <= 1:
+        return list(ts)
+    n = lay.sp
+    metas, cols = [], []
+    for t in ts:
+        b, s, hp, c = t.shape
+        assert s % n == 0, f"seq {s} !% sp {n}"
+        cols.append(t.reshape(b, n, s // n, hp * c))       # dest-major seq chunks
+        metas.append((hp, c))
+    buf = jnp.concatenate(cols, axis=-1)                   # [B, n, S_loc, K]
+    out = jax.lax.all_to_all(buf, lay.sp_axis, split_axis=1, concat_axis=3,
+                             tiled=True)                   # [B, 1, S_loc, n*K]
+    out = out[:, 0]                                        # [B, S_loc, n*K]
+    b, s_loc, _ = out.shape
+    k_tot = sum(hp * c for hp, c in metas)
+    out = out.reshape(b, s_loc, n, k_tot)                  # source-rank major
+    res, off = [], 0
+    for hp, c in metas:
+        part = out[..., off:off + hp * c].reshape(b, s_loc, n * hp, c)
+        res.append(part)                                   # heads in global order
+        off += hp * c
+    return res

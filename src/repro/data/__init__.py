@@ -1,0 +1,4 @@
+from .pipeline import SyntheticCorpus, TokenBatcher
+from .tokenizer import ByteTokenizer
+
+__all__ = ["SyntheticCorpus", "TokenBatcher", "ByteTokenizer"]

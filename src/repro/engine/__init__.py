@@ -1,0 +1,4 @@
+from .request import Request
+from .engine import ShiftEngine, EngineConfig
+
+__all__ = ["Request", "ShiftEngine", "EngineConfig"]

@@ -1,0 +1,215 @@
+"""Shift-Parallelism serving engine.
+
+One deployment holds TWO compiled program sets over the SAME weights and ONE
+KV cache (paper §3.3): the *base* config (SP,TP — TTFT/throughput-optimal)
+and the *shift* config (pure TP — TPOT-optimal). Each iteration the
+controller counts batched tokens and picks the config (Algorithm 2); the
+cache shardings are structurally identical, so switching moves zero bytes.
+
+Scheduling is continuous batching with chunked prefill (Sarathi-style; the
+paper runs its experiments with this combination): each iteration is either
+a prefill chunk batch or a decode batch over the active slots. Shapes are
+bucketed so each (config, shape) pair compiles once — the JAX analogue of
+the paper's per-shape CUDA-graph capture."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import ThresholdPolicy
+from repro.models.model import Model
+from .request import Request
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8               # concurrent sequences (global batch)
+    s_max: int = 256                 # cache length
+    prefill_chunk: int = 64
+    threshold: int = 32              # shift threshold (batched tokens)
+    eos_id: int = -1                 # -1: never stop early
+
+
+class ShiftEngine:
+    def __init__(self, model_base: Model, model_shift: Model,
+                 params_base, params_shift, cfg: EngineConfig,
+                 policy=None, now=time.monotonic):
+        assert model_base.cfg is model_shift.cfg
+        self.mcfg = model_base.cfg
+        self.base = model_base
+        self.shift = model_shift
+        self.p_base = params_base
+        self.p_shift = params_shift
+        self.cfg = cfg
+        self.policy = policy or ThresholdPolicy(cfg.threshold)
+        self.now = now
+
+        self.cache = model_base.init_cache(cfg.max_slots, cfg.s_max)
+        self.lens = np.zeros((cfg.max_slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * cfg.max_slots
+        self.queue: List[Request] = []
+        self.step_count = 0
+        self.config_trace: List[str] = []
+        self.step_times: List[float] = []
+
+        self._prefill = {"base": jax.jit(model_base.prefill_fn(), donate_argnums=(1,)),
+                         "shift": jax.jit(model_shift.prefill_fn(), donate_argnums=(1,))}
+        self._decode = {"base": jax.jit(model_base.decode_fn(True), donate_argnums=(1,)),
+                        "shift": jax.jit(model_shift.decode_fn(True), donate_argnums=(1,))}
+
+    # ---------------------------------------------------------------- admin
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def _assign_slots(self):
+        for req in list(self.queue):
+            if req.slot is not None:
+                continue
+            for s, owner in enumerate(self.slot_req):
+                if owner is None:
+                    req.slot = s
+                    self.slot_req[s] = req
+                    self.lens[s] = 0
+                    break
+
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self.slot_req if r is not None]
+
+    # ---------------------------------------------------------------- steps
+    def _choose(self, n_tokens: int, n_prefill: int) -> str:
+        use_base = self.policy.use_base(n_tokens, n_prefill)
+        name = "base" if use_base else "shift"
+        self.config_trace.append(name)
+        return name
+
+    def _run_prefill(self):
+        """One chunked-prefill iteration over slots that still need prompt."""
+        C = self.cfg.prefill_chunk
+        todo = [r for r in self.active if not self._prefill_done(r)]
+        if not todo:
+            return False
+        toks = np.zeros((self.cfg.max_slots, C), np.int32)
+        offs = np.full((self.cfg.max_slots,), max(self.cfg.s_max - C, 0),
+                       np.int32)                      # dummy rows -> scratch tail
+        rows = []
+        # MLA latent caches assume a uniform offset across the chunk batch
+        uniform = self.mcfg.mla is not None
+        base_off = None
+        for r in todo:
+            off = r.prefilled
+            if uniform and base_off is not None and off != base_off:
+                continue
+            # the final prompt token is fed through the decode path instead
+            chunk = r.prompt[off:min(off + C, len(r.prompt) - 1)]
+            if not chunk:
+                continue
+            toks[r.slot, :len(chunk)] = chunk
+            offs[r.slot] = off
+            rows.append((r, len(chunk)))
+            base_off = off
+        if not rows:
+            return False
+        n_tok = sum(n for _, n in rows)
+        mode = self._choose(n_tok, n_tok)
+        params = self.p_base if mode == "base" else self.p_shift
+        extras = self._extras()
+        _, self.cache = self._prefill[mode](
+            params, self.cache, jnp.asarray(toks), jnp.asarray(offs), *extras)
+        for r, n in rows:
+            r.prefilled += n
+            self.lens[r.slot] = r.prefilled
+        return True
+
+    def _prefill_done(self, r) -> bool:
+        return r.prefilled >= len(r.prompt) - 1
+
+    def _run_decode(self):
+        ready = [r for r in self.active
+                 if self._prefill_done(r) and not r.done]
+        if not ready:
+            return False
+        mode = self._choose(len(ready), 0)
+        params = self.p_base if mode == "base" else self.p_shift
+        toks = np.zeros((self.cfg.max_slots,), np.int32)
+        lens = np.zeros((self.cfg.max_slots,), np.int32)
+        for r in ready:
+            toks[r.slot] = (r.generated[-1] if r.generated else r.prompt[-1])
+            lens[r.slot] = r.pos               # write position of this token
+        nxt, self.cache = self._decode[mode](
+            params, self.cache, jnp.asarray(toks), jnp.asarray(lens))
+        nxt = np.asarray(nxt)
+        t = self.now()
+        for r in ready:
+            r.generated.append(int(nxt[r.slot]))
+            if r.first_token_time is None:
+                r.first_token_time = t
+            self.lens[r.slot] = r.pos
+            if r.done or (self.cfg.eos_id >= 0
+                          and r.generated[-1] == self.cfg.eos_id):
+                r.finish_time = t
+                self.slot_req[r.slot] = None
+                self.queue = [q for q in self.queue if q.rid != r.rid]
+        return True
+
+    def _extras(self):
+        ex = []
+        if self.mcfg.frontend == "vision_stub":
+            ex.append(jnp.zeros((self.cfg.max_slots, self.mcfg.frontend_seq,
+                                 self.mcfg.d_model), self.base.dtype))
+        if self.mcfg.encoder_layers:
+            ex.append(jnp.zeros((self.cfg.max_slots, self.mcfg.encoder_seq,
+                                 self.mcfg.d_model), self.base.dtype))
+        return ex
+
+    def step(self) -> bool:
+        """One engine iteration. Returns False when idle."""
+        t0 = self.now()
+        self._assign_slots()
+        # prefill-priority with chunking; decode otherwise (chunked prefill
+        # interleaves at iteration granularity)
+        progressed = self._run_prefill() or self._run_decode()
+        self.step_count += 1
+        self.step_times.append(self.now() - t0)
+        return progressed
+
+    def run_until_idle(self, max_steps: int = 10000):
+        for _ in range(max_steps):
+            if not self.step():
+                if not self.queue and not self.active:
+                    break
+        return self
+
+    # ------------------------------------------------------- fault tolerance
+    def snapshot(self):
+        """Engine state for checkpoint/restart (weights are static)."""
+        return {
+            "cache": jax.tree.map(np.asarray, self.cache),
+            "lens": self.lens.copy(),
+            "requests": [
+                {"rid": r.rid, "prompt": list(r.prompt), "slot": r.slot,
+                 "prefilled": r.prefilled, "generated": list(r.generated),
+                 "max_new_tokens": r.max_new_tokens}
+                for r in self.queue + [x for x in self.slot_req
+                                       if x is not None and x not in self.queue]],
+        }
+
+    def restore(self, snap):
+        self.cache = jax.tree.map(jnp.asarray, snap["cache"])
+        self.lens = snap["lens"].copy()
+        self.slot_req = [None] * self.cfg.max_slots
+        self.queue = []
+        for rd in snap["requests"]:
+            r = Request(rd["rid"], rd["prompt"], rd["max_new_tokens"])
+            r.slot = rd["slot"]
+            r.prefilled = rd["prefilled"]
+            r.generated = list(rd["generated"])
+            if r.slot is not None:
+                self.slot_req[r.slot] = r
+            self.queue.append(r)
+        return self

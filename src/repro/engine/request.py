@@ -1,0 +1,32 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    arrival: float = 0.0
+
+    # engine state -----------------------------------------------------------
+    slot: Optional[int] = None
+    prefilled: int = 0                # prompt tokens already in the cache
+    generated: List[int] = field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def pos(self) -> int:
+        return self.prefilled + len(self.generated)

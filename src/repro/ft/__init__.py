@@ -1,0 +1,4 @@
+from .watchdog import StragglerWatchdog
+from .elastic import reshard_params, rebuild_layout
+
+__all__ = ["StragglerWatchdog", "reshard_params", "rebuild_layout"]

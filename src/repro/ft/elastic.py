@@ -1,0 +1,59 @@
+"""Elastic rescaling: rebuild a deployment under a different (dp, sp, tp)
+factorization or device count from the same logical weights.
+
+Checkpoints store unsharded logical arrays (``repro.training.checkpoint``),
+so recovery after a node failure is: build the new mesh from surviving
+hosts -> recreate layouts -> ``device_put`` with the new shardings. For
+in-memory rescale (no checkpoint round-trip), ``reshard_params`` re-places
+live arrays directly; XLA moves only the bytes that change owners."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.parallel import Layout
+
+
+def rebuild_layout(mesh: Mesh, sp: int, tp: int, multi_pod=False) -> Layout:
+    names = list(mesh.shape)
+    assert "sp" in names and "tp" in names
+    dp = tuple(n for n in names if n not in ("sp", "tp"))
+    return Layout.from_mesh(mesh, dp=dp, sp=("sp",), tp=("tp",))
+
+
+def reshard_params(params, old_model: Model, new_model: Model):
+    """Re-place logical weights under the new model's layout. Weight shapes
+    may differ between layouts only in materialized KV replication — those
+    leaves are re-derived from the canonical init instead of copied."""
+    new_abs = new_model.abstract_params()
+    new_specs = new_model.param_specs()
+    fresh = None
+
+    def move(path, old_leaf, new_leaf, spec):
+        nonlocal fresh
+        sharding = (NamedSharding(new_model.mesh, spec)
+                    if new_model.mesh is not None else None)
+        if old_leaf.shape == new_leaf.shape:
+            arr = old_leaf
+        else:
+            # replication-expanded leaf (wk/wv): re-materialize from init
+            if fresh is None:
+                fresh = new_model.init_params(jax.random.key(0))
+            arr = _lookup(fresh, path)
+        return jax.device_put(arr, sharding) if sharding is not None else arr
+
+
+    def _lookup(tree, path):
+        for p in path:
+            key = getattr(p, "key", getattr(p, "idx", None))
+            tree = tree[key]
+        return tree
+
+    flat_old = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_new = jax.tree_util.tree_flatten_with_path(new_abs)[0]
+    flat_spec = jax.tree.leaves(new_specs,
+                                is_leaf=lambda x: isinstance(x, P))
+    vals = [move(po, o, n, s) for (po, o), (_, n), s in
+            zip(flat_old, flat_new, flat_spec)]
+    return jax.tree.unflatten(jax.tree.structure(new_abs), vals)

@@ -1,0 +1,2 @@
+from .ops import flash_attention, decode_attention, ssd_chunk, rmsnorm
+__all__ = ["flash_attention", "decode_attention", "ssd_chunk", "rmsnorm"]

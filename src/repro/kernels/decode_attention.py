@@ -1,0 +1,89 @@
+"""GQA decode attention Pallas TPU kernel.
+
+Decode is HBM-bandwidth-bound: the kernel streams the KV cache once through
+VMEM while the whole query group of a kv head ([g, D], g = Hq/Hkv) stays
+resident — each cache byte is read exactly once per group rather than once
+per query head. Per-sequence valid lengths mask the tail tiles.
+
+Grid: (B*Hkv, S_max/BK). q rows per instance: the kv head's query group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bk, scale):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # [g, D]
+    k = k_ref[0]                                    # [bk, D]
+    v = v_ref[0]
+    valid_len = len_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k, v, lens, *, bk=512, interpret=False):
+    """q: [B, Hkv, g, D]; k/v: [B, Hkv, S, D]; lens: [B] (valid kv length,
+    inclusive of the newly written token). Returns [B, Hkv, g, D]."""
+    B, Hkv, g, D = q.shape
+    S = k.shape[2]
+    bk = min(bk, S)
+    assert S % bk == 0
+    N = B * Hkv
+    qf = q.reshape(N, g, D)
+    kf = k.reshape(N, S, D)
+    vf = v.reshape(N, S, D)
+    lens_n = jnp.repeat(lens, Hkv).astype(jnp.int32)
+    kern = functools.partial(_kernel, bk=bk, scale=D ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=(N, S // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda n, ik: (n,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, D), lambda n, ik: (n, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda n, ik: (n, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda n, ik: (n, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, D), lambda n, ik: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens_n, qf, kf, vf)
+    return out.reshape(B, Hkv, g, D)

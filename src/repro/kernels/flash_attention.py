@@ -1,0 +1,90 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+TPU-native adaptation of the attention hot spot: q tiles [BQ, D] sit in
+VMEM; K/V stream through VMEM in [BK, D] tiles along the minor grid axis;
+the online-softmax state (m, l, acc) lives in fp32 VMEM scratch that
+persists across the streaming axis. MXU alignment: BQ = BK = 128 and D a
+multiple of 128 wherever the models allow (head_dim 128/192/256).
+
+Grid: (B*Hq, Sq/BQ, Skv/BK) — last axis streams K/V. GQA is handled in the
+index map (q head n reads kv head n // group), so no head replication is
+materialized in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq, bk, causal, scale):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                    # [bq, D]
+    k = k_ref[0]                                    # [bk, D]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, bq=128, bk=128,
+                           interpret=False):
+    """q: [N, Sq, D] (N = B*Hq); k/v: [Nkv, Skv, D] with N % Nkv == 0.
+    Returns [N, Sq, D]. Shapes must tile (pad in ops.py)."""
+    N, Sq, D = q.shape
+    Nkv, Skv = k.shape[0], k.shape[1]
+    g = N // Nkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, causal=causal,
+                             scale=D ** -0.5)
+    return pl.pallas_call(
+        kern,
+        grid=(N, Sq // bq, Skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda n, iq, ik: (n, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda n, iq, ik: (n // g, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda n, iq, ik: (n // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda n, iq, ik: (n, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,69 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode
+against the same BlockSpec program; on TPU they compile natively. Padding to
+tile boundaries happens here so kernel bodies stay alignment-exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel
+from .decode_attention import decode_attention_kernel
+from .ssd_scan import ssd_chunk_kernel
+from .rmsnorm import rmsnorm_kernel
+
+
+def _on_cpu():
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128):
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D]."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, bq=min(bq, Sq),
+                                 bk=min(bk, Skv), interpret=_on_cpu())
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k, v, lens, *, bk=512):
+    """q: [B, 1, Hq, D]; k/v: [B, S, Hkv, D]; lens: [B] -> [B, 1, Hq, D]."""
+    B, _, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qf = q.reshape(B, Hkv, g, D)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    out = decode_attention_kernel(qf, kf, vf, lens, bk=min(bk, S),
+                                  interpret=_on_cpu())
+    return out.reshape(B, 1, Hq, D)
+
+
+@jax.jit
+def ssd_chunk(x, b, c, dt, cum):
+    return ssd_chunk_kernel(x, b, c, dt, cum, interpret=_on_cpu())
+
+
+@partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, scale, eps=1e-6):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    n = x2.shape[0]
+    br = 256
+    pad = (-n) % br if n > br else 0
+    if n < br:
+        br = n
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rmsnorm_kernel(x2, scale, eps=eps, block_rows=br,
+                         interpret=_on_cpu())
+    return out[:n].reshape(shape)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the numerics ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention_math import attend as _attend
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: [N, Sq, D]; k/v: [Nkv, Skv, D]. Oracle via the model's chunked
+    online-softmax attention."""
+    N, Sq, D = q.shape
+    Nkv, Skv = k.shape[0], k.shape[1]
+    qb = q.reshape(1, N, Sq, D).transpose(0, 2, 1, 3)   # [1, Sq, N, D]
+    kb = k.reshape(1, Nkv, Skv, D).transpose(0, 2, 1, 3)
+    vb = kb * 0 + v.reshape(1, Nkv, Skv, D).transpose(0, 2, 1, 3)
+    qpos = jnp.arange(Sq)[None, :]
+    kpos = jnp.arange(Skv)
+    out = _attend(qb, kb, vb, qpos, kpos, causal=causal)
+    return out.transpose(0, 2, 1, 3).reshape(N, Sq, D)
+
+
+def decode_attention_ref(q, k, v, lens):
+    """q: [B, Hkv, g, D]; k/v: [B, Hkv, S, D]; lens: [B]."""
+    B, Hkv, g, D = q.shape
+    S = k.shape[2]
+    qb = q.reshape(B, 1, Hkv * g, D)                    # [B, Sq=1, H, D]
+    kb = k.transpose(0, 2, 1, 3)                        # [B, S, Hkv, D]
+    vb = v.transpose(0, 2, 1, 3)
+    qpos = (lens - 1)[:, None]
+    out = _attend(qb, kb, vb, qpos, jnp.arange(S), causal=False, kv_len=lens)
+    return out.reshape(B, Hkv, g, D)
+
+
+def ssd_chunk_ref(x, b, c, dt, cum):
+    """Oracle for the intra-chunk SSD kernel. Shapes as in ssd_chunk_kernel."""
+    xf, bf, cf = (t.astype(jnp.float32) for t in (x, b, c))
+    dtf = dt[..., 0].astype(jnp.float32)
+    cumf = cum[..., 0].astype(jnp.float32)
+    L = x.shape[1]
+    cb = jnp.einsum("ntd,nsd->nts", cf, bf)
+    dec = cumf[:, :, None] - cumf[:, None, :]
+    tri = jnp.arange(L)[:, None] >= jnp.arange(L)[None, :]
+    sc = cb * jnp.exp(jnp.where(tri[None], dec, -1e30)) * dtf[:, None, :]
+    y = jnp.einsum("nts,nsh->nth", sc, xf)
+    w = jnp.exp(cumf[:, -1:] - cumf) * dtf
+    st = jnp.einsum("nth,ntd->nhd", xf * w[..., None], bf)
+    return y, st, jnp.exp(cumf)[..., None]
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale

@@ -1,0 +1,30 @@
+"""Fused RMSNorm Pallas TPU kernel (row-tiled, fp32 accumulation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)).astype(o_ref.dtype) * s_ref[...]
+
+
+def rmsnorm_kernel(x, scale, *, eps=1e-6, block_rows=256, interpret=False):
+    """x: [N, D]; scale: [D]."""
+    N, D = x.shape
+    br = min(block_rows, N)
+    assert N % br == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(N // br,),
+        in_specs=[pl.BlockSpec((br, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
+        interpret=interpret,
+    )(x, scale)

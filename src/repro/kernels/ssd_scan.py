@@ -1,0 +1,77 @@
+"""Mamba-2 SSD intra-chunk Pallas TPU kernel.
+
+The SSD chunk decomposition splits work into (a) a parallel quadratic
+intra-chunk part and (b) a tiny sequential inter-chunk state recurrence.
+This kernel computes (a) plus each chunk's state *contribution* for all
+chunks in parallel — the MXU-heavy portion; (b) stays a lax.scan over
+chunk summaries in fp32 (negligible FLOPs).
+
+Per grid cell (one head, one chunk) in VMEM:
+  x [L, hd], b/c [L, ds], cumulative log-decay cum [L, 1] ->
+  y_intra [L, hd] = ((c bᵀ) ⊙ decay ⊙ dtₛ, lower-tri) x
+  state contribution  S_c [hd, ds] = (x ⊙ w)ᵀ b,  w = exp(cum_L - cum) dt
+  decay_in [L, 1] = exp(cum)  (for applying the carried state outside)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, st_ref, dec_ref):
+    x = x_ref[0].astype(jnp.float32)                  # [L, hd]
+    b = b_ref[0].astype(jnp.float32)                  # [L, ds]
+    c = c_ref[0].astype(jnp.float32)
+    dt = dt_ref[0].astype(jnp.float32)                # [L, 1]
+    cum = cum_ref[0].astype(jnp.float32)              # [L, 1]
+    L = x.shape[0]
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    dec = cum - cum.T                                 # cum_t - cum_s
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    sc = cb * jnp.exp(jnp.where(tri, dec, -1e30)) * dt.T
+    y_ref[0] = jax.lax.dot_general(
+        sc, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    w = jnp.exp(cum[-1:] - cum) * dt                  # [L, 1]
+    st_ref[0] = jax.lax.dot_general(
+        x * w, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(st_ref.dtype)
+    dec_ref[0] = jnp.exp(cum).astype(dec_ref.dtype)
+
+
+def ssd_chunk_kernel(x, b, c, dt, cum, *, interpret=False):
+    """x: [N, L, hd] (N = B*H*nchunks); b/c: [N, L, ds]; dt/cum: [N, L, 1].
+    Returns (y_intra [N, L, hd], state_contrib [N, hd, ds],
+             decay_in [N, L, 1])."""
+    N, L, hd = x.shape
+    ds = b.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, L, hd), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, L, ds), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, L, ds), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda n: (n, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, hd), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, hd, ds), lambda n: (n, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda n: (n, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, L, hd), jnp.float32),
+            jax.ShapeDtypeStruct((N, hd, ds), jnp.float32),
+            jax.ShapeDtypeStruct((N, L, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, b, c, dt, cum)

@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run builds the production mesh out
+# of 512 placeholder host devices. Only this entry point does so.
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs, applicable_shapes, SHAPES_BY_NAME
+from repro.models.model import Model
+from repro.parallel import Layout
+from repro.core.invariance import verify_invariance
+from repro.launch.mesh import make_production_mesh, make_shift_mesh, layout_axes
+from repro.training import Trainer
+from repro.training.optimizer import AdamWConfig
+from repro.roofline import (collective_bytes_hlo, comm_bytes_analytic,
+                            bytes_of_tree, activation_estimate, hbm_traffic)
+
+HBM_BYTES = 16 * 2 ** 30          # TPU v5e
+
+
+def mem_stats(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = int(getattr(ma, k, 0))
+    out["per_device_total"] = (out["argument_size_in_bytes"]
+                               + out["temp_size_in_bytes"]
+                               + out["output_size_in_bytes"]
+                               - out["alias_size_in_bytes"])
+    return out
+
+
+def cost_stats(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+def build_layout(mesh, mode: str, multi_pod: bool, *, sp=8, tp=2,
+                 dp_batch_ok=True):
+    dp, sp_ax, tp_ax = layout_axes(multi_pod)
+    if not dp_batch_ok:
+        dp = ()
+    lay = Layout.from_mesh(mesh, dp=dp, sp=sp_ax, tp=tp_ax)
+    return lay.to_shift() if mode == "shift" else lay
+
+
+def abstract_inputs(model: Model, shape, mode: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    cfg, lay = model.cfg, model.lay
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    extras = []
+    if cfg.frontend == "vision_stub":
+        extras.append(sds((B, cfg.frontend_seq, cfg.d_model), model.dtype))
+    if cfg.encoder_layers:
+        extras.append(sds((B, cfg.encoder_seq, model.cfg.d_model), model.dtype))
+
+    if shape.kind == "train":
+        return (sds((B, S), i32), sds((B, S), i32), *extras), None
+    cache = model.abstract_cache(B, S)
+    if shape.kind == "prefill":
+        return (cache, sds((B, S), i32), sds((B,), i32), *extras), cache
+    # decode: one new token against a cache of S
+    return (cache, sds((B,), i32), sds((B,), i32)), cache
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
+               sp=8, tp=2, moe_int8=False, cap_factor=None):
+    """Returns the artifact dict for one (arch x shape x mesh x mode)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if cfg.moe is not None and (moe_int8 or cap_factor):
+        kw = {}
+        if moe_int8:
+            kw["dispatch_dtype"] = "int8"
+        if cap_factor:
+            kw["capacity_factor"] = cap_factor
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **kw))
+    shape = SHAPES_BY_NAME[shape_name]
+    t0 = time.time()
+
+    mesh = make_shift_mesh(sp, tp, multi_pod=multi_pod)
+    dp_full, sp_ax, tp_ax = layout_axes(multi_pod)
+    B = shape.global_batch
+    dp_axes = dp_full
+    if shape.kind == "decode":
+        # decode tokens shard over dp×sp (base) / dp (shift); pick the
+        # largest dp prefix the batch divides (pod-replicated engines when
+        # the batch is too small for the full fleet). The paper pads decode
+        # batches to a multiple of SP; a batch smaller than SP never runs
+        # in the base config at all (Algorithm 2 routes it to shift).
+        sp_deg = sp if mode == "base" else 1
+        if mode == "base" and B % sp != 0:
+            return {"arch": arch, "shape": shape_name, "mode": mode,
+                    "multi_pod": multi_pod, "policy_skip": True,
+                    "reason": f"decode batch {B} < SP {sp}: Algorithm 2 "
+                              f"always selects the shift config"}
+        sizes = {"pod": 2, "data": 16}
+        for cand in (dp_full, dp_full[1:], ()):
+            deg = 1
+            for a in cand:
+                deg *= sizes[a]
+            if B % (deg * sp_deg) == 0 and B >= deg * sp_deg:
+                dp_axes = cand
+                break
+        else:
+            dp_axes = ()
+    elif shape.kind == "prefill" and B < 16 * (2 if multi_pod else 1):
+        dp_axes = dp_full[1:] if (multi_pod and B >= 16) else dp_axes
+    lay = Layout.from_mesh(mesh, dp=dp_axes, sp=sp_ax, tp=tp_ax)
+    if mode == "shift":
+        lay = lay.to_shift()
+    model = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.bfloat16)
+
+    params = model.abstract_params()
+    pspecs = model.param_specs()
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        tr = Trainer(model, AdamWConfig(state_dtype=jnp.bfloat16),
+                     microbatch=4, remat=True)
+        opt = jax.eval_shape(tr.init_opt_state, params)
+        ospec = tr.opt_specs(params)
+        args, _ = abstract_inputs(model, shape, mode)
+        step = tr.wrapped(ospec)
+        lowered = jax.jit(step).lower(params, opt, *args)
+    elif shape.kind == "prefill":
+        args, cache = abstract_inputs(model, shape, mode)
+        fn = model.prefill_fn()
+        lowered = jax.jit(fn, donate_argnums=(1,)).lower(params, *args)
+    else:
+        args, cache = abstract_inputs(model, shape, mode)
+        fn = model.decode_fn(sample=True)
+        lowered = jax.jit(fn, donate_argnums=(1,)).lower(params, *args)
+
+    compiled = lowered.compile()
+    mem = mem_stats(compiled)
+    cost = cost_stats(compiled)
+    cbytes, per_kind, n_coll = collective_bytes_hlo(compiled.as_text())
+    comm = comm_bytes_analytic(cfg, lay, shape, mode,
+                               pod_scale=model.pod_scale)
+    # analytic per-device residency (exact shard sizes) + traffic model;
+    # the CPU backend's memory_analysis inflates temps via bf16->f32 GEMM
+    # promotion that does not exist on TPU (see DESIGN.md).
+    p_dev = bytes_of_tree(params, pspecs, mesh)
+    c_dev = 0
+    if shape.kind != "train":
+        c_dev = bytes_of_tree(abstract_inputs(model, shape, mode)[1],
+                              model.cache_specs(), mesh)
+    o_dev = 0
+    if shape.kind == "train":
+        o_dev = bytes_of_tree(opt, ospec, mesh)
+    a_dev = activation_estimate(cfg, lay, shape)
+    resident = p_dev + c_dev + o_dev + a_dev
+    if mode == "shift":
+        resident += p_dev  # separate-models weight copy (paper eq. 1)
+    traffic = hbm_traffic(cfg, lay, shape, p_dev, c_dev)
+    print(compiled.memory_analysis())
+    print({k: v for k, v in cost.items()})
+
+    n_dev = mesh.devices.size
+    art = {
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "multi_pod": multi_pod, "mesh": list(mesh.shape.values()),
+        "sp": lay.sp, "tp": lay.tp, "devices": int(n_dev),
+        "memory": mem, "cost": cost,
+        "collective_bytes_hlo": int(cbytes), "collective_per_kind": per_kind,
+        "collective_ops": int(n_coll),
+        "collective_bytes_analytic": {k: float(v) for k, v in comm.items()},
+        "analytic_memory": {"params": int(p_dev), "cache": int(c_dev),
+                            "opt": int(o_dev), "act": int(a_dev),
+                            "resident": int(resident)},
+        "analytic_hbm_traffic": float(traffic),
+        "fits_hbm": bool(resident <= HBM_BYTES),
+        "fits_hbm_cpu_backend": bool(mem["per_device_total"] <= HBM_BYTES),
+        "compile_seconds": round(time.time() - t0, 1),
+        "params_total": cfg.num_params(),
+        "params_active": cfg.active_params(),
+    }
+    return art
+
+
+def check_invariance(arch: str, multi_pod: bool, sp=8, tp=2) -> bool:
+    """Structural KV-cache invariance: base vs shift shardings must map
+    identical index ranges to identical devices."""
+    cfg = get_config(arch)
+    mesh = make_shift_mesh(sp, tp, multi_pod=multi_pod)
+    lay_b = build_layout(mesh, "base", multi_pod, sp=sp, tp=tp)
+    lay_s = lay_b.to_shift()
+    mb = Model(cfg=cfg, lay=lay_b, mesh=mesh)
+    ms = Model(cfg=cfg, lay=lay_s, mesh=mesh)
+    shapes = mb.abstract_cache(128, 1024)
+    sb = jax.tree.leaves(mb.cache_specs(), is_leaf=lambda x: isinstance(x, P))
+    ss = jax.tree.leaves(ms.cache_specs(), is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(shapes)
+    assert len(leaves) == len(sb) == len(ss)
+    return verify_invariance(leaves, sb, ss, mesh)
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mode", default="base", choices=["base", "shift", "both"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sp", type=int, default=8)
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--moe-int8", action="store_true")
+    ap.add_argument("--cap-factor", type=float, default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_archs(assigned_only=True) if args.all else [args.arch]
+    pods = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    modes = ["base", "shift"] if args.mode == "both" else [args.mode]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([SHAPES_BY_NAME[args.shape]] if args.shape
+                  else applicable_shapes(cfg))
+        inv = check_invariance(arch, multi_pod=False, sp=args.sp, tp=args.tp)
+        print(f"[invariance] {arch}: base/shift cache shardings identical = {inv}")
+        assert inv, f"KV cache invariance violated for {arch}"
+        for shape in shapes:
+            for mp in pods:
+                for mode in modes:
+                    tag = f"{arch}__{shape.name}__{'pod2' if mp else 'pod1'}__{mode}"
+                    if args.tag:
+                        tag += f"__{args.tag}"
+                    path = os.path.join(args.out, tag + ".json")
+                    if args.skip_existing and os.path.exists(path):
+                        print(f"[skip] {tag}")
+                        continue
+                    print(f"[lower+compile] {tag}", flush=True)
+                    try:
+                        art = lower_cell(arch, shape.name, mp, mode,
+                                         sp=args.sp, tp=args.tp,
+                                         moe_int8=args.moe_int8,
+                                         cap_factor=args.cap_factor)
+                        art["invariance_ok"] = inv
+                        with open(path, "w") as f:
+                            json.dump(art, f, indent=1)
+                        if art.get("policy_skip"):
+                            print(f"[policy-skip] {tag}: {art['reason']}",
+                                  flush=True)
+                            continue
+                        print(f"[ok] {tag}: fits={art['fits_hbm']} "
+                              f"mem={art['analytic_memory']['resident']/2**30:.2f}GiB "
+                              f"flops={art['cost']['flops']:.3e} "
+                              f"coll_hlo={art['collective_bytes_hlo']/2**20:.1f}MiB "
+                              f"coll_ana={art['collective_bytes_analytic']['total']/2**20:.1f}MiB "
+                              f"({art['compile_seconds']}s)", flush=True)
+                    except Exception as e:
+                        failures.append((tag, repr(e)[:300]))
+                        print(f"[FAIL] {tag}: {e!r}", flush=True)
+    if failures:
+        print("\nFAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        sys.exit(1)
+    print("\nall dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

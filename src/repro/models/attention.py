@@ -1,0 +1,306 @@
+"""GQA attention under combined (SP, TP) — the attention half of the paper's
+Algorithm 1, generalized for inference (GQA, KV replication, cache).
+
+Runs inside ``shard_map``. The same code serves:
+  base config : SP>1 — fused Ulysses a2a into head parallelism (lines 4-6)
+  shift config: SP=1, TP=G — plain head parallelism over the joint group
+  smoke       : all axes empty, single device
+
+The KV cache local view is ``[B, S_max, kv_per_rank, Dh]``; its global
+sharding ``P(dp, None, model_axes, None)`` is identical in base and shift
+configs (KV-cache invariance)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import HeadPlan, Layout, plan_heads, psum_if, joint_axis_index
+from repro.core.ulysses import (
+    ulysses_scatter_heads, ulysses_gather_heads, expand_kv_for_send)
+from .attention_math import attend, attend_partial, finish_partial
+from .layers import dense_init, rmsnorm, apply_rope
+
+
+def get_plan(cfg, lay: Layout) -> HeadPlan:
+    return plan_heads(cfg.num_heads, cfg.num_kv_heads, max(lay.G, 1), max(lay.tp, 1))
+
+
+def kv_exp_slots(plan: HeadPlan, lay: Layout) -> int:
+    """KV head slots materialized in this layout's weights."""
+    return max(plan.h_kv_pad, max(lay.tp, 1))
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def _place(canon, slot_map):
+    """Scatter canonical per-head arrays into padded slot layout (axis=-2
+    holds heads). Pad slots (orig == -1) become zeros. Deterministic in the
+    canonical values, so every layout holds the same logical weights."""
+    sm = jnp.asarray([max(s, 0) for s in slot_map])
+    ok = jnp.asarray([1.0 if s >= 0 else 0.0 for s in slot_map], canon.dtype)
+    out = jnp.take(canon, sm, axis=-2) * ok[:, None]
+    return out
+
+
+def attn_init(key, cfg, lay: Layout, dtype, prefix=""):
+    plan = get_plan(cfg, lay)
+    d, dh = cfg.d_model, cfg.head_dim
+    kexp = kv_exp_slots(plan, lay)
+    r = kexp // plan.h_kv_pad
+    ks = jax.random.split(key, 8)
+    # canonical per-real-head weights, placed into padded slots and
+    # replicated into expanded kv slots -> all layouts share logical weights.
+    wq_c = dense_init(ks[0], (d, cfg.num_heads, dh), dtype)
+    wk_c = _place(dense_init(ks[1], (d, cfg.num_kv_heads, dh), dtype),
+                  plan.kv_slot_to_orig)
+    wv_c = _place(dense_init(ks[2], (d, cfg.num_kv_heads, dh), dtype),
+                  plan.kv_slot_to_orig)
+    wo_c = dense_init(ks[3], (cfg.num_heads, dh * d), dtype)
+    p = {
+        "wq": _place(wq_c, plan.q_slot_to_orig).reshape(d, plan.h_q_pad * dh),
+        "wk": jnp.repeat(wk_c, r, axis=1).reshape(d, kexp * dh),
+        "wv": jnp.repeat(wv_c, r, axis=1).reshape(d, kexp * dh),
+        "wo": _place(wo_c[None], plan.q_slot_to_orig)[0].reshape(
+            plan.h_q_pad * dh, d),
+    }
+    if cfg.qkv_bias:
+        bq_c = dense_init(ks[4], (cfg.num_heads, dh), dtype, scale=0.02)
+        bk_c = _place(dense_init(ks[5], (cfg.num_kv_heads, dh), dtype, scale=0.02),
+                      plan.kv_slot_to_orig)
+        bv_c = _place(dense_init(ks[6], (cfg.num_kv_heads, dh), dtype, scale=0.02),
+                      plan.kv_slot_to_orig)
+        p["bq"] = _place(bq_c, plan.q_slot_to_orig).reshape(plan.h_q_pad * dh)
+        p["bk"] = jnp.repeat(bk_c, r, axis=0).reshape(kexp * dh)
+        p["bv"] = jnp.repeat(bv_c, r, axis=0).reshape(kexp * dh)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def attn_specs(cfg, lay: Layout):
+    tp = lay.tp_axes or None
+    s = {"wq": P(None, tp), "wk": P(None, tp), "wv": P(None, tp),
+         "wo": P(tp, None)}
+    if cfg.qkv_bias:
+        s.update({"bq": P(tp), "bk": P(tp), "bv": P(tp)})
+    if cfg.qk_norm:
+        s.update({"q_norm": P(None), "k_norm": P(None)})
+    return s
+
+
+def cache_init(cfg, lay: Layout, batch_global: int, s_max: int, dtype):
+    """Global KV cache for one attention layer: [B, S_max, slots, Dh] with
+    slots = G*kv_per_rank (replication materialized — same as TP GQA)."""
+    plan = get_plan(cfg, lay)
+    return {
+        "k": jnp.zeros((batch_global, s_max, plan.kv_slots_total, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch_global, s_max, plan.kv_slots_total, cfg.head_dim), dtype),
+    }
+
+
+def cache_specs(lay: Layout):
+    dp = lay.dp_axes or None
+    h = lay.head_spec_entry()
+    return {"k": P(dp, None, h, None), "v": P(dp, None, h, None)}
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _tp_rank(lay: Layout):
+    if not lay.tp_axes:
+        return jnp.zeros((), jnp.int32)
+    return joint_axis_index(lay.tp_axes, dict(lay.axis_sizes))
+
+
+def _model_rank(lay: Layout):
+    if not lay.model_axes:
+        return jnp.zeros((), jnp.int32)
+    return joint_axis_index(lay.model_axes, dict(lay.axis_sizes))
+
+
+def _project_exchange(p, x, cfg, lay: Layout, plan: HeadPlan, src=None):
+    """QKV projection (TP column parallel) + fused Ulysses exchange.
+
+    x: [B, S_loc, d]. ``src`` overrides the KV input (cross-attention).
+    Returns q [B, S, q_pr, dh], k, v [B, S, kv_pr, dh]  (S = full)."""
+    dh = cfg.head_dim
+    B, S_loc, _ = x.shape
+    kv_in = src if src is not None else x
+    q = x @ p["wq"]
+    k = kv_in @ p["wk"]
+    v = kv_in @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S_loc, -1, dh)
+    k = k.reshape(B, kv_in.shape[1], -1, dh)
+    v = v.reshape(B, kv_in.shape[1], -1, dh)
+    if lay.sp > 1:
+        k = expand_kv_for_send(k, plan, lay.sp, _tp_rank(lay))
+        v = expand_kv_for_send(v, plan, lay.sp, _tp_rank(lay))
+        q, k, v = ulysses_scatter_heads([q, k, v], lay)
+    return q, k, v
+
+
+def _finish(p, out, plan: HeadPlan, lay: Layout):
+    """Mask padded head slots, gather heads back, O projection + TP psum
+    (paper Alg. 1 lines 6-8)."""
+    mask = jnp.asarray(plan.q_mask())
+    g = _model_rank(lay)
+    local = jax.lax.dynamic_slice(mask, (g * plan.q_per_rank,), (plan.q_per_rank,))
+    out = out * local[None, None, :, None].astype(out.dtype)
+    if lay.sp > 1:
+        (out,) = ulysses_gather_heads([out], lay)
+    B, S_loc = out.shape[:2]
+    out = out.reshape(B, S_loc, -1)
+    out = out @ p["wo"]
+    return psum_if(out, lay.tp_axes)
+
+
+def _qk_post(p, q, k, positions, cfg, rope: bool = True):
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# prefill / train forward
+# ---------------------------------------------------------------------------
+def attn_prefill(p, x, cache, offsets, cfg, lay: Layout, *, window: int = 0,
+                 rope: bool = True, causal: bool = True):
+    """x: [B, S_loc, d] (seq sharded over sp); offsets: [B] cache offsets
+    (zeros for training / plain prefill). Returns (out [B, S_loc, d], cache)."""
+    plan = get_plan(cfg, lay)
+    q, k, v = _project_exchange(p, x, cfg, lay, plan)
+    B, S = q.shape[:2]
+    pos = offsets[:, None] + jnp.arange(S)[None, :]            # [B, S] global
+    q, k = _qk_post(p, q, k, pos, cfg, rope)
+
+    if cache is not None:
+        kc, vc = cache["k"], cache["v"]
+        s_max = kc.shape[1]
+        if window and s_max <= window:
+            # Ring cache for sliding-window layers (long-context decode).
+            # Attend over (old ring ++ fresh chunk); the old ring's slot j
+            # holds global position  last_prev - ((wp_prev - j) mod s_max).
+            last_prev = offsets[:, None] - 1                  # [B,1]
+            wp_prev = (offsets[:, None] - 1) % s_max
+            ring_pos = last_prev - ((wp_prev - jnp.arange(s_max)[None, :]) % s_max)
+            ring_pos = jnp.where(ring_pos >= 0, ring_pos, -1)
+            k_all = jnp.concatenate([kc, k], axis=1)
+            v_all = jnp.concatenate([vc, v], axis=1)
+            kv_pos = jnp.concatenate(
+                [ring_pos, jnp.broadcast_to(pos, (B, S))], axis=1)
+            out = attend(q, k_all, v_all, pos, kv_pos, causal=causal,
+                         window=window, soft_cap=cfg.logits_soft_cap)
+            n = min(S, s_max)
+            psel = pos[:, -n:]
+            kc = kc.at[jnp.arange(B)[:, None], psel % s_max].set(k[:, -n:])
+            vc = vc.at[jnp.arange(B)[:, None], psel % s_max].set(v[:, -n:])
+        else:
+            def wr(c, new, off):
+                return jax.lax.dynamic_update_slice(c, new, (off, 0, 0))
+            kc = jax.vmap(wr)(kc, k, offsets)
+            vc = jax.vmap(wr)(vc, v, offsets)
+            kv_pos = jnp.arange(s_max)
+            out = attend(q, kc, vc, pos, kv_pos, causal=causal, window=window,
+                         kv_len=offsets + S, soft_cap=cfg.logits_soft_cap)
+        cache = {"k": kc, "v": vc}
+    else:
+        kv_pos = jnp.arange(S)
+        out = attend(q, k, v, pos, kv_pos, causal=causal, window=window,
+                     soft_cap=cfg.logits_soft_cap)
+    return _finish(p, out, plan, lay), cache
+
+
+# ---------------------------------------------------------------------------
+# decode forward (one token per sequence)
+# ---------------------------------------------------------------------------
+def attn_decode(p, x, cache, lens, cfg, lay: Layout, *, window: int = 0,
+                rope: bool = True):
+    """x: [B_loc, d] — decode batch sharded over sp (paper's load-balancing
+    padding guarantees divisibility). lens: [B] global per-seq lengths.
+    Returns (out [B_loc, d], cache)."""
+    plan = get_plan(cfg, lay)
+    xs = x[None]                                               # batch-as-seq
+    q, k, v = _project_exchange(p, xs, cfg, lay, plan)
+    B = q.shape[1]
+    q = q.transpose(1, 0, 2, 3)                                # [B,1,q_pr,dh]
+    k = k.transpose(1, 0, 2, 3)
+    v = v.transpose(1, 0, 2, 3)
+    pos = lens[:, None]                                        # [B,1]
+    q, k = _qk_post(p, q, k, pos, cfg, rope)
+
+    kc, vc = cache["k"], cache["v"]
+    s_max = kc.shape[1]
+    ring = bool(window) and s_max <= window
+    wp = (lens % s_max) if ring else lens
+    kc = kc.at[jnp.arange(B), wp].set(k[:, 0])
+    vc = vc.at[jnp.arange(B), wp].set(v[:, 0])
+    # Sq == 1: the direct (unchunked) partial path — the score tensor is
+    # only [B, Hkv, g, 1, S_max] fp32, and it avoids the chunk-scan
+    # transpose copies of the whole cache.
+    if ring:
+        kv_pos = lens[:, None] - ((wp[:, None] - jnp.arange(s_max)[None, :]) % s_max)
+        acc, l, mm = attend_partial(q, kc, vc, pos, kv_pos, causal=True,
+                                    window=window, soft_cap=cfg.logits_soft_cap)
+    else:
+        kv_pos = jnp.arange(s_max)
+        acc, l, mm = attend_partial(q, kc, vc, pos, kv_pos, causal=True,
+                                    window=window, kv_len=lens + 1,
+                                    soft_cap=cfg.logits_soft_cap)
+    out = finish_partial(acc, l, mm).astype(q.dtype)
+
+    out = out.transpose(1, 0, 2, 3)                            # [1,B,q_pr,dh]
+    out = _finish(p, out, plan, lay)                           # [1,B_loc,d]
+    return out[0], {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+def cross_kv_prefill(p, enc_out, cfg, lay: Layout):
+    """Compute the cross-attention KV cache from encoder output (once)."""
+    plan = get_plan(cfg, lay)
+    dh = cfg.head_dim
+    B, S_loc, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, S_loc, -1, dh)
+    v = (enc_out @ p["wv"]).reshape(B, S_loc, -1, dh)
+    if cfg.qkv_bias:
+        k, v = k + p["bk"].reshape(-1, dh), v + p["bv"].reshape(-1, dh)
+    if lay.sp > 1:
+        k = expand_kv_for_send(k, plan, lay.sp, _tp_rank(lay))
+        v = expand_kv_for_send(v, plan, lay.sp, _tp_rank(lay))
+        k, v = ulysses_scatter_heads([k, v], lay)
+    return {"k": k, "v": v}                                    # [B, S_enc, kv_pr, dh]
+
+
+def cross_attend(p, x, cross_cache, cfg, lay: Layout, decode: bool = False):
+    """Decoder query against (static) cross KV. x: [B, S_loc, d] or [B_loc, d]."""
+    plan = get_plan(cfg, lay)
+    dh = cfg.head_dim
+    xs = x[None] if decode else x
+    q = (xs @ p["wq"]).reshape(xs.shape[0], xs.shape[1], -1, dh)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(-1, dh)
+    if lay.sp > 1:
+        (q,) = ulysses_scatter_heads([q], lay)
+    if decode:
+        q = q.transpose(1, 0, 2, 3)
+    k, v = cross_cache["k"], cross_cache["v"]
+    S_enc = k.shape[1]
+    qpos = jnp.zeros(q.shape[:2], jnp.int32)
+    out = attend(q, k, v, qpos, jnp.arange(S_enc), causal=False)
+    if decode:
+        out = out.transpose(1, 0, 2, 3)
+    out = _finish(p, out, plan, lay)
+    return out[0] if decode else out

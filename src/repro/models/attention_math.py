@@ -1,0 +1,131 @@
+"""Attention cores in pure jnp.
+
+``attend`` is a chunked online-softmax ("flash-style") implementation used
+for every long-sequence path — it keeps the lowered HLO free of S×S score
+materialization, which matters for the 32k dry-run cells.  It doubles as the
+oracle for the Pallas kernels (``repro.kernels.ref`` re-exports it).
+
+GQA convention: per-rank tensors are already head-aligned by the planner —
+``q: [B, Sq, Hq, Dh]`` and ``kv: [B, Skv, Hkv, Dh]`` with ``Hq % Hkv == 0``;
+q head ``s`` uses kv head ``s // (Hq//Hkv)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window: int, kv_len=None):
+    """q_pos: [B, Sq], kv_pos: [B, Skv] (global positions; -1 = invalid)."""
+    m = kv_pos[:, None, :] >= 0
+    if kv_len is not None:                       # per-sequence valid length
+        m &= kv_pos[:, None, :] < kv_len[:, None, None]
+    if causal:
+        m &= kv_pos[:, None, :] <= q_pos[..., :, None]
+    if window:
+        m &= kv_pos[:, None, :] > q_pos[..., :, None] - window
+    return m                                     # [B, Sq, Skv]
+
+
+def attend(q, k, v, q_pos, kv_pos, *, causal=True, window=0, kv_len=None,
+           soft_cap: float = 0.0, chunk: int = 1024):
+    """Online-softmax attention.
+
+    q: [B, Sq, Hq, Dh]; k/v: [B, Skv, Hkv, Dh]; q_pos: [B, Sq];
+    kv_pos: [Skv]; kv_len: optional [B]. Returns [B, Sq, Hq, Dh]."""
+    B, Sq, Hq, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                       # may differ from Dh (MLA)
+    g = Hq // Hkv
+    scale = Dh ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, Hkv, g, Dh)
+    kv_pos = jnp.broadcast_to(jnp.atleast_2d(kv_pos), (B, Skv))
+
+    nchunk = max(1, -(-Skv // chunk))
+    pad = nchunk * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+
+    ks = k.reshape(B, nchunk, chunk, Hkv, Dh)    # keep storage dtype; the
+    vs = v.reshape(B, nchunk, chunk, Hkv, Dv)    # einsums accumulate in fp32
+    ps = kv_pos.reshape(B, nchunk, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs                          # [B,chunk,Hkv,Dh], [B,chunk]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc,
+                       preferred_element_type=jnp.float32)   # [B,Hkv,g,Sq,chunk]
+        if soft_cap:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        msk = _mask(q_pos, pc, causal=causal, window=window, kv_len=kv_len)
+        s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g, Sq, Dv), jnp.float32)
+    if nchunk == 1:
+        (m, l, acc), _ = step((m0, l0, a0), (ks[:, 0], vs[:, 0], ps[:, 0]))
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), ps.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv)
+    return out.astype(q.dtype)
+
+
+def attend_partial(q, k, v, q_pos, kv_pos, *, causal=True, window=0,
+                   kv_len=None, soft_cap: float = 0.0, chunk: int = 1024):
+    """Like ``attend`` but returns the un-normalized partial result
+    ``(acc, l, m)`` for cross-device LSE merging (flash-decoding style —
+    used when the KV/latent cache is sequence-sharded)."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    scale = Dh ** -0.5
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, Hkv, g, Dh)
+    kv_pos = jnp.broadcast_to(jnp.atleast_2d(kv_pos), (B, k.shape[1]))
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    if soft_cap:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    msk = _mask(q_pos, kv_pos, causal=causal, window=window, kv_len=kv_len)
+    s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return acc, l, m                              # [B,Hkv,g,Sq,Dh], [B,Hkv,g,Sq] x2
+
+
+def merge_partials(acc, l, m, axes):
+    """psum-based LSE merge of ``attend_partial`` outputs across mesh axes."""
+    if not axes:
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out
+    from repro.models.layers import pmax_sg
+    m_glob = pmax_sg(m, axes)      # stabilizer only; cancels in the ratio
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axes)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axes)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+
+
+def finish_partial(acc, l, m):
+    B, Hkv, g, Sq, Dh = acc.shape
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hkv * g, Dh)

@@ -1,0 +1,240 @@
+"""Shared layers. All apply-functions run *inside* ``shard_map`` on local
+shards; the ``Layout`` tells them which mesh axes exist (empty = single
+device; the same code runs unsharded in smoke tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import Layout, psum_if, joint_axis_index
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def norm_init(kind, d, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind, p, x, eps=1e-6):
+    return rmsnorm(p, x, eps) if kind == "rmsnorm" else layernorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, Dh]; positions: [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (TP col/row sharded, paper Alg. 1 lines 9-11)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d, d_ff, act, lay: Layout, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, d_ff), dtype),
+         "wo": dense_init(ks[1], (d_ff, d), dtype)}
+    if act in ("silu", "geglu"):
+        p["wg"] = dense_init(ks[2], (d, d_ff), dtype)
+    return p
+
+
+def mlp_specs(act, lay: Layout):
+    tp = lay.tp_axes or None
+    s = {"wi": P(None, tp), "wo": P(tp, None)}
+    if act in ("silu", "geglu"):
+        s["wg"] = P(None, tp)
+    return s
+
+
+def mlp_apply(p, x, act, lay: Layout):
+    h = x @ p["wi"]
+    if act == "silu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = h @ p["wo"]
+    return psum_if(out, lay.tp_axes)
+
+
+# ---------------------------------------------------------------------------
+# vocab-sharded embedding + LM head
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab, d, lay: Layout, dtype):
+    """Vocab-sharded table stored [G, v_loc, d]; initialized canonically
+    ([V, d], layout-independent) then padded/reshaped so every layout holds
+    the same logical weights."""
+    G = max(lay.G, 1)
+    v_loc = -(-vocab // G)
+    t = dense_init(key, (vocab, d), dtype, scale=0.02)
+    t = jnp.pad(t, ((0, G * v_loc - vocab), (0, 0)))
+    return {"table": t.reshape(G, v_loc, d)}
+
+
+def embed_specs(lay: Layout):
+    # vocab shards over TP only: tokens are seq-sharded over SP, so the
+    # lookup-psum must not span the sequence axis. Storage is [G, v_loc, d];
+    # each tp rank holds G/tp contiguous shards (replicated over sp).
+    return {"table": P(lay.tp_axes or None, None, None)}
+
+
+def _tp_rank(lay: Layout):
+    if not lay.tp_axes:
+        return jnp.zeros((), jnp.int32)
+    return joint_axis_index(lay.tp_axes, dict(lay.axis_sizes))
+
+
+def embed_apply(p, ids, lay: Layout):
+    """Distributed lookup over a vocab-sharded table; psum over TP."""
+    t = p["table"]                              # local [G/tp, v_loc, d]
+    table = t.reshape(-1, t.shape[-1])          # [v_blk, d] contiguous vocab
+    v_blk = table.shape[0]
+    off = _tp_rank(lay) * v_blk
+    local = ids - off
+    ok = (local >= 0) & (local < v_blk)
+    emb = jnp.take(table, jnp.clip(local, 0, v_blk - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0).astype(table.dtype)
+    return psum_if(emb, lay.tp_axes)
+
+
+def lmhead_init(key, d, vocab, lay: Layout, dtype):
+    G = max(lay.G, 1)
+    v_loc = -(-vocab // G)
+    w = dense_init(key, (d, vocab), dtype)
+    w = jnp.pad(w, ((0, 0), (0, G * v_loc - vocab)))
+    return {"w": w.reshape(d, G, v_loc).transpose(1, 0, 2)}
+
+
+def lmhead_specs(lay: Layout):
+    return {"w": P(lay.tp_axes or None, None, None)}
+
+
+def lmhead_apply(p, x, lay: Layout):
+    """Returns vocab-sharded (over TP) local logits [..., v_blk] (fp32)."""
+    w = p["w"]                                  # local [G/tp, d, v_loc]
+    w2 = w.transpose(1, 0, 2).reshape(w.shape[1], -1)
+    return (x @ w2).astype(jnp.float32)
+
+
+def tied_lmhead_apply(embed_p, x, lay: Layout):
+    t = embed_p["table"]
+    return (x @ t.reshape(-1, t.shape[-1]).T).astype(jnp.float32)
+
+
+def pmax_if(x, axes):
+    return jax.lax.pmax(x, axes) if axes else x
+
+
+def pmax_sg(x, axes):
+    """Stop-gradient cross-device max. ``pmax`` has no JVP rule, so inside
+    differentiated code the max is taken over an all-gather of the
+    stop-gradient'd values (all_gather is differentiable; the tangent is
+    symbolically zero). Used only as a softmax stabilizer, where the max
+    cancels mathematically."""
+    x = jax.lax.stop_gradient(x)
+    if not axes:
+        return x
+    g = jax.lax.all_gather(x, axes, axis=0)
+    return jnp.max(g, axis=0)
+
+
+def distributed_xent(logits_loc, labels, vocab: int, lay: Layout):
+    """Cross-entropy over TP vocab shards. logits_loc: [..., v_blk]."""
+    v_blk = logits_loc.shape[-1]
+    off = _tp_rank(lay) * v_blk
+    mx = pmax_sg(jnp.max(logits_loc, axis=-1), lay.tp_axes)
+    z = jnp.exp(logits_loc - mx[..., None])
+    denom = psum_if(jnp.sum(z, axis=-1), lay.tp_axes)
+    local = labels - off
+    ok = (local >= 0) & (local < v_blk)
+    picked = jnp.take_along_axis(
+        logits_loc, jnp.clip(local, 0, v_blk - 1)[..., None], axis=-1)[..., 0]
+    picked = jnp.where(ok, picked, 0.0)
+    label_logit = psum_if(picked, lay.tp_axes)
+    return jnp.log(denom) + mx - label_logit     # [...] per-token nll
+
+
+def causal_depthwise_conv(x, w, state=None):
+    """Causal depthwise 1-D conv. x: [B, S, C], w: [cw, C],
+    state: optional [B, cw-1, C] tail of the previous segment.
+    Returns (y [B, S, C], new_state [B, cw-1, C])."""
+    cw = w.shape[0]
+    B, S, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, cw - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # [B, S+cw-1, C]
+    y = sum(xp[:, i:i + S] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return y, new_state
+
+
+def conv_step(x, w, state):
+    """Single decode step of the causal conv. x: [B, C]; state [B, cw-1, C]."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([state, x[:, None]], axis=1)  # [B, cw, C]
+    y = (xp * w[None]).sum(1)
+    return y, xp[:, 1:]
+
+
+def distributed_argmax(logits_loc, lay: Layout):
+    """Greedy token id from TP-vocab-sharded logits."""
+    v_blk = logits_loc.shape[-1]
+    off = _tp_rank(lay) * v_blk
+    loc_idx = jnp.argmax(logits_loc, axis=-1)
+    loc_val = jnp.max(logits_loc, axis=-1)
+    if not lay.tp_axes:
+        return loc_idx
+    vals = jax.lax.all_gather(loc_val, lay.tp_axes, axis=0)   # [tp, ...]
+    idxs = jax.lax.all_gather(loc_idx + off, lay.tp_axes, axis=0)
+    which = jnp.argmax(vals, axis=0)
+    return jnp.take_along_axis(idxs, which[None], axis=0)[0]

@@ -1,0 +1,248 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) under Shift Parallelism.
+
+MLA's compressed latent cache has *no head dimension*, so the paper's
+head-sharded KV invariance is trivial-but-degenerate here (§Arch-applicability
+in DESIGN.md): head-sharding the attention would force replicating the latent
+cache across the model group, which does not fit at 32k context.  The
+TPU-native adaptation:
+
+* the latent cache ``[B, S, kv_lora + rope]`` is sharded **over sequence** on
+  the fixed ``cache_sp_axes`` (contiguous chunks) and over batch on dp — the
+  same sharding in base and shift configs (invariance preserved);
+* q heads shard over ``tp_axes`` only — never over the cache's seq axes;
+* prefill (base): activations are seq-sharded; the latent is all-gathered
+  (37 MB at 32k) and K/V are materialized chunk-by-chunk inside the online
+  softmax scan for the local q chunk;
+* decode (and shift prefill): every rank computes a *partial* attention over
+  its local cache chunk and the results LSE-merge with one psum over
+  ``cache_sp_axes`` — distributed flash-decoding;
+* Shift Parallelism still switches the big GEMMs (q/kv down+up projections,
+  O, MLP) between (SP,TP) and pure-TP — at decode these dominate MLA FLOPs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import Layout, psum_if, joint_axis_index
+from .attention_math import attend, attend_partial, merge_partials, finish_partial
+from .layers import dense_init, rmsnorm, apply_rope
+
+
+def mla_tp_axes(lay: Layout):
+    """MLA head sharding must never span the latent cache's sequence axes
+    (the LSE merge over ``cache_sp_axes`` requires all ranks of an sp column
+    to hold the same heads). In the shift config this keeps the attention
+    projections at the base TP degree while MLP/embeddings widen to SPxTP —
+    see DESIGN.md §Arch-applicability."""
+    return tuple(a for a in lay.tp_axes if a not in lay.cache_sp_axes)
+
+
+def _tp_deg(lay: Layout) -> int:
+    sizes = dict(lay.axis_sizes)
+    d = 1
+    for a in mla_tp_axes(lay):
+        d *= sizes[a]
+    return d
+
+
+def mla_heads_local(cfg, lay: Layout) -> int:
+    return -(-cfg.num_heads // max(_tp_deg(lay), 1))
+
+
+def _h_pad(cfg, lay: Layout) -> int:
+    return mla_heads_local(cfg, lay) * max(_tp_deg(lay), 1)
+
+
+def _pad_heads(w, h, hp):
+    """[r, h, c] -> [r, hp, c] zero tail padding; flattened on return."""
+    r, _, c = w.shape
+    w = jnp.pad(w, ((0, 0), (0, hp - h), (0, 0)))
+    return w.reshape(r, hp * c)
+
+
+def mla_init(key, cfg, lay: Layout, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    hp = _h_pad(cfg, lay)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    wo_c = dense_init(ks[5], (h, m.v_head_dim * d), dtype)
+    wo = jnp.pad(wo_c, ((0, hp - h), (0, 0))).reshape(hp * m.v_head_dim, d)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": _pad_heads(dense_init(ks[1], (m.q_lora_rank, h, qk), dtype), h, hp),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wk_b": _pad_heads(dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                                      dtype), h, hp),
+        "wv_b": _pad_heads(dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                                      dtype), h, hp),
+        "wo": wo,
+    }
+
+
+def mla_specs(cfg, lay: Layout):
+    tp = mla_tp_axes(lay) or None
+    return {"wq_a": P(None, None), "q_norm": P(None),
+            "wq_b": P(None, tp), "wkv_a": P(None, None), "kv_norm": P(None),
+            "wk_b": P(None, tp), "wv_b": P(None, tp), "wo": P(tp, None)}
+
+
+def mla_cache_init(cfg, lay: Layout, batch_global: int, s_max: int, dtype):
+    m = cfg.mla
+    return {"lat": jnp.zeros((batch_global, s_max,
+                              m.kv_lora_rank + m.qk_rope_head_dim), dtype)}
+
+
+def mla_cache_specs(lay: Layout):
+    dp = lay.dp_axes or None
+    sp = lay.cache_sp_axes or None
+    return {"lat": P(dp, sp, None)}
+
+
+def _csp_rank(lay: Layout):
+    if not lay.cache_sp_axes:
+        return jnp.zeros((), jnp.int32)
+    return joint_axis_index(lay.cache_sp_axes, dict(lay.axis_sizes))
+
+
+def _latent(p, x, cfg, positions):
+    """x: [B, S, d] -> latent [B, S, kv_lora + rope] (rope applied)."""
+    m = cfg.mla
+    lat = x @ p["wkv_a"]
+    ckv = rmsnorm({"scale": p["kv_norm"]}, lat[..., :m.kv_lora_rank], cfg.norm_eps)
+    kr = lat[..., m.kv_lora_rank:]
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return jnp.concatenate([ckv, kr], axis=-1)
+
+
+def _queries(p, x, cfg, lay, positions):
+    """x: [B, S, d] -> q [B, S, h_loc, nope+rope] (rope applied)."""
+    m = cfg.mla
+    q = rmsnorm({"scale": p["q_norm"]}, x @ p["wq_a"], cfg.norm_eps) @ p["wq_b"]
+    B, S = q.shape[:2]
+    q = q.reshape(B, S, -1, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    qn, qr = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return jnp.concatenate([qn, qr], axis=-1)
+
+
+def _kv_from_latent(p, lat, cfg):
+    """lat: [B, Sk, klora+rope] -> k [B, Sk, h_loc, nope+rope], v [..., vdim]."""
+    m = cfg.mla
+    ckv, kr = lat[..., :m.kv_lora_rank], lat[..., m.kv_lora_rank:]
+    B, Sk = lat.shape[:2]
+    k_n = (ckv @ p["wk_b"]).reshape(B, Sk, -1, m.qk_nope_head_dim)
+    v = (ckv @ p["wv_b"]).reshape(B, Sk, -1, m.v_head_dim)
+    kr_b = jnp.broadcast_to(kr[:, :, None, :], k_n.shape[:3] + (kr.shape[-1],))
+    k = jnp.concatenate([k_n, kr_b], axis=-1)
+    return k, v
+
+
+def _write_cache(cache, lat_chunk, chunk_positions, lay: Layout):
+    """Masked write of latent rows into the seq-sharded local cache chunk."""
+    c = cache["lat"]
+    s_loc = c.shape[1]
+    base = _csp_rank(lay) * s_loc
+    local = chunk_positions - base                         # [S]
+    ok = (local >= 0) & (local < s_loc)
+    idx = jnp.where(ok, local, s_loc)                      # OOB -> dropped
+    c = c.at[:, idx].set(lat_chunk.astype(c.dtype), mode="drop")
+    return {"lat": c}
+
+
+def _local_kv_pos(cache, lay: Layout):
+    s_loc = cache["lat"].shape[1]
+    return _csp_rank(lay) * s_loc + jnp.arange(s_loc)
+
+
+def mla_prefill(p, x, cache, offsets, cfg, lay: Layout):
+    """x: [B, S_loc, d] (seq-sharded over sp in base; full in shift).
+    Returns (out [B, S_loc, d], cache)."""
+    B, S_loc, _ = x.shape
+    seq_sharded = lay.sp > 1
+    if seq_sharded:
+        r = joint_axis_index(lay.sp_axes, dict(lay.axis_sizes))
+        pos = offsets[:, None] + r * S_loc + jnp.arange(S_loc)[None, :]
+    else:
+        pos = offsets[:, None] + jnp.arange(S_loc)[None, :]
+    lat = _latent(p, x, cfg, pos)
+    q = _queries(p, x, cfg, lay, pos)
+
+    if seq_sharded:
+        # gather full latent chunk, write local cache range, attend locally
+        lat_full = jax.lax.all_gather(lat, lay.sp_axes, axis=1, tiled=True)
+        S = lat_full.shape[1]
+        gpos0 = offsets[:, None] + jnp.arange(S)[None, :]
+        if cache is not None:
+            cache = _write_cache(cache, lat_full, gpos0[0], lay)
+            lat_all = jax.lax.all_gather(cache["lat"], lay.cache_sp_axes,
+                                         axis=1, tiled=True)
+            kv_pos = jnp.arange(lat_all.shape[1])
+            kv_len = offsets + S
+        else:
+            lat_all, kv_pos, kv_len = lat_full, gpos0[0], None
+        k, v = _kv_from_latent(p, lat_all, cfg)
+        out = attend(q, k, v, pos, kv_pos, causal=True, kv_len=kv_len)
+    else:
+        # shift config (or single device): q is replicated over cache_sp ->
+        # partial attention over the local chunk + LSE merge.
+        if cache is not None:
+            cache = _write_cache(cache, lat, pos[0], lay)
+            lat_loc = cache["lat"]
+            kv_pos = _local_kv_pos(cache, lay)
+            kv_len = offsets + S_loc
+        else:
+            lat_loc, kv_pos, kv_len = lat, pos[0], None
+        k, v = _kv_from_latent(p, lat_loc, cfg)
+        acc, l, m = attend_partial(q, k, v, pos, kv_pos, causal=True, kv_len=kv_len)
+        merged = merge_partials(acc, l, m, lay.cache_sp_axes)
+        out = merged.transpose(0, 3, 1, 2, 4).reshape(
+            q.shape[0], q.shape[1], -1, cfg.mla.v_head_dim)
+
+    B2, S2 = out.shape[:2]
+    out = out.reshape(B2, S2, -1) @ p["wo"]
+    return psum_if(out, mla_tp_axes(lay)), cache
+
+
+def mla_decode(p, x, cache, lens, cfg, lay: Layout):
+    """x: [B_loc, d] (batch-sharded over sp in base). Returns (out, cache)."""
+    pos_all = lens[:, None]                                # [B, 1]
+    if lay.sp > 1:
+        r = joint_axis_index(lay.sp_axes, dict(lay.axis_sizes))
+        B_loc = x.shape[0]
+        pos_loc = jax.lax.dynamic_slice(pos_all, (r * B_loc, 0), (B_loc, 1))
+    else:
+        pos_loc = pos_all
+    lat = _latent(p, x[:, None, :], cfg, pos_loc)          # [B_loc,1,·]
+    q = _queries(p, x[:, None, :], cfg, lay, pos_loc)      # [B_loc,1,h,·]
+    if lay.sp > 1:
+        lat = jax.lax.all_gather(lat[:, 0], lay.sp_axes, axis=0, tiled=True)[:, None]
+        q = jax.lax.all_gather(q[:, 0], lay.sp_axes, axis=0, tiled=True)[:, None]
+    B = q.shape[0]
+    # masked write of each sequence's new latent row into the owner chunk
+    c = cache["lat"]
+    s_loc = c.shape[1]
+    base = _csp_rank(lay) * s_loc
+    local = lens - base
+    ok = (local >= 0) & (local < s_loc)
+    idx = jnp.where(ok, local, s_loc)
+    c = c.at[jnp.arange(B), idx].set(lat[:, 0].astype(c.dtype), mode="drop")
+    cache = {"lat": c}
+
+    k, v = _kv_from_latent(p, c, cfg)
+    kv_pos = _local_kv_pos(cache, lay)
+    acc, l, m = attend_partial(q, k, v, pos_all, kv_pos, causal=True,
+                               kv_len=lens + 1)
+    merged = merge_partials(acc, l, m, lay.cache_sp_axes)  # [B,h,1,1?,vd]
+    out = merged.transpose(0, 3, 1, 2, 4).reshape(B, 1, -1, cfg.mla.v_head_dim)
+    out = out.reshape(B, -1) @ p["wo"]
+    out = psum_if(out, mla_tp_axes(lay))
+    if lay.sp > 1:
+        B_loc = B // lay.sp
+        r = joint_axis_index(lay.sp_axes, dict(lay.axis_sizes))
+        out = jax.lax.dynamic_slice(out, (r * B_loc, 0), (B_loc, out.shape[1]))
+    return out, cache

@@ -1,0 +1,144 @@
+"""Public model API: a ``Model`` bundles (config, layout) and exposes
+jit/shard_map-wrapped step functions plus abstract init for the dry-run."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel import Layout
+from . import transformer as T
+
+POD_SCALE_ARCHS = {"deepseek-v3-671b", "llama4-maverick-400b-a17b",
+                   "llama4-17b-16e"}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclass
+class Model:
+    cfg: object
+    lay: Layout
+    mesh: Optional[Mesh] = None
+    dtype: object = jnp.bfloat16
+
+    @property
+    def pod_scale(self) -> bool:
+        return self.cfg.name in POD_SCALE_ARCHS
+
+    # ------------------------------------------------------------ init
+    def init_params(self, key):
+        return T.init_params(key, self.cfg, self.lay, self.dtype, self.pod_scale)
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+    def param_specs(self):
+        return T.param_specs(self.cfg, self.lay, self.pod_scale)
+
+    def init_cache(self, batch: int, s_max: int):
+        return T.init_cache(self.cfg, self.lay, batch, s_max, self.dtype)
+
+    def abstract_cache(self, batch: int, s_max: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, s_max))
+
+    def cache_specs(self):
+        return T.cache_specs(self.cfg, self.lay)
+
+    # ---------------------------------------------------------- step fns
+    # All bodies are closed over (cfg, lay) and run inside shard_map when a
+    # mesh is present; on a single device they run as plain functions (all
+    # collectives no-op because the layout has no axes).
+
+    def _wrap(self, body, in_specs, out_specs):
+        if self.mesh is None:
+            return body
+        return shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+    def _io_specs(self):
+        lay = self.lay
+        dp = lay.dp_axes or None
+        seq = lay.sp_axes or None
+        tok_b = tuple(lay.dp_axes) + tuple(lay.sp_axes)  # decode batch axes
+        return dp, seq, (tok_b or None)
+
+    def prefill_fn(self):
+        cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        dp, seq, _ = self._io_specs()
+        pspec = self.param_specs()
+        cspec = self.cache_specs()
+
+        args = [pspec, cspec, P(dp, seq), P(dp)]
+        extras = []
+        if cfg.frontend == "vision_stub":
+            extras.append(P(dp, None, None))
+        if cfg.encoder_layers:
+            extras.append(P(dp, seq, None))
+
+        def body(params, cache, tokens, offsets, *rest):
+            fe = rest[0] if cfg.frontend == "vision_stub" else None
+            ef = rest[-1] if cfg.encoder_layers else None
+            logits, cache = T.prefill_body(params, cache, tokens, offsets,
+                                           cfg, lay, pod, fe, ef)
+            return logits, cache
+
+        out = (P(dp, lay.tp_axes or None), cspec)
+        return self._wrap(body, tuple(args + extras), out)
+
+    def decode_fn(self, sample: bool = True):
+        cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        dp, _, tok_b = self._io_specs()
+        pspec = self.param_specs()
+        cspec = self.cache_specs()
+
+        def body(params, cache, tokens, lens):
+            logits, cache = T.decode_body(params, cache, tokens, lens, cfg,
+                                          lay, pod)
+            if sample:
+                return T.greedy_body(logits, lay), cache
+            return logits, cache
+
+        out_tok = P(dp) if sample else P(tok_b, lay.tp_axes or None)
+        return self._wrap(body, (pspec, cspec, P(tok_b), P(dp)),
+                          (out_tok, cspec))
+
+    def loss_fn(self, remat: bool = True):
+        cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        dp, seq, _ = self._io_specs()
+        pspec = self.param_specs()
+        args = [pspec, P(dp, seq), P(dp, seq)]
+        if cfg.frontend == "vision_stub":
+            args.append(P(dp, None, None))
+        if cfg.encoder_layers:
+            args.append(P(dp, seq, None))
+
+        def body(params, tokens, labels, *rest):
+            fe = rest[0] if cfg.frontend == "vision_stub" else None
+            ef = rest[-1] if cfg.encoder_layers else None
+            return T.loss_body(params, tokens, labels, cfg, lay, pod, fe, ef,
+                               remat=remat)
+
+        return self._wrap(body, tuple(args), P())
+
+    # ------------------------------------------------------------ shardings
+    def shardings(self, spec_tree):
+        assert self.mesh is not None
+        return _named(self.mesh, spec_tree)
+
+
+def build_model(cfg, mesh: Optional[Mesh] = None, *, sp=(), tp=(), dp=(),
+                dtype=jnp.bfloat16) -> Model:
+    if mesh is None:
+        lay = Layout()
+    else:
+        lay = Layout.from_mesh(mesh, dp=dp, sp=sp, tp=tp)
+    return Model(cfg=cfg, lay=lay, mesh=mesh, dtype=dtype)

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two dispatch paths, chosen by whether tokens are sharded or replicated over
+the EP group:
+
+* **a2a path** (base config; SP+EP composition — the paper's §4.6 "future
+  work", implemented here): tokens are seq-sharded over ``ep_axes``;
+  capacity-bucketed dispatch buffers are exchanged with one fused
+  ``all_to_all`` per direction, experts run their local shard, results
+  return by the inverse a2a.
+* **replicated path** (shift config / pure TP): tokens are replicated over
+  the EP group; each rank slices its local experts from the dispatch buffer
+  and the combine is a psum — the classic TP-MoE.
+
+Expert FF dims are additionally sharded over any tp axes *not* in the EP
+group (``P(ep_axes, None, tp_rest)``), so huge expert stacks (DeepSeek-V3)
+spread over the full pod.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import Layout, psum_if, joint_axis_index
+from .layers import dense_init
+
+
+def ep_group(lay: Layout, num_experts: int, pod_scale: bool) -> Tuple[Tuple[str, ...], bool]:
+    """(ep_axes, tokens_replicated) for this layout.
+
+    Tokens are sharded over dp+sp; EP must live inside those axes to avoid
+    duplicate dispatch. In the shift config (sp absorbed into tp) the model
+    group sees replicated tokens -> replicated path over the model axes."""
+    import itertools
+    sizes = dict(lay.axis_sizes)
+
+    def best_subset(axes):
+        best, best_deg = (), 1
+        for n in range(1, len(axes) + 1):
+            for sub in itertools.combinations(axes, n):
+                deg = 1
+                for a in sub:
+                    deg *= sizes[a]
+                if num_experts % deg == 0 and deg > best_deg:
+                    best, best_deg = sub, deg
+        return best, best_deg
+
+    cand = (tuple(lay.dp_axes) + tuple(lay.sp_axes)) if pod_scale else tuple(lay.sp_axes)
+    ep, deg = best_subset(cand)
+    if deg > 1:
+        return ep, False
+    # no sharded-token axis divides E -> replicated path over model axes
+    ep, deg = best_subset(tuple(lay.model_axes))
+    return (ep, True) if deg > 1 else ((), False)
+
+
+def moe_tp_axes(lay: Layout, ep_axes) -> Tuple[str, ...]:
+    return tuple(a for a in lay.tp_axes if a not in ep_axes)
+
+
+def moe_init(key, cfg, lay: Layout, dtype, pod_scale: bool):
+    mo = cfg.moe
+    d = cfg.d_model
+    ff = mo.d_ff_expert
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, mo.num_experts), jnp.float32),
+        "wi": dense_init(ks[1], (mo.num_experts, d, ff), dtype),
+        "wg": dense_init(ks[2], (mo.num_experts, d, ff), dtype),
+        "wo": dense_init(ks[3], (mo.num_experts, ff, d), dtype),
+    }
+    if mo.num_shared_experts:
+        ffs = (mo.d_ff_shared or mo.d_ff_expert) * mo.num_shared_experts
+        p["shared"] = {
+            "wi": dense_init(ks[4], (d, ffs), dtype),
+            "wg": dense_init(ks[5], (d, ffs), dtype),
+            "wo": dense_init(ks[6], (ffs, d), dtype),
+        }
+    return p
+
+
+def moe_specs(cfg, lay: Layout, pod_scale: bool):
+    mo = cfg.moe
+    ep_axes, _ = ep_group(lay, mo.num_experts, pod_scale)
+    tpr = moe_tp_axes(lay, ep_axes) or None
+    ep = ep_axes or None
+    s = {"router": P(None, None),
+         "wi": P(ep, None, tpr), "wg": P(ep, None, tpr), "wo": P(ep, tpr, None)}
+    if mo.num_shared_experts:
+        tp = lay.tp_axes or None
+        s["shared"] = {"wi": P(None, tp), "wg": P(None, tp), "wo": P(tp, None)}
+    return s
+
+
+def _dispatch_indices(sel, weights, T, E, C):
+    """Sort-based capacity assignment. sel/weights: [T, k]."""
+    k = sel.shape[1]
+    flat_e = sel.reshape(-1)                                   # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    ranks = jnp.zeros((T * k,), jnp.int32)
+    sorted_e = flat_e[order]
+    seg_pos = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    ranks = ranks.at[order].set(seg_pos.astype(jnp.int32))     # position within expert
+    keep = ranks < C
+    slot = flat_e * C + jnp.minimum(ranks, C - 1)              # [T*k]
+    return slot, keep, flat_e
+
+
+def moe_apply(p, x, cfg, lay: Layout, pod_scale: bool, train: bool = False):
+    """x: [B, S_loc, d]. Returns (out, aux_loss)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = mo.num_experts, mo.top_k
+    ep_axes, replicated = ep_group(lay, E, pod_scale)
+    sizes = dict(lay.axis_sizes)
+    ep = 1
+    for a in ep_axes:
+        ep *= sizes[a]
+    E_loc = E // max(ep, 1)
+    tpr = moe_tp_axes(lay, ep_axes)
+
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, sel = jax.lax.top_k(probs, k)                           # [T, k]
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, int(T * k * mo.capacity_factor) // E)
+    slot, keep, flat_e = _dispatch_indices(sel, w, T, E, C)
+    slot_sc = jnp.where(keep, slot, E * C)                     # OOB -> dropped
+
+    buf = jnp.zeros((E * C, d), xt.dtype)
+    src = jnp.repeat(xt, k, axis=0)                            # token order [T*k]
+    buf = buf.at[slot_sc].set(src, mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    if replicated and ep_axes:
+        r = joint_axis_index(ep_axes, sizes)
+        loc = jax.lax.dynamic_slice(buf, (r * E_loc, 0, 0), (E_loc, C, d))
+        toks = loc                                             # [E_loc, C, d]
+    elif ep_axes:
+        # fused dispatch a2a: [E, C, d] -> [E_loc, ep*C, d].
+        # Beyond-paper: int8 dispatch quantization (per-token scales) halves
+        # the EP traffic — the dominant collective for pod-scale MoE.
+        if mo.dispatch_dtype == "int8":
+            amax = jnp.max(jnp.abs(buf), axis=-1, keepdims=True)
+            scale = jnp.maximum(amax.astype(jnp.float32), 1e-8) / 127.0
+            q8 = jnp.clip(jnp.round(buf.astype(jnp.float32) / scale),
+                          -127, 127).astype(jnp.int8)
+            q8 = jax.lax.all_to_all(
+                q8.reshape(ep, E_loc, C, d), ep_axes, split_axis=0,
+                concat_axis=2, tiled=True).reshape(E_loc, ep * C, d)
+            sc = jax.lax.all_to_all(
+                scale.reshape(ep, E_loc, C, 1), ep_axes, split_axis=0,
+                concat_axis=2, tiled=True).reshape(E_loc, ep * C, 1)
+            toks = (q8.astype(jnp.float32) * sc).astype(buf.dtype)
+        else:
+            toks = jax.lax.all_to_all(
+                buf.reshape(ep, E_loc, C, d), ep_axes, split_axis=0,
+                concat_axis=2, tiled=True).reshape(E_loc, ep * C, d)
+    else:
+        toks = buf                                             # single device
+
+    h = jnp.einsum("ecd,edf->ecf", toks, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", toks, p["wg"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"])
+
+    if replicated and ep_axes:
+        # gather locally (zeros for remote experts), combine, then one psum
+        # over ep+tp on the small [T, d] result.
+        r = joint_axis_index(ep_axes, sizes)
+        loc_slot = slot - r * (E_loc * C)
+        ok = keep & (loc_slot >= 0) & (loc_slot < E_loc * C)
+        gathered = y.reshape(E_loc * C, d).at[
+            jnp.where(ok, loc_slot, E_loc * C)].get(mode="fill", fill_value=0)
+        out = (gathered.reshape(T, k, d) * w[..., None].astype(gathered.dtype)).sum(1)
+        out = psum_if(out, tuple(dict.fromkeys(ep_axes + tpr)))
+    else:
+        if ep_axes:
+            out_buf = jax.lax.all_to_all(
+                y.reshape(E_loc, ep, C, d), ep_axes, split_axis=1, concat_axis=0,
+                tiled=True).reshape(E, C, d)
+        else:
+            out_buf = y
+        gathered = out_buf.reshape(E * C, d)[slot]             # [T*k, d]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        out = (gathered.reshape(T, k, d) * w[..., None].astype(gathered.dtype)).sum(1)
+        out = psum_if(out, tpr)                                # ff-shard reduce
+
+    if mo.num_shared_experts:
+        sh = p["shared"]
+        hh = jax.nn.silu(xt @ sh["wg"]) * (xt @ sh["wi"])
+        out = out + psum_if(hh @ sh["wo"], lay.tp_axes)
+
+    aux = 0.0
+    if train:
+        me = probs.mean(0)                                     # [E]
+        ce = jnp.zeros((E,)).at[flat_e].add(keep.astype(jnp.float32))
+        ce = ce / jnp.maximum(ce.sum(), 1.0)
+        aux = mo.router_aux_coef * E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux

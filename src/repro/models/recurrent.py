@@ -1,0 +1,154 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The RG-LRU recurrence is *diagonal* (channel-independent), so Ulysses SP maps
+onto it as channel parallelism: the fused all-to-all swaps sequence sharding
+for width sharding (blocks of ``lru_width`` play the role of heads), each
+rank scans its channel block over the full sequence — no cross-rank carry —
+and the recurrent state ``[B, w/G]`` is sharded over the model group
+identically in base and shift configs (state invariance, cf. KV-cache
+invariance). The input/recurrence gates are block-diagonal (as in Griffin),
+aligned with the channel blocks, so they stay rank-local.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import Layout, psum_if, joint_axis_index
+from repro.core.ulysses import ulysses_scatter_heads, ulysses_gather_heads
+from .layers import dense_init, causal_depthwise_conv, conv_step
+
+N_BLOCKS = 16
+RGLRU_C = 8.0
+
+
+def _width(cfg):
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_init(key, cfg, lay: Layout, dtype):
+    d = cfg.d_model
+    w = _width(cfg)
+    bs = w // N_BLOCKS
+    cw = cfg.rglru.conv1d_width
+    ks = jax.random.split(key, 7)
+    # Λ init so that a ~ U(0.9, 0.999)^c at r=1 (Griffin appendix)
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)) / RGLRU_C))
+    return {
+        "wx": dense_init(ks[1], (d, w), dtype),
+        "wy": dense_init(ks[2], (d, w), dtype),
+        "conv": dense_init(ks[3], (cw, w), dtype, scale=0.5),
+        "gate_a": dense_init(ks[4], (N_BLOCKS, bs, bs), dtype),
+        "gate_x": dense_init(ks[5], (N_BLOCKS, bs, bs), dtype),
+        "lam": lam,
+        "wo": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def rglru_specs(cfg, lay: Layout):
+    tp = lay.tp_axes or None
+    h = lay.head_spec_entry()
+    return {"wx": P(None, tp), "wy": P(None, tp), "conv": P(None, h),
+            "gate_a": P(h, None, None), "gate_x": P(h, None, None),
+            "lam": P(h), "wo": P(tp, None)}
+
+
+def rglru_state_init(cfg, lay: Layout, batch_global: int, dtype):
+    w = _width(cfg)
+    cw = cfg.rglru.conv1d_width
+    return {"h": jnp.zeros((batch_global, w), jnp.float32),
+            "conv": jnp.zeros((batch_global, cw - 1, w), dtype)}
+
+
+def rglru_state_specs(lay: Layout):
+    dp = lay.dp_axes or None
+    h = lay.head_spec_entry()
+    return {"h": P(dp, h), "conv": P(dp, None, h)}
+
+
+def _gates(p, xb, B, S, nb_loc, bs):
+    xr = xb.reshape(B, S, nb_loc, bs)
+    r = jax.nn.sigmoid(jnp.einsum("bsnc,ncf->bsnf", xr, p["gate_a"]).reshape(B, S, -1))
+    i = jax.nn.sigmoid(jnp.einsum("bsnc,ncf->bsnf", xr, p["gate_x"]).reshape(B, S, -1))
+    return r.astype(jnp.float32), i.astype(jnp.float32)
+
+
+def _scan(a, bx, h0):
+    """h_t = a_t h_{t-1} + bx_t via associative scan. a, bx: [B, S, W] fp32."""
+    def comb(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, b1 * a2 + b2
+    aa, bb = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    return aa * h0[:, None, :] + bb
+
+
+def rglru_prefill(p, x, state, cfg, lay: Layout):
+    """x: [B, S_loc, d]. Returns (out, state)."""
+    w = _width(cfg)
+    B, S_loc, _ = x.shape
+    xb = x @ p["wx"]
+    yb = x @ p["wy"]
+    if lay.sp > 1:
+        w_t = xb.shape[-1]
+        bs_t = w_t // max(1, (N_BLOCKS // max(lay.tp, 1)))
+        xb4 = xb.reshape(B, S_loc, -1, bs_t if bs_t else 1)
+        yb4 = yb.reshape(B, S_loc, xb4.shape[2], -1)
+        xb4, yb4 = ulysses_scatter_heads([xb4, yb4], lay)
+        xb = xb4.reshape(B, -1, xb4.shape[2] * xb4.shape[3])
+        yb = yb4.reshape(B, -1, yb4.shape[2] * yb4.shape[3])
+    B, S, w_loc = xb.shape
+    nb_loc = max(1, N_BLOCKS // max(lay.G, 1))
+    bs = w_loc // nb_loc
+
+    conv_state = state["conv"] if state is not None else None
+    xb, conv_state = causal_depthwise_conv(xb, p["conv"], conv_state)
+    r, i = _gates(p, xb, B, S, nb_loc, bs)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-6)) * (
+        i * xb.astype(jnp.float32))
+    h0 = state["h"] if state is not None else jnp.zeros((B, w_loc), jnp.float32)
+    h = _scan(a, gated, h0)
+    out_r = h.astype(x.dtype) * jax.nn.gelu(yb)
+    new_h = h[:, -1, :]
+    if lay.sp > 1:
+        o4 = out_r.reshape(B, S, nb_loc, bs)
+        (o4,) = ulysses_gather_heads([o4], lay)
+        out_r = o4.reshape(B, S_loc, -1)
+    out = psum_if(out_r @ p["wo"], lay.tp_axes)
+    return out, {"h": new_h, "conv": conv_state}
+
+
+def rglru_decode(p, x, state, cfg, lay: Layout):
+    """x: [B_loc, d] batch-sharded over sp. Returns (out [B_loc, d], state)."""
+    B_loc = x.shape[0]
+    xb = x @ p["wx"]
+    yb = x @ p["wy"]
+    if lay.sp > 1:
+        w_t = xb.shape[-1]
+        nb_t = max(1, N_BLOCKS // max(lay.tp, 1))
+        xb4 = xb.reshape(1, B_loc, nb_t, w_t // nb_t)
+        yb4 = yb.reshape(1, B_loc, nb_t, w_t // nb_t)
+        xb4, yb4 = ulysses_scatter_heads([xb4, yb4], lay)
+        xb = xb4.reshape(-1, xb4.shape[2] * xb4.shape[3])
+        yb = yb4.reshape(-1, yb4.shape[2] * yb4.shape[3])
+    B, w_loc = xb.shape
+    nb_loc = max(1, N_BLOCKS // max(lay.G, 1))
+    bs = w_loc // nb_loc
+
+    xb, conv_state = conv_step(xb, p["conv"], state["conv"])
+    r, i = _gates(p, xb[:, None, :], B, 1, nb_loc, bs)
+    r, i = r[:, 0], i[:, 0]
+    a = jnp.exp(-RGLRU_C * jax.nn.softplus(p["lam"])[None, :] * r)
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-6)) * (
+        i * xb.astype(jnp.float32))
+    out_r = h.astype(x.dtype) * jax.nn.gelu(yb)
+    if lay.sp > 1:
+        o4 = out_r.reshape(1, B, nb_loc, w_loc // nb_loc)
+        (o4,) = ulysses_gather_heads([o4], lay)
+        out_r = o4.reshape(-1, o4.shape[2] * o4.shape[3])
+    out = psum_if(out_r @ p["wo"], lay.tp_axes)
+    return out, {"h": h, "conv": conv_state}

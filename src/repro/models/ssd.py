@@ -1,0 +1,242 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060), TPU/JAX-native.
+
+Parallelization (beyond-paper: "Ulysses for state-space heads"): SSD heads
+are independent given the shared (B, C) projections — exactly the GQA
+structure with ``h_kv = ngroups = 1``.  The same fused all-to-all and
+send-buffer replication used for attention therefore applies: sequence
+parallel outside the block, head parallel inside.  The recurrent state
+``[B, nh/G, hd, ds]`` is sharded over the model group identically in base
+and shift configs — the SSM analogue of KV-cache invariance, so Shift
+Parallelism applies to attention-free models too (state invariance).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import Layout, plan_heads, psum_if, joint_axis_index
+from repro.core.ulysses import (
+    ulysses_scatter_heads, ulysses_gather_heads, expand_kv_for_send)
+from .layers import dense_init, rmsnorm, causal_depthwise_conv, conv_step
+
+
+def ssd_plan(cfg, lay: Layout):
+    nh = cfg.ssm.n_heads(cfg.d_model)
+    return plan_heads(nh, 1, max(lay.G, 1), max(lay.tp, 1))
+
+
+def ssd_init(key, cfg, lay: Layout, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    hd, ds, cw = s.head_dim, s.d_state, s.d_conv
+    plan = ssd_plan(cfg, lay)
+    nhp = plan.h_q_pad
+    kexp = max(plan.h_kv_pad, max(lay.tp, 1))
+    ks = jax.random.split(key, 10)
+    wbc_c = dense_init(ks[2], (d, 1, 2 * ds), dtype)
+    return {
+        "wz": dense_init(ks[0], (d, nhp * hd), dtype),
+        "wx": dense_init(ks[1], (d, nhp * hd), dtype),
+        "wbc": jnp.repeat(wbc_c, kexp, axis=1).reshape(d, kexp * 2 * ds),
+        "wdt": dense_init(ks[3], (d, nhp), dtype),
+        "dt_bias": jnp.zeros((nhp,), jnp.float32),
+        "A_log": jnp.zeros((nhp,), jnp.float32),
+        "D": jnp.ones((nhp,), jnp.float32),
+        "conv_x": dense_init(ks[4], (cw, nhp * hd), dtype, scale=0.5),
+        "conv_bc": dense_init(ks[5], (cw, 2 * ds), dtype, scale=0.5),
+        "norm": jnp.ones((nhp * hd,), dtype),
+        "wo": dense_init(ks[6], (nhp * hd, d), dtype),
+    }
+
+
+def ssd_specs(cfg, lay: Layout):
+    tp = lay.tp_axes or None
+    h = lay.head_spec_entry()
+    return {
+        "wz": P(None, tp), "wx": P(None, tp), "wbc": P(None, tp),
+        "wdt": P(None, tp), "dt_bias": P(h), "A_log": P(h), "D": P(h),
+        "conv_x": P(None, h), "conv_bc": P(None, None),
+        "norm": P(h), "wo": P(tp, None),
+    }
+
+
+def ssd_state_init(cfg, lay: Layout, batch_global: int, dtype):
+    s = cfg.ssm
+    plan = ssd_plan(cfg, lay)
+    b = batch_global
+    return {"ssm": jnp.zeros((b, plan.h_q_pad, s.head_dim, s.d_state), jnp.float32),
+            "conv_x": jnp.zeros((b, s.d_conv - 1, plan.h_q_pad * s.head_dim), dtype),
+            "conv_bc": jnp.zeros((b, s.d_conv - 1, 2 * s.d_state), dtype)}
+
+
+def ssd_state_specs(lay: Layout):
+    dp = lay.dp_axes or None
+    h = lay.head_spec_entry()
+    return {"ssm": P(dp, h, None, None), "conv_x": P(dp, None, h),
+            "conv_bc": P(dp, None, None)}
+
+
+def _tp_rank(lay):
+    if not lay.tp_axes:
+        return jnp.zeros((), jnp.int32)
+    return joint_axis_index(lay.tp_axes, dict(lay.axis_sizes))
+
+
+def _project_exchange(p, x, cfg, lay, plan):
+    """x: [B, S_loc, d] -> post-a2a z, xin [B,S,hpr,hd], bc [B,S,1,2ds],
+    dt [B,S,hpr,1]."""
+    s = cfg.ssm
+    hd, ds = s.head_dim, s.d_state
+    B, S_loc, _ = x.shape
+    z = (x @ p["wz"]).reshape(B, S_loc, -1, hd)
+    xin = (x @ p["wx"]).reshape(B, S_loc, -1, hd)
+    bc = (x @ p["wbc"]).reshape(B, S_loc, -1, 2 * ds)
+    dt = (x @ p["wdt"]).reshape(B, S_loc, -1, 1)
+    if lay.sp > 1:
+        bc = expand_kv_for_send(bc, plan, lay.sp, _tp_rank(lay))
+        z, xin, bc, dt = ulysses_scatter_heads([z, xin, bc, dt], lay)
+    return z, xin, bc, dt
+
+
+def _ssd_scan(xin, b, c, dt, A, h0, chunk):
+    """Chunked SSD. xin: [B,S,H,hd]; b,c: [B,S,ds]; dt: [B,S,H] (fp32,
+    post-softplus); A: [H] (>0). h0: [B,H,hd,ds]. Returns (y, h_out)."""
+    Bq, S, H, hd = xin.shape
+    ds = b.shape[-1]
+    nc = max(1, S // chunk)
+    assert S % chunk == 0 or S < chunk, (S, chunk)
+    if S < chunk:
+        nc, chunk = 1, S
+    xs = xin.astype(jnp.float32).reshape(Bq, nc, chunk, H, hd)
+    bs = b.astype(jnp.float32).reshape(Bq, nc, chunk, ds)
+    cs = c.astype(jnp.float32).reshape(Bq, nc, chunk, ds)
+    dts = dt.reshape(Bq, nc, chunk, H)
+    la = -dts * A[None, None, None, :]                 # log decay per step
+
+    def step(h, inp):
+        xc, bc_, cc, dtc, lac = inp
+        cum = jnp.cumsum(lac, axis=1)                  # [B,chunk,H]
+        # intra-chunk: scores[t,s] = (c_t.b_s) exp(cum_t - cum_s) dt_s, s<=t
+        cb = jnp.einsum("btd,bsd->bts", cc, bc_)       # [B,chunk,chunk]
+        dec = cum[:, :, None, :] - cum[:, None, :, :]  # [B,t,s,H]
+        tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+        sc = cb[..., None] * jnp.exp(jnp.where(tri[None, ..., None], dec, -1e30))
+        sc = sc * dtc[:, None, :, :]                   # weight by dt_s
+        y_in = jnp.einsum("btsh,bshd->bthd", sc, xc)
+        # cross-chunk: y_t += c_t . (h * exp(cum_t))
+        y_cr = jnp.einsum("btd,bhpd,bth->bthp", cc, h, jnp.exp(cum))
+        # state update
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtc        # [B,chunk,H]
+        dh = jnp.einsum("bth,bthp,btd->bhpd", w, xc, bc_)
+        h = h * jnp.exp(cum[:, -1])[:, :, None, None] + dh
+        return h, y_in + y_cr
+
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (xs.swapaxes(0, 1), bs.swapaxes(0, 1),
+                          cs.swapaxes(0, 1), dts.swapaxes(0, 1),
+                          la.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(Bq, S, H, hd)
+    return y, h
+
+
+def ssd_prefill(p, x, state, cfg, lay: Layout):
+    """x: [B, S_loc, d]. Returns (out [B, S_loc, d], state)."""
+    s = cfg.ssm
+    plan = ssd_plan(cfg, lay)
+    z, xin, bc, dt = _project_exchange(p, x, cfg, lay, plan)
+    B, S, hpr, hd = xin.shape
+    ds = s.d_state
+
+    g = _model_rank(lay)
+    conv_x_loc = _slice_by_rank(p["conv_x"], g, hpr * hd, lay)
+    xc = jnp.concatenate([xin.reshape(B, S, hpr * hd), bc[:, :, 0]], axis=-1)
+    cw = jnp.concatenate([conv_x_loc, p["conv_bc"]], axis=-1)
+    conv_state = (jnp.concatenate([state["conv_x"], state["conv_bc"]], axis=-1)
+                  if state is not None else None)
+    xc, conv_state = causal_depthwise_conv(xc, cw, conv_state)
+    xc = jax.nn.silu(xc)
+    xin = xc[..., :hpr * hd].reshape(B, S, hpr, hd)
+    b_, c_ = jnp.split(xc[..., hpr * hd:], 2, axis=-1)
+
+    dt_b = _slice_by_rank(p["dt_bias"], g, hpr, lay)
+    A = jnp.exp(_slice_by_rank(p["A_log"], g, hpr, lay))
+    D = _slice_by_rank(p["D"], g, hpr, lay)
+    dtv = jax.nn.softplus(dt[..., 0].astype(jnp.float32) + dt_b)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((B, hpr, hd, ds), jnp.float32)
+    y, h = _ssd_scan(xin, b_, c_, dtv, A, h0, s.chunk)
+    y = y + D[None, None, :, None] * xin.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+
+    nrm = _slice_by_rank(p["norm"], g, hpr * hd, lay)
+    # grouped (per-head) RMSNorm: invariant under head sharding (Mamba-2 TP)
+    y = rmsnorm({"scale": nrm.reshape(hpr, hd)}, y)
+    if lay.sp > 1:
+        (y,) = ulysses_gather_heads([y], lay)
+    out = y.reshape(B, y.shape[1], -1) @ p["wo"]
+    out = psum_if(out, lay.tp_axes)
+    new_state = {"ssm": h, "conv_x": conv_state[..., :hpr * hd],
+                 "conv_bc": conv_state[..., hpr * hd:]}
+    return out, new_state
+
+
+def ssd_decode(p, x, state, cfg, lay: Layout):
+    """x: [B_loc, d] (batch sharded over sp). Returns (out [B_loc, d], state)."""
+    s = cfg.ssm
+    plan = ssd_plan(cfg, lay)
+    z, xin, bc, dt = _project_exchange(p, x[None], cfg, lay, plan)
+    # post-a2a: [1, B, hpr, hd] etc (batch-as-seq)
+    z, xin, bc, dt = (t[0] for t in (z, xin, bc, dt))
+    B, hpr, hd = xin.shape
+    ds = s.d_state
+    g = _model_rank(lay)
+    conv_x_loc = _slice_by_rank(p["conv_x"], g, hpr * hd, lay)
+    xc = jnp.concatenate([xin.reshape(B, hpr * hd), bc[:, 0]], axis=-1)
+    cw = jnp.concatenate([conv_x_loc, p["conv_bc"]], axis=-1)
+    cst = jnp.concatenate([state["conv_x"], state["conv_bc"]], axis=-1)
+    xc, conv_state = conv_step(xc, cw, cst)
+    xc = jax.nn.silu(xc)
+    xin = xc[..., :hpr * hd].reshape(B, hpr, hd).astype(jnp.float32)
+    b_, c_ = jnp.split(xc[..., hpr * hd:].astype(jnp.float32), 2, axis=-1)
+
+    dt_b = _slice_by_rank(p["dt_bias"], g, hpr, lay)
+    A = jnp.exp(_slice_by_rank(p["A_log"], g, hpr, lay))
+    D = _slice_by_rank(p["D"], g, hpr, lay)
+    dtv = jax.nn.softplus(dt[..., 0].astype(jnp.float32) + dt_b)  # [B, hpr]
+
+    a = jnp.exp(-dtv * A[None, :])                      # [B, hpr]
+    h = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bd->bhpd", dtv, xin, b_)
+    y = jnp.einsum("bd,bhpd->bhp", c_, h) + D[None, :, None] * xin
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    nrm = _slice_by_rank(p["norm"], g, hpr * hd, lay)
+    y = rmsnorm({"scale": nrm.reshape(hpr, hd)}, y)
+    if lay.sp > 1:
+        (y,) = ulysses_gather_heads([y.reshape(1, B, hpr, hd)], lay)
+        y = y.reshape(y.shape[1], y.shape[2] * hd)
+    else:
+        y = y.reshape(B, hpr * hd)
+    out = y.reshape(y.shape[0], -1) @ p["wo"]
+    out = psum_if(out, lay.tp_axes)
+    return out, {"ssm": h, "conv_x": conv_state[..., :hpr * hd],
+                 "conv_bc": conv_state[..., hpr * hd:]}
+
+
+def _model_rank(lay: Layout):
+    if not lay.model_axes:
+        return jnp.zeros((), jnp.int32)
+    return joint_axis_index(lay.model_axes, dict(lay.axis_sizes))
+
+
+def _slice_by_rank(w, g, size, lay: Layout):
+    """Slice the model-group-local portion of a width/head-indexed param.
+    Under shard_map the param arrives already sliced (its spec shards it);
+    this is the single-device fallback — with a mesh the local shape equals
+    ``size`` and the slice is the identity."""
+    if w.shape[-1] == size:
+        return w
+    start = g * size
+    if w.ndim == 1:
+        return jax.lax.dynamic_slice(w, (start,), (size,))
+    return jax.lax.dynamic_slice(w, (0, start), (w.shape[0], size))

@@ -1,0 +1,5 @@
+from .layout import Layout, joint_axis_index, psum_if, all_gather_if
+from .heads import HeadPlan, plan_heads
+
+__all__ = ["Layout", "joint_axis_index", "psum_if", "all_gather_if",
+           "HeadPlan", "plan_heads"]

@@ -1,0 +1,134 @@
+"""Attention-head layout planner.
+
+Generalizes the paper's §3.2.1 to any (h_q, h_kv, SP, TP):
+
+* pads query heads so they divide the model-group degree G = SP·TP,
+* pads KV heads up to a divisor (or multiple) of G,
+* computes the **replication factor** when G > h_kv — the paper's
+  "KV cache replication ... within the send buffers of the collective call",
+* keeps GQA *group alignment*: the q-head slots each rank receives always map
+  to the kv-head slot(s) that same rank receives.
+
+Slot layouts are planned once per (model, G); base and shift configurations
+share the same G, hence the same plan — this is what makes the KV cache
+invariant including padding/replication.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _smallest_divisor_geq(n: int, x: int) -> int:
+    for d in range(x, n + 1):
+        if n % d == 0:
+            return d
+    return n
+
+
+@dataclass(frozen=True)
+class HeadPlan:
+    G: int                      # model-group degree (SP*TP)
+    tp: int                     # weight-column shard degree (base config)
+    h_q: int
+    h_kv: int
+    h_q_pad: int                # multiple of G
+    h_kv_pad: int               # divisor of G (if < G) else multiple of G
+    repl: int                   # total kv replication factor G / h_kv_pad (1 if h_kv_pad >= G)
+    q_per_rank: int             # query head slots per device after a2a
+    kv_per_rank: int            # kv head slots per device after a2a
+    q_per_kv_pad: int           # padded GQA group size
+    q_slot_to_orig: Tuple[int, ...]   # padded q slot -> original head (-1 = pad)
+    kv_slot_to_orig: Tuple[int, ...]  # padded kv slot -> original head (-1 = pad)
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def kv_slots_total(self) -> int:
+        """Global kv slot count incl. replication = G * kv_per_rank.
+        This is the head extent of the (invariant) KV cache."""
+        return self.G * self.kv_per_rank
+
+    @property
+    def h_kv_exp_base(self) -> int:
+        """KV slots materialized in the *base* config weights: replication is
+        only applied at the TP (weight) level; the SP-level replication
+        happens in the a2a send buffer."""
+        return max(self.h_kv_pad, self.tp)
+
+    @property
+    def h_kv_exp_shift(self) -> int:
+        """KV slots materialized in the *shift* config weights (full TP=G)."""
+        return self.kv_slots_total
+
+    def q_mask(self) -> np.ndarray:
+        """[h_q_pad] 1.0 for real head slots, 0.0 for padding."""
+        return (np.asarray(self.q_slot_to_orig) >= 0).astype(np.float32)
+
+    def kv_expand_map(self, n_slots: int) -> np.ndarray:
+        """Map from ``n_slots`` expanded slots back to padded kv slots
+        (``slot // (n_slots // h_kv_pad)``)."""
+        r = n_slots // self.h_kv_pad
+        return np.arange(n_slots) // r
+
+    def a2a_send_map(self, sp: int) -> np.ndarray:
+        """[tp, sp * kv_per_rank] — for base-config tp-rank j, local indices
+        (into its h_kv_exp_base/tp slot shard) of the kv slots to place in the
+        a2a send buffer so that sp-rank i receives the kv slots aligned with
+        its q slots.  This is the paper's "replication within send buffers".
+        """
+        tp = self.G // sp
+        exp = max(self.h_kv_pad, tp)          # slots materialized in weights
+        per_tp = exp // tp                    # local kv slots per tp rank
+        w2p = self.kv_expand_map(exp)         # expanded slot -> padded slot
+        out = np.zeros((tp, sp * self.kv_per_rank), dtype=np.int32)
+        for j in range(tp):
+            local = [w2p[j * per_tp + c] for c in range(per_tp)]  # padded slots held
+            for i in range(sp):
+                g = j * sp + i                 # joint model rank (tp-major)
+                for c in range(self.kv_per_rank):
+                    want = (g * self.kv_per_rank + c) * self.h_kv_pad // self.kv_slots_total
+                    out[j, i * self.kv_per_rank + c] = local.index(want)
+        return out
+
+
+def plan_heads(h_q: int, h_kv: int, G: int, tp: int = 1) -> HeadPlan:
+    assert h_q % h_kv == 0, f"GQA requires h_kv | h_q, got {h_q}/{h_kv}"
+    q_per_kv = h_q // h_kv
+
+    if h_kv >= G:
+        h_kv_pad = _round_up(h_kv, G)
+        kv_per_rank = h_kv_pad // G
+        repl = 1
+        q_per_kv_pad = q_per_kv
+        h_q_pad = h_kv_pad * q_per_kv_pad
+        q_per_rank = h_q_pad // G
+    else:
+        h_kv_pad = _smallest_divisor_geq(G, h_kv)
+        repl = G // h_kv_pad
+        kv_per_rank = 1
+        q_per_rank = math.ceil(h_q / G)
+        # group alignment: each padded kv group feeds `repl` consecutive ranks
+        q_per_kv_pad = q_per_rank * repl
+        h_q_pad = h_kv_pad * q_per_kv_pad
+    assert h_q_pad % G == 0
+
+    q_map = []
+    for k in range(h_kv_pad):
+        for j in range(q_per_kv_pad):
+            orig = k * q_per_kv + j
+            q_map.append(orig if (k < h_kv and j < q_per_kv) else -1)
+    kv_map = [k if k < h_kv else -1 for k in range(h_kv_pad)]
+
+    return HeadPlan(
+        G=G, tp=tp, h_q=h_q, h_kv=h_kv, h_q_pad=h_q_pad, h_kv_pad=h_kv_pad,
+        repl=repl, q_per_rank=q_per_rank, kv_per_rank=kv_per_rank,
+        q_per_kv_pad=q_per_kv_pad,
+        q_slot_to_orig=tuple(q_map), kv_slot_to_orig=tuple(kv_map),
+    )

@@ -1,0 +1,129 @@
+"""Parallel layout algebra.
+
+A ``Layout`` names which mesh axes carry data parallelism (``dp_axes``),
+Ulysses sequence parallelism (``sp_axes``) and tensor parallelism
+(``tp_axes``).  The *model group* is ``tp_axes + sp_axes`` — **tp-major** —
+which is exactly the paper's SP_TP process group ordering (§3.3.1, Fig. 6):
+for base config (SP=s, TP=t), the device with (sp_rank=i, tp_rank=j) owns
+attention-head sub-block ``j*s + i``.  Sharding a head dimension with
+``PartitionSpec((*tp_axes, *sp_axes))`` reproduces that ordering, so the KV
+cache sharding is *identical* between:
+
+  base  = Layout(dp, sp_axes=("sp",), tp_axes=("tp",))      # Algorithm 1
+  shift = Layout(dp, sp_axes=(),      tp_axes=("tp", "sp")) # Algorithm 1[1, SP*TP]
+
+That identity is the paper's KV-cache invariance; it is verified structurally
+in ``repro.core.invariance``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Static description of how a step function is parallelized."""
+
+    dp_axes: Tuple[str, ...] = ()
+    sp_axes: Tuple[str, ...] = ()
+    tp_axes: Tuple[str, ...] = ()
+    ep_axes: Tuple[str, ...] = ()      # expert parallelism group (MoE)
+    axis_sizes: Tuple[Tuple[str, int], ...] = ()   # (name, size) of every mesh axis
+    # Mesh axes the *sequence-sharded* caches (MLA latent) live on. Fixed at
+    # deployment time and preserved by to_shift() so the cache sharding is
+    # identical in base and shift configs (the MLA form of invariance).
+    cache_sp_axes: Tuple[str, ...] = ()
+
+    # ---------------------------------------------------------------- sizes
+    def _size(self, axes: Tuple[str, ...]) -> int:
+        d = dict(self.axis_sizes)
+        return math.prod(d[a] for a in axes) if axes else 1
+
+    @property
+    def dp(self) -> int:
+        return self._size(self.dp_axes)
+
+    @property
+    def sp(self) -> int:
+        return self._size(self.sp_axes)
+
+    @property
+    def tp(self) -> int:
+        return self._size(self.tp_axes)
+
+    @property
+    def ep(self) -> int:
+        return self._size(self.ep_axes)
+
+    @property
+    def model_axes(self) -> Tuple[str, ...]:
+        """The joint model group, tp-major (paper's SP_TP ordering)."""
+        return tuple(self.tp_axes) + tuple(self.sp_axes)
+
+    @property
+    def G(self) -> int:
+        """Model-group degree (SP × TP). Head shards and the KV cache are
+        partitioned G ways in every configuration."""
+        return self.sp * self.tp
+
+    @property
+    def sp_axis(self) -> Optional[str]:
+        assert len(self.sp_axes) <= 1, "a single named SP axis is assumed"
+        return self.sp_axes[0] if self.sp_axes else None
+
+    # ------------------------------------------------------------- factories
+    @property
+    def cache_sp(self) -> int:
+        return self._size(self.cache_sp_axes)
+
+    @staticmethod
+    def from_mesh(mesh: Mesh, *, dp=(), sp=(), tp=(), ep=()) -> "Layout":
+        sizes = tuple((n, int(s)) for n, s in mesh.shape.items())
+        return Layout(dp_axes=tuple(dp), sp_axes=tuple(sp), tp_axes=tuple(tp),
+                      ep_axes=tuple(ep), axis_sizes=sizes,
+                      cache_sp_axes=tuple(sp))
+
+    def to_shift(self) -> "Layout":
+        """The paper's shift configuration: Algorithm 1[1, SP×TP].
+
+        SP axes are appended to the TP axes (tp-major order preserved), so the
+        model group — and therefore the KV cache sharding — is unchanged."""
+        return replace(self, sp_axes=(), tp_axes=self.model_axes)
+
+    # ------------------------------------------------------------ specs
+    def dp_spec(self) -> P:
+        return P(self.dp_axes) if self.dp_axes else P(None)
+
+    def head_spec_entry(self):
+        """PartitionSpec entry for any head-indexed dimension post-a2a
+        (== KV cache head sharding). Same in base and shift configs."""
+        return self.model_axes if self.model_axes else None
+
+
+# ---------------------------------------------------------------------------
+# Collective helpers that degrade to no-ops on absent axes (single-device
+# smoke tests run the identical model code with all axes empty).
+# ---------------------------------------------------------------------------
+
+def psum_if(x, axes: Tuple[str, ...]):
+    return jax.lax.psum(x, axes) if axes else x
+
+
+def all_gather_if(x, axes: Tuple[str, ...], axis: int = 0, tiled: bool = True):
+    if not axes:
+        return x
+    return jax.lax.all_gather(x, axes, axis=axis, tiled=tiled)
+
+
+def joint_axis_index(axes: Tuple[str, ...], sizes: dict):
+    """Joint rank within a tuple of mesh axes (major-to-minor = listed order)."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * sizes[a] + jax.lax.axis_index(a)
+    return idx

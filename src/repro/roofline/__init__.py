@@ -1,0 +1,7 @@
+from .hlo_parse import collective_bytes_hlo
+from .comm_model import comm_bytes_analytic
+from .terms import roofline_terms, V5E, H200
+from .memmodel import bytes_of_tree, activation_estimate, hbm_traffic
+
+__all__ = ["collective_bytes_hlo", "comm_bytes_analytic", "roofline_terms",
+           "V5E", "H200", "bytes_of_tree", "activation_estimate", "hbm_traffic"]

@@ -1,0 +1,108 @@
+"""Analytic per-device collective-traffic model (paper Table 2, concrete).
+
+Every collective in this framework is written explicitly (Algorithm 1), so
+the per-step traffic is exactly enumerable. Ring cost conventions:
+all-reduce ≈ 2·size·(n-1)/n, all-gather / reduce-scatter ≈ size·(n-1)/n
+(size = full logical tensor bytes), all-to-all ≈ local_size·(n-1)/n.
+Returns bytes crossing each device's ICI links for one step."""
+from __future__ import annotations
+
+from repro.parallel import plan_heads
+
+
+def _ar(size, n):        # all-reduce (ring): 2x(n-1)/n
+    return 2 * size * (n - 1) / n if n > 1 else 0
+
+
+def _ag(size_full, n):   # all-gather of a full tensor of size_full
+    return size_full * (n - 1) / n if n > 1 else 0
+
+
+def _a2a(local_size, n):
+    return local_size * (n - 1) / n if n > 1 else 0
+
+
+def comm_bytes_analytic(cfg, lay, shape, mode: str, pod_scale: bool = False,
+                        bytes_per=2) -> dict:
+    """Per-device collective bytes for one step of (cfg x shape) under
+    layout ``lay`` (use the base or shift Layout)."""
+    sp, tp, dp, G = max(lay.sp, 1), max(lay.tp, 1), max(lay.dp, 1), max(lay.G, 1)
+    d = cfg.d_model
+    dh = cfg.head_dim
+    B = shape.global_batch
+    S = shape.seq_len
+    out = {"a2a": 0.0, "allreduce": 0.0, "allgather": 0.0, "p2p": 0.0}
+
+    if shape.kind == "train":
+        b_loc, s_loc, n_tok_loc = B // dp, S // sp, (B // dp) * (S // sp)
+    elif shape.kind == "prefill":
+        b_loc, s_loc, n_tok_loc = B // dp, S // sp, (B // dp) * (S // sp)
+    else:  # decode: one token per sequence; batch sharded over dp x sp
+        b_loc = max(B // dp, 1)
+        s_loc = 1
+        n_tok_loc = max(B // (dp * sp), 1)
+
+    kinds = cfg.layer_kinds
+    for kind in kinds:
+        has_attn = kind in ("attn", "local", "moe", "enc", "dec")
+        if has_attn and cfg.mla is None:
+            plan = plan_heads(cfg.num_heads, cfg.num_kv_heads, G, tp)
+            # fused qkv a2a + inverse o a2a (base config only)
+            qkv_cols = (plan.h_q_pad // tp + sp * plan.kv_per_rank * 2) * dh
+            out["a2a"] += _a2a(n_tok_loc * qkv_cols * bytes_per, sp)
+            out["a2a"] += _a2a(n_tok_loc * (plan.h_q_pad // tp) * dh * bytes_per, sp)
+            if kind == "dec":   # cross-attention q a2a
+                out["a2a"] += 2 * _a2a(n_tok_loc * (plan.h_q_pad // tp) * dh
+                                       * bytes_per, sp)
+            # o-projection + MLP all-reduces over tp
+            out["allreduce"] += _ar(n_tok_loc * d * bytes_per, tp)
+        elif has_attn and cfg.mla is not None:
+            m = cfg.mla
+            lat = m.kv_lora_rank + m.qk_rope_head_dim
+            csp = max(lay.cache_sp, 1)
+            if shape.kind != "decode" and sp > 1:
+                out["allgather"] += _ag(b_loc * S * lat * bytes_per, sp) * 2
+            else:
+                # decode: gather q + latent over sp, LSE-merge psum over csp
+                h_loc = -(-cfg.num_heads // tp)
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                out["allgather"] += _ag(b_loc * (h_loc * qk + lat) * bytes_per, sp)
+                out["allreduce"] += _ar(b_loc * h_loc * (m.v_head_dim + 2) * 4, csp)
+            out["allreduce"] += _ar(n_tok_loc * d * bytes_per, tp)
+        if kind in ("rglru", "ssd"):
+            w = (cfg.rglru.lru_width or d) if kind == "rglru" else \
+                cfg.ssm.d_inner(d) * 2 + 2 * cfg.ssm.d_state
+            out["a2a"] += 2 * _a2a(n_tok_loc * (w // tp) * bytes_per, sp)
+            out["allreduce"] += _ar(n_tok_loc * d * bytes_per, tp)
+        # FFN
+        if kind == "moe":
+            mo = cfg.moe
+            from repro.models.moe import ep_group
+            ep_axes, repl = ep_group(lay, mo.num_experts, pod_scale)
+            sizes = dict(lay.axis_sizes)
+            ep = 1
+            for a in ep_axes:
+                ep *= sizes[a]
+            cap = n_tok_loc * mo.top_k * mo.capacity_factor
+            dbytes = 1 if mo.dispatch_dtype == "int8" else bytes_per
+            if repl:
+                out["allreduce"] += _ar(n_tok_loc * d * bytes_per, ep)
+            elif ep > 1:
+                # dispatch in dispatch_dtype; return path stays bf16
+                out["a2a"] += _a2a(cap * d * dbytes, ep)
+                out["a2a"] += _a2a(cap * d * bytes_per, ep)
+            out["allreduce"] += _ar(n_tok_loc * d * bytes_per, tp)
+        elif kind in ("attn", "local", "enc", "dec"):
+            out["allreduce"] += _ar(n_tok_loc * d * bytes_per, tp)
+    # embedding + lm head
+    out["allreduce"] += _ar(n_tok_loc * d * bytes_per, tp)      # embed psum
+    if shape.kind == "train":
+        # logits xent psums (3 scalars-per-token) + grad all-reduce
+        out["allreduce"] += _ar(n_tok_loc * 3 * 4, tp)
+        n_red = dp * sp
+        out["allreduce"] += _ar(cfg.num_params() / G * bytes_per, n_red)
+    else:
+        out["allreduce"] += _ar(n_tok_loc * 3 * 4, tp)
+
+    out["total"] = sum(out.values())
+    return out

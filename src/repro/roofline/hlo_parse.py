@@ -1,0 +1,118 @@
+"""Collective-byte accounting from partitioned HLO text.
+
+Collectives inside ``while`` bodies (layer scans, kv-chunk scans) appear once
+in the text but execute trip-count times; this parser is computation-aware:
+it builds per-computation byte totals, resolves ``while`` ops to their body
+and condition computations, extracts the trip count from the condition's
+loop-bound constant, and multiplies recursively."""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+_CALL_RE = re.compile(r"(?:body|condition|to_apply|called_computations=\{)"
+                      r"=?%?([\w.\-]+)")
+
+
+def _result_bytes(rhs: str, kind: str) -> int:
+    head = rhs.split(kind)[0]
+    n = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        m = 1
+        for d in dims.split(","):
+            if d:
+                m *= int(d)
+        n += m * _DTYPE_BYTES[dt]
+    return n
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", s)
+        if m and not s.lstrip().startswith("ROOT"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if s.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(s.strip())
+    return comps
+
+
+def _trip_count(lines) -> int:
+    """Largest s32 constant in a while-condition computation ~ loop bound."""
+    best = 1
+    for s in lines:
+        for m in re.finditer(r"constant\((\d+)\)", s):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_hlo(text: str) -> Tuple[int, Dict[str, int], int]:
+    comps = _split_computations(text)
+    memo: Dict[str, Tuple[int, Dict[str, int], int]] = {}
+
+    def visit(name: str):
+        if name in memo:
+            return memo[name]
+        per = {k: 0 for k in _COLL}
+        count = 0
+        total = 0
+        for s in comps.get(name, ()):
+            m = re.match(r"^(?:ROOT\s+)?[%\w.\-]+\s*=\s*(.*)$", s)
+            if not m:
+                continue
+            rhs = m.group(1)
+            kind = next((k for k in _COLL
+                         if f" {k}(" in rhs or f" {k}-start(" in rhs), None)
+            if kind is not None:
+                b = _result_bytes(rhs, kind)
+                per[kind] += b
+                total += b
+                count += 1
+            if " while(" in rhs:
+                body = re.search(r"body=%?([\w.\-]+)", rhs)
+                cond = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if body:
+                    bt, bper, bc = visit(body.group(1))
+                    trips = _trip_count(comps.get(cond.group(1), ())) if cond else 1
+                    total += bt * trips
+                    count += bc * trips
+                    for k in _COLL:
+                        per[k] += bper[k] * trips
+            else:
+                for cm in re.finditer(
+                        r"(?:to_apply|body|condition)=%?([\w.\-]+)", rhs):
+                    ct, cper, cc = visit(cm.group(1))
+                    total += ct
+                    count += cc
+                    for k in _COLL:
+                        per[k] += cper[k]
+        memo[name] = (total, per, count)
+        return memo[name]
+
+    # entry computation: the one containing " ENTRY" marker or named main
+    entry = None
+    for line in text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        for n in comps:
+            if "main" in n:
+                entry = n
+                break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return visit(entry) if entry else (0, {k: 0 for k in _COLL}, 0)

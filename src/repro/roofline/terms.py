@@ -1,0 +1,35 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e constants)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+    hbm_bytes: float
+
+
+V5E = Hardware("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
+               hbm_bytes=16 * 2 ** 30)
+
+H200 = Hardware("h200-fp8", peak_flops=1979e12, hbm_bw=4.8e12,
+                ici_bw=450e9, hbm_bytes=141 * 2 ** 30)
+
+
+def roofline_terms(flops_per_dev, hbm_bytes_per_dev, coll_bytes_per_dev,
+                   hw: Hardware = V5E):
+    """The three times (seconds) + dominant term."""
+    t_c = flops_per_dev / hw.peak_flops
+    t_m = hbm_bytes_per_dev / hw.hbm_bw
+    t_x = coll_bytes_per_dev / hw.ici_bw
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    bound = max(t_c, t_m, t_x)
+    return {
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom[1], "t_bound": bound,
+        "roofline_fraction": (t_c / bound if bound > 0 else 0.0),
+    }

@@ -1,0 +1,7 @@
+from .costmodel import CostModel, Strategy
+from .simulator import ServeSim, SimRequest, simulate
+from .traces import bursty_trace, azure_code_trace, mooncake_conv_trace, uniform_trace
+
+__all__ = ["CostModel", "Strategy", "ServeSim", "SimRequest", "simulate",
+           "bursty_trace", "azure_code_trace", "mooncake_conv_trace",
+           "uniform_trace"]

@@ -1,0 +1,132 @@
+"""Roofline-based per-iteration cost model for the serving simulator.
+
+The same three terms as §Roofline (compute / HBM / interconnect), evaluated
+per engine iteration for a given parallelism strategy. With the paper's
+H200 constants it reproduces the paper's latency/throughput comparisons;
+with V5E constants it predicts the TPU deployment the dry-run targets.
+
+Strategies over an N-chip group:
+  dp    — N independent replicas (full weights each, no collectives)
+  tp    — weights and attention split N ways; 2 all-reduces per layer
+  sp    — Ulysses: sequence split N ways; fused a2a per layer (1/N volume)
+  shift — per-iteration argmin(tp, sp)   (paper Algorithm 2)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.roofline.terms import Hardware, V5E
+
+
+@dataclass(frozen=True)
+class Strategy:
+    kind: str          # dp | tp | sp | shift
+    n: int = 8         # chips in the group
+
+
+@dataclass
+class CostModel:
+    cfg: object                       # ModelConfig
+    hw: Hardware = V5E
+    overhead_s: float = 0.004         # engine/runtime overhead per iteration
+    mfu: float = 0.6                  # achievable fraction of peak FLOP/s
+    bw_eff: float = 0.8               # achievable fraction of HBM bandwidth
+    ici_eff: float = 0.7
+
+    # ------------------------------------------------------------ primitives
+    def _flops(self, n_tokens: int, ctx: int) -> float:
+        c = self.cfg
+        f = 2.0 * c.active_params() * n_tokens
+        # attention reads the KV context
+        n_attn = sum(1 for k in c.layer_kinds if k in
+                     ("attn", "moe", "dec", "enc"))
+        n_loc = sum(1 for k in c.layer_kinds if k == "local")
+        dh = c.head_dim
+        f += 4.0 * n_tokens * ctx * c.num_heads * dh * n_attn
+        f += 4.0 * n_tokens * min(ctx, c.local_window or ctx) \
+            * c.num_heads * dh * n_loc
+        return f
+
+    def _weight_bytes(self) -> float:
+        return 2.0 * self.cfg.active_params()
+
+    def _kv_bytes_per_tok(self) -> float:
+        c = self.cfg
+        if c.mla is not None:
+            per = c.mla.cache_dim
+        else:
+            per = 2 * c.num_kv_heads * c.head_dim
+        n_cached = sum(1 for k in c.layer_kinds
+                       if k in ("attn", "local", "moe", "dec"))
+        return 2.0 * per * n_cached
+
+    def _comm_bytes(self, n_tokens: int, strat: Strategy) -> float:
+        """Per-device collective bytes for one iteration (paper Table 2)."""
+        c = self.cfg
+        n = strat.n
+        L = c.num_layers
+        d = c.d_model
+        tok_bytes = n_tokens * d * 2
+        if strat.kind == "dp" or n == 1:
+            return 0.0
+        if strat.kind == "tp":
+            # 2 ring all-reduces per layer over the full activations
+            return L * 2 * 2 * tok_bytes * (n - 1) / n
+        if strat.kind == "sp":
+            # fused qkv a2a + inverse: each device exchanges its local shard
+            return L * 2 * (tok_bytes / n) * (n - 1) / n * \
+                (1 + 2 * c.num_kv_heads / max(c.num_heads, 1))
+        raise ValueError(strat.kind)
+
+    # ------------------------------------------------------------ iterations
+    COLL_LATENCY = 5e-6               # per-collective launch/hop latency
+
+    def iteration_time(self, n_prefill: int, n_decode: int, ctx: int,
+                       strat: Strategy) -> float:
+        """One engine iteration with n_prefill chunk tokens + n_decode
+        decode tokens against average context ctx.
+
+        The strategy asymmetries follow the paper (Tables 1-2):
+          tp — weights sharded n ways; all-reduce on the critical path
+          sp — tokens sharded n ways but weights REPLICATED (DP-like decode:
+               every rank streams the full weights); a2a volume ~1/n of TP;
+               small batches pad to a multiple of n (§3.2.1)
+          dp — per-replica: no sharding at all."""
+        n = strat.n
+        tokens = n_prefill + n_decode
+        if tokens == 0:
+            return 0.0
+        if strat.kind == "dp":
+            tok_shard, w_shard = 1, 1
+        elif strat.kind == "sp":
+            tokens = -(-tokens // n) * n          # load-balance padding
+            tok_shard, w_shard = n, 1             # weights replicated!
+        else:                                     # tp
+            tok_shard, w_shard = n, n
+
+        f = self._flops(n_prefill, ctx) + self._flops(n_decode, ctx)
+        t_c = f / tok_shard / (self.hw.peak_flops * self.mfu)
+        per_dev_tokens = max(tokens / tok_shard, 1)
+        util = min(1.0, per_dev_tokens / 128.0) ** 0.25
+
+        # weights stream once per iteration; KV cache sharded by heads
+        # (invariant layout) in both tp and sp -> /n
+        kv_shard = 1 if strat.kind == "dp" else n
+        w = self._weight_bytes() / w_shard
+        kv_read = self._kv_bytes_per_tok() * ctx / kv_shard \
+            * (n_decode + 0.5 * (1 if n_prefill else 0))
+        t_m = (w + kv_read) / (self.hw.hbm_bw * self.bw_eff)
+
+        x = self._comm_bytes(tokens, strat)
+        t_x = x / (self.hw.ici_bw * self.ici_eff)
+        n_coll = 0 if strat.kind == "dp" or n == 1 else 2 * self.cfg.num_layers
+        t_x += n_coll * self.COLL_LATENCY
+        # collectives sit on the critical path between layers (not
+        # overlapped) — the paper's TP throughput penalty
+        return max(t_c / util, t_m) + t_x + self.overhead_s
+
+    def best_config(self, n_prefill: int, n_decode: int, ctx: int, n: int):
+        """Shift decision = argmin over {sp, tp} (AdaptivePolicy)."""
+        t_sp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("sp", n))
+        t_tp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("tp", n))
+        return ("sp", t_sp) if t_sp <= t_tp else ("tp", t_tp)

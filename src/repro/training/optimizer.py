@@ -1,0 +1,142 @@
+"""AdamW with ZeRO-1 optimizer-state sharding.
+
+Optimizer moments are sharded over the data-parallel axes *on top of* each
+parameter's own (tp/ep) sharding: per leaf, the first dimension whose spec
+entry is free and divisible by the dp degree gets the dp axes prepended.
+Inside the shard_map train step each rank updates only its moment slice and
+all-gathers the resulting delta (classic ZeRO-1)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import Layout, joint_axis_index
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: object = jnp.float32   # bf16 halves optimizer memory
+
+
+def _zero1_dim(spec: P, shape, dp: int, dp_axes=()):
+    """Index of the dim to additionally shard over dp (or None). Leaves that
+    already shard over a dp axis (pod-scale expert stacks) are skipped."""
+    if dp <= 1:
+        return None
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a is not None:
+                used.add(a)
+    if used & set(dp_axes):
+        return None
+    for i, (e, s) in enumerate(zip(entries, shape)):
+        if e is None and s % dp == 0 and s >= dp:
+            return i
+    return None
+
+
+def opt_state_specs(param_specs, param_shapes, lay: Layout):
+    """Moment specs: param spec + dp axes on the ZeRO dim."""
+    dp_ax = tuple(lay.dp_axes)
+    dp = lay.dp
+
+    def one(spec, sd):
+        shape = sd.shape if hasattr(sd, "shape") else sd
+        i = _zero1_dim(spec, shape, dp, dp_ax)
+        if i is None or not dp_ax:
+            return {"m": spec, "v": spec}
+        entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+        entries[i] = dp_ax if entries[i] is None else entries[i]
+        s2 = P(*entries)
+        return {"m": s2, "v": s2}
+
+    return jax.tree.map(one, param_specs, param_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    z = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree, extra_axes):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    if extra_axes:
+        sq = jax.lax.psum(sq, extra_axes)
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, m, v, step, cfg: AdamWConfig, lay: Layout,
+                 param_specs=None, tp_shard_axes=None):
+    """One AdamW step *inside shard_map*. m/v arrive as local ZeRO slices;
+    grads are full local shards. Per leaf: slice grad by dp rank, update
+    moments, all-gather delta over dp.
+
+    tp_shard_axes: axes over which param shards are distinct (so the global
+    grad-norm psum skips them)."""
+    dp_ax = tuple(lay.dp_axes)
+    dp = lay.dp
+    rank = joint_axis_index(dp_ax, dict(lay.axis_sizes)) if dp_ax else 0
+    step = step + 1
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    # global grad norm: local shards are disjoint over tp/ep axes
+    gn = _global_norm(grads, tuple(tp_shard_axes or ()))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+
+    specs = param_specs
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    flat_s = (jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+              if specs is not None else [P()] * len(flat_p))
+
+    new_p, new_m, new_v = [], [], []
+    for p0, g0, m0, v0, sp in zip(flat_p, flat_g, flat_m, flat_v, flat_s):
+        g0 = g0.astype(jnp.float32) * scale
+        zdim = None
+        if dp > 1 and m0.shape != g0.shape:
+            # find the dp-sliced dim (local moment is 1/dp of the grad there)
+            for i, (a, b) in enumerate(zip(m0.shape, g0.shape)):
+                if a != b:
+                    zdim = i
+                    break
+        if zdim is not None:
+            blk = m0.shape[zdim]
+            gs = jax.lax.dynamic_slice_in_dim(g0, rank * blk, blk, axis=zdim)
+        else:
+            gs = g0
+        mf = m0.astype(jnp.float32)
+        vf = v0.astype(jnp.float32)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gs
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(gs)
+        ps = (jax.lax.dynamic_slice_in_dim(p0, rank * m0.shape[zdim],
+                                           m0.shape[zdim], axis=zdim)
+              if zdim is not None else p0)
+        delta = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps) \
+            + cfg.weight_decay * ps.astype(jnp.float32)
+        if zdim is not None:
+            delta = jax.lax.all_gather(delta, dp_ax, axis=zdim, tiled=True)
+        new_p.append((p0.astype(jnp.float32) - cfg.lr * delta).astype(p0.dtype))
+        new_m.append(mf.astype(cfg.state_dtype))
+        new_v.append(vf.astype(cfg.state_dtype))
+
+    return (jax.tree.unflatten(treedef, new_p),
+            jax.tree.unflatten(treedef, new_m),
+            jax.tree.unflatten(treedef, new_v), step)

@@ -1,0 +1,54 @@
+"""Head planner: exhaustive alignment + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.parallel.heads import plan_heads
+
+ARCH_CASES = [(32, 8), (16, 8), (28, 4), (12, 2), (16, 1), (40, 8), (12, 12),
+              (64, 8), (32, 4), (128, 128)]
+
+
+def _check_alignment(hq, hkv, G, tp):
+    p = plan_heads(hq, hkv, G, tp)
+    assert p.h_q_pad % G == 0
+    assert p.kv_slots_total == G * p.kv_per_rank
+    q_per_kv = hq // hkv
+    q2kv = {s: (o // q_per_kv if o >= 0 else None)
+            for s, o in enumerate(p.q_slot_to_orig)}
+    for g in range(G):
+        kvs = [(g * p.kv_per_rank + c) * p.h_kv_pad // p.kv_slots_total
+               for c in range(p.kv_per_rank)]
+        kv_origs = {p.kv_slot_to_orig[k] for k in kvs}
+        for s in range(g * p.q_per_rank, (g + 1) * p.q_per_rank):
+            need = q2kv[s]
+            if need is not None:
+                assert need in kv_origs, (hq, hkv, G, tp, g, s)
+    # every real q head appears exactly once
+    reals = [o for o in p.q_slot_to_orig if o >= 0]
+    assert sorted(reals) == list(range(hq))
+    # a2a send map indices stay within the tp-local kv shard
+    sp = G // tp
+    m = p.a2a_send_map(sp)
+    exp = max(p.h_kv_pad, tp)
+    assert m.shape == (tp, sp * p.kv_per_rank)
+    assert m.max() < exp // tp and m.min() >= 0
+
+
+@pytest.mark.parametrize("hq,hkv", ARCH_CASES)
+@pytest.mark.parametrize("G", [1, 2, 4, 8, 16])
+def test_arch_cases(hq, hkv, G):
+    for tp in (d for d in (1, 2, 4, 8, 16) if G % d == 0):
+        _check_alignment(hq, hkv, G, tp)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 6), st.integers(0, 4), st.integers(0, 4),
+       st.integers(0, 4))
+def test_property_random(kv_exp, ratio_exp, g_exp, tp_sel):
+    hkv = 2 ** kv_exp
+    hq = hkv * 2 ** ratio_exp
+    G = 2 ** g_exp
+    tps = [d for d in (1, 2, 4, 8, 16) if G % d == 0]
+    tp = tps[tp_sel % len(tps)]
+    _check_alignment(hq, hkv, G, tp)

@@ -1,0 +1,62 @@
+"""KV-cache invariance: head-order math (paper Fig. 6) + structural
+sharding-equality checks + hypothesis property over (sp, tp)."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from conftest import make_mesh, reduced_cfg
+from repro.core.invariance import (head_order_base, head_order_shift,
+                                   cache_specs_equal, verify_invariance)
+from repro.models.model import Model
+from repro.parallel import Layout
+
+
+def test_paper_example():
+    # paper §3.3.1: base (SP=3, TP=2) -> SP_TP group [0, 2, 4, 1, 3, 5]
+    assert head_order_base(3, 2) == [0, 2, 4, 1, 3, 5]
+    assert head_order_shift(3, 2) == head_order_base(3, 2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from([1, 2, 3, 4, 6, 8]), st.sampled_from([1, 2, 3, 4]))
+def test_head_order_is_permutation(sp, tp):
+    order = head_order_base(sp, tp)
+    assert sorted(order) == list(range(sp * tp))
+
+
+@pytest.mark.parametrize("shape,sp,tp", [((1, 2, 2), 2, 2), ((2, 2, 2), 2, 2),
+                                         ((1, 4, 2), 4, 2)])
+def test_partition_spec_matches_head_order(shape, sp, tp):
+    """P((tp, sp)) must place head block j*sp+i on device (i, j) — the JAX
+    expression of the paper's SP_TP group ordering."""
+    mesh = make_mesh(shape)
+    H = sp * tp * 2
+    sh = NamedSharding(mesh, P(None, ("tp", "sp")))
+    m = sh.devices_indices_map((4, H))
+    per = H // (sp * tp)
+    for i in range(sp):
+        for j in range(tp):
+            d = mesh.devices[0, i, j]
+            sl = m[d][1]
+            assert sl.start == (j * sp + i) * per
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "qwen2-1.5b", "deepseek-v3-671b",
+                                  "mamba2-1.3b", "recurrentgemma-9b",
+                                  "whisper-small"])
+def test_cache_invariance_structural(arch, mesh122):
+    cfg = reduced_cfg(arch)
+    lay = Layout.from_mesh(mesh122, dp=("data",), sp=("sp",), tp=("tp",))
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh122)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh122)
+    shapes = jax.tree.leaves(mb.abstract_cache(8, 32))
+    sb = jax.tree.leaves(mb.cache_specs(), is_leaf=lambda x: isinstance(x, P))
+    ss = jax.tree.leaves(ms.cache_specs(), is_leaf=lambda x: isinstance(x, P))
+    assert verify_invariance(shapes, sb, ss, mesh122)
+
+
+def test_specs_not_equal_when_wrong_order(mesh122):
+    a = NamedSharding(mesh122, P(None, ("tp", "sp")))
+    b = NamedSharding(mesh122, P(None, ("sp", "tp")))
+    assert not cache_specs_equal((4, 8), a, b)

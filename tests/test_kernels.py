@@ -1,0 +1,98 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
++ hypothesis property for the decode length masking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,causal,dtype", [
+    (1, 128, 128, 4, 2, 64, True, jnp.float32),
+    (2, 256, 256, 4, 1, 128, True, jnp.float32),
+    (1, 128, 256, 2, 2, 64, False, jnp.float32),
+    (1, 256, 256, 8, 2, 128, True, jnp.bfloat16),
+])
+def test_flash_attention(B, Sq, Skv, Hq, Hkv, D, causal, dtype):
+    ks = jax.random.split(jax.random.key(Sq + Hq + D), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+    want = R.flash_attention_ref(qf, kf, vf, causal=causal) \
+        .reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [(4, 512, 8, 2, 64),
+                                          (2, 1024, 4, 4, 128),
+                                          (8, 512, 16, 1, 64)])
+def test_decode_attention(B, S, Hq, Hkv, D):
+    ks = jax.random.split(jax.random.key(S + Hq), 4)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lens = jax.random.randint(ks[3], (B,), 1, S)
+    out = ops.decode_attention(q, k, v, lens)
+    want = R.decode_attention_ref(q.reshape(B, Hkv, Hq // Hkv, D),
+                                  k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3),
+                                  lens).reshape(B, 1, Hq, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 511))
+def test_decode_attention_length_property(valid_len):
+    """Tokens past ``lens`` must not influence the output."""
+    B, S, Hq, Hkv, D = 1, 512, 2, 1, 64
+    ks = jax.random.split(jax.random.key(7), 4)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lens = jnp.array([valid_len], jnp.int32)
+    out1 = ops.decode_attention(q, k, v, lens)
+    k2 = k.at[:, valid_len:].set(99.0)
+    v2 = v.at[:, valid_len:].set(-99.0)
+    out2 = ops.decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("N,L,hd,ds", [(6, 64, 32, 16), (2, 128, 64, 32)])
+def test_ssd_chunk(N, L, hd, ds):
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = jax.random.normal(ks[0], (N, L, hd), jnp.float32)
+    b = jax.random.normal(ks[1], (N, L, ds), jnp.float32) * 0.3
+    c = jax.random.normal(ks[2], (N, L, ds), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (N, L, 1), jnp.float32))
+    cum = jnp.cumsum(-dt * 0.5, axis=1)
+    y, stc, dec = ops.ssd_chunk(x, b, c, dt, cum)
+    wy, wst, wdec = R.ssd_chunk_ref(x, b, c, dt, cum)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(wy), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(stc), np.asarray(wst), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(wdec), atol=1e-5,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape,dtype", [((37, 128), jnp.float32),
+                                         ((512, 256), jnp.bfloat16),
+                                         ((3, 7, 64), jnp.float32)])
+def test_rmsnorm(shape, dtype):
+    x = jax.random.normal(jax.random.key(1), shape, dtype)
+    s = jnp.ones((shape[-1],), dtype)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(ops.rmsnorm(x, s), np.float32),
+                               np.asarray(R.rmsnorm_ref(x, s), np.float32),
+                               atol=tol, rtol=tol)

@@ -1,0 +1,65 @@
+"""Simulator / cost model: the paper's qualitative claims (Table 1) must
+hold as invariants of the roofline cost model, and the sim must be
+deterministic."""
+import pytest
+
+from repro.configs import get_config
+from repro.roofline.terms import H200
+from repro.sim import simulate, bursty_trace, uniform_trace
+from repro.sim.costmodel import CostModel, Strategy
+
+
+@pytest.fixture(scope="module")
+def cm():
+    return CostModel(get_config("llama-70b"), hw=H200)
+
+
+def test_table1_ttft_ordering(cm):
+    """TTFT: SP best, DP worst (paper Table 1)."""
+    t = {s: cm.iteration_time(4096, 0, 4096, Strategy(s, 8))
+         for s in ("dp", "tp", "sp")}
+    assert t["sp"] < t["tp"] < t["dp"]
+
+
+def test_table1_tpot_ordering(cm):
+    """TPOT (low traffic): TP best; SP ~ DP (weights replicated)."""
+    t = {s: cm.iteration_time(0, 1, 4096, Strategy(s, 8))
+         for s in ("dp", "tp", "sp")}
+    assert t["tp"] < t["sp"] and t["tp"] < t["dp"]
+    assert abs(t["sp"] - t["dp"]) / t["dp"] < 0.25
+
+
+def test_comm_volume_scaling(cm):
+    """Paper Table 2: TP comm/compute grows with degree; SP stays ~const."""
+    r2 = cm._comm_bytes(4096, Strategy("tp", 2)) / \
+        cm._comm_bytes(4096, Strategy("sp", 2))
+    r8 = cm._comm_bytes(4096, Strategy("tp", 8)) / \
+        cm._comm_bytes(4096, Strategy("sp", 8))
+    assert r8 > r2 > 1
+
+
+def test_shift_is_argmin(cm):
+    for (np_, nd, ctx) in [(4096, 0, 4096), (0, 1, 4096), (0, 256, 8192)]:
+        kind, t = cm.best_config(np_, nd, ctx, 8)
+        t_sp = cm.iteration_time(np_, nd, ctx, Strategy("sp", 8))
+        t_tp = cm.iteration_time(np_, nd, ctx, Strategy("tp", 8))
+        assert t == min(t_sp, t_tp)
+
+
+def test_bursty_reproduces_table5():
+    cfg = get_config("llama-70b")
+    res = {s: simulate(cfg, bursty_trace(), s, hw=H200)
+           for s in ("dp", "tp", "sp", "shift")}
+    # paper Table 5: shift ~lowest TTFT & TPOT; peak tput >> TP, ~< DP
+    assert res["shift"]["tpot_p50_ms"] <= res["dp"]["tpot_p50_ms"]
+    assert res["shift"]["ttft_p50_ms"] <= res["tp"]["ttft_p50_ms"]
+    assert res["shift"]["peak_tput_tok_s"] >= 1.2 * res["tp"]["peak_tput_tok_s"]
+    assert res["dp"]["peak_tput_tok_s"] >= res["shift"]["peak_tput_tok_s"]
+
+
+def test_sim_deterministic():
+    cfg = get_config("qwen-32b")
+    tr = uniform_trace(n=32, rate=4.0)
+    a = simulate(cfg, tr, "shift", hw=H200)
+    b = simulate(cfg, tr, "shift", hw=H200)
+    assert a == b

@@ -32,6 +32,13 @@ def main(emit=print):
     g = jax.jit(lambda a, b, c, l: R.decode_attention_ref(a, b, c, l))
     emit(f"kernel_ref,decode_1k,{_t(g, qd, kd, kd, lens):.0f},us_per_call")
 
+    bs, nmax, nblocks = 16, 64, 512
+    kpool = jax.random.normal(k, (nblocks, bs, 4, 64), jnp.float32)
+    bt = jax.random.randint(k, (8, nmax), 1, nblocks).astype(jnp.int32)
+    gp = jax.jit(lambda a, b, c, t, l: R.paged_decode_attention_ref(a, b, c, t, l))
+    emit(f"kernel_ref,paged_decode_1k,"
+         f"{_t(gp, qd, kpool, kpool, bt, lens):.0f},us_per_call")
+
     x = jax.random.normal(k, (12, 64, 32), jnp.float32)
     b = jax.random.normal(k, (12, 64, 16), jnp.float32) * 0.3
     dt = jax.nn.softplus(jax.random.normal(k, (12, 64, 1), jnp.float32))

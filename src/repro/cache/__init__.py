@@ -1,0 +1,21 @@
+"""Paged KV-cache management (vLLM-style, shard-invariant).
+
+The physical KV pool is a pool of fixed-size blocks
+``[num_blocks, block_size, kv_head_slots, head_dim]`` whose *head* dimension
+carries the only model-parallel sharding — ``P(None, None, model_axes,
+None)``.  Because the base (SP,TP) and shift (TP) configurations share the
+same tp-major model group (paper §3.3.1), the byte-range→device map of every
+block is identical under both configs: switching parallelism moves zero
+bytes even though sequences now live in scattered blocks.  Block tables are
+plain replicated int32 indices, so the indirection itself is also
+rank-invariant.
+
+``BlockAllocator`` hands out ref-counted physical blocks from a free list;
+``PagedKVCache`` maps each engine slot to a logical→physical block table.
+Both are host-side (numpy) control-plane objects — the data plane stays in
+jitted model step functions that consume the block table as a device array.
+"""
+from .block_allocator import BlockAllocator, BlockOOM
+from .paged import PagedKVCache, blocks_for_tokens
+
+__all__ = ["BlockAllocator", "BlockOOM", "PagedKVCache", "blocks_for_tokens"]

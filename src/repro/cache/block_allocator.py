@@ -1,0 +1,77 @@
+"""Free-list allocator for physical KV blocks.
+
+Blocks are ref-counted so a future prefix-sharing PR can map one physical
+block into several sequences' block tables (copy-on-write); today every
+block has refcount 1 while mapped.
+
+Physical block 0 is reserved as the *null block*: unallocated block-table
+entries point at it, and batched decode rows for inactive engine slots
+scatter their garbage write there.  It is never handed out, so a stray write
+through a padding entry can never corrupt a live sequence.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List
+
+
+class BlockOOM(Exception):
+    """Raised when an allocation cannot be satisfied from the free list."""
+
+
+class BlockAllocator:
+    NULL_BLOCK = 0
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least the null block plus one"
+        self.num_blocks = num_blocks
+        self._free = deque(range(1, num_blocks))
+        self._refs: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._refs)
+
+    def ref_count(self, block: int) -> int:
+        return self._refs.get(block, 0)
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise BlockOOM(f"need {n} blocks, {len(self._free)} free")
+        out = [self._free.popleft() for _ in range(n)]
+        for b in out:
+            self._refs[b] = 1
+        return out
+
+    def incref(self, block: int):
+        assert block in self._refs, block
+        self._refs[block] += 1
+
+    def decref(self, block: int):
+        assert block in self._refs, block
+        self._refs[block] -= 1
+        if self._refs[block] == 0:
+            del self._refs[block]
+            self._free.append(block)
+
+    def free(self, blocks: List[int]):
+        for b in blocks:
+            self.decref(b)
+
+    # ----------------------------------------------------------- snapshot
+    def state_dict(self) -> dict:
+        return {"num_blocks": self.num_blocks, "free": list(self._free),
+                "refs": dict(self._refs)}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "BlockAllocator":
+        a = cls(state["num_blocks"])
+        a._free = deque(state["free"])
+        a._refs = dict(state["refs"])
+        return a

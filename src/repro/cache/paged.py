@@ -1,0 +1,113 @@
+"""Per-sequence block tables over a shared physical block pool.
+
+``PagedKVCache`` is the control plane of the paged cache: for each engine
+slot it keeps the logical→physical block mapping and the number of mapped
+blocks.  The data plane — the ``[num_blocks, block_size, kv_slots, Dh]``
+pools inside the jitted step functions — is owned by the model/engine; the
+manager only decides *which* physical block backs each logical block.
+
+Why the block layout is shard-invariant (the paper's §3.3.1 condition,
+extended to paging): a block's trailing ``[kv_slots, Dh]`` axes are sharded
+over the tp-major model group exactly like the contiguous cache's head axis,
+and the leading ``[num_blocks, block_size]`` axes are unsharded.  Base
+(SP,TP) and shift (TP) configs therefore assign identical byte ranges of
+every physical block to identical devices, and the block table itself is a
+replicated int32 array — so an SP↔TP switch on a paged cache still moves
+zero bytes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .block_allocator import BlockAllocator, BlockOOM
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Physical blocks needed to hold ``n_tokens`` cache entries (ceil —
+    the last block's tail slots are the paging fragmentation)."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class PagedKVCache:
+    def __init__(self, num_blocks: int, block_size: int, max_seqs: int,
+                 max_blocks_per_seq: int):
+        self.block_size = block_size
+        self.max_seqs = max_seqs
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.allocator = BlockAllocator(num_blocks)
+        # logical block i of slot s lives in physical block table[s, i];
+        # unmapped entries point at the null block (0)
+        self.table = np.zeros((max_seqs, max_blocks_per_seq), np.int32)
+        self.n_mapped = np.zeros((max_seqs,), np.int32)
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_free_blocks(self) -> int:
+        return self.allocator.num_free
+
+    @property
+    def num_used_blocks(self) -> int:
+        return self.allocator.num_used
+
+    def capacity_tokens(self, seq: int) -> int:
+        """Tokens the currently mapped blocks of ``seq`` can hold."""
+        return int(self.n_mapped[seq]) * self.block_size
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return blocks_for_tokens(n_tokens, self.block_size) \
+            <= self.allocator.num_free
+
+    def seq_blocks(self, seq: int):
+        return [int(b) for b in self.table[seq, :self.n_mapped[seq]]]
+
+    # ------------------------------------------------------------ alloc/free
+    def ensure(self, seq: int, n_tokens: int) -> bool:
+        """Grow ``seq``'s table to cover ``n_tokens`` positions. Returns
+        False (state unchanged) when the free list cannot satisfy it."""
+        need = blocks_for_tokens(n_tokens, self.block_size)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"sequence needs {need} blocks > max_blocks_per_seq="
+                f"{self.max_blocks_per_seq}")
+        grow = need - int(self.n_mapped[seq])
+        if grow <= 0:
+            return True
+        try:
+            new = self.allocator.alloc(grow)
+        except BlockOOM:
+            return False
+        self.table[seq, self.n_mapped[seq]:need] = new
+        self.n_mapped[seq] = need
+        return True
+
+    def free_seq(self, seq: int):
+        self.allocator.free(self.seq_blocks(seq))
+        self.table[seq, :] = BlockAllocator.NULL_BLOCK
+        self.n_mapped[seq] = 0
+
+    def fork(self, src: int, dst: int):
+        """Share src's blocks into dst (ref-counted) — prefix-sharing hook."""
+        assert self.n_mapped[dst] == 0, "fork into a mapped slot"
+        for b in self.seq_blocks(src):
+            self.allocator.incref(b)
+        n = int(self.n_mapped[src])
+        self.table[dst, :n] = self.table[src, :n]
+        self.n_mapped[dst] = n
+
+    # ----------------------------------------------------------- snapshot
+    def state_dict(self) -> dict:
+        return {"block_size": self.block_size,
+                "max_blocks_per_seq": self.max_blocks_per_seq,
+                "table": self.table.copy(),
+                "n_mapped": self.n_mapped.copy(),
+                "allocator": self.allocator.state_dict()}
+
+    @classmethod
+    def from_state(cls, state: dict) -> "PagedKVCache":
+        alloc_state = state["allocator"]
+        kv = cls(alloc_state["num_blocks"], state["block_size"],
+                 state["table"].shape[0], state["max_blocks_per_seq"])
+        kv.table = state["table"].copy()
+        kv.n_mapped = state["n_mapped"].copy()
+        kv.allocator = BlockAllocator.from_state(alloc_state)
+        return kv

@@ -8,6 +8,11 @@ expressed by sharding head dimensions over the axis tuple ``(tp, sp)``
 byte-range → device map of the cache sharding must be identical under both
 configurations, so switching configs shares the cache with zero data
 movement.
+
+``verify_paged_invariance`` extends the check to the paged cache
+(``repro.cache``): the per-block byte→device map must be config-invariant
+AND the block table must be replicated across the model group, so neither
+the pool bytes nor the indirection move on an SP↔TP switch.
 """
 from __future__ import annotations
 
@@ -49,7 +54,10 @@ def cache_specs_equal(shape, sharding_a: NamedSharding, sharding_b: NamedShardin
 
 def verify_invariance(cache_tree_shapes, base_specs, shift_specs, mesh) -> bool:
     """Check every leaf of the KV-cache pytree: base vs shift sharding must
-    map identical index ranges to identical devices."""
+    map identical index ranges to identical devices. Works unchanged for the
+    paged block pools ([num_blocks, block_size, slots, Dh]): only the head
+    slot axis is sharded, so the per-block byte→device map is what is
+    compared."""
     shapes = jax.tree.leaves(cache_tree_shapes)
     specs_a = jax.tree.leaves(base_specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
     specs_b = jax.tree.leaves(shift_specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
@@ -61,3 +69,38 @@ def verify_invariance(cache_tree_shapes, base_specs, shift_specs, mesh) -> bool:
         if not cache_specs_equal(shape, a, b):
             return False
     return True
+
+
+def replicated_over_axes(shape, spec, mesh, axes: Sequence[str]) -> bool:
+    """True when every device along ``axes`` holds the full array (the other
+    mesh axes may shard it)."""
+    sh = NamedSharding(mesh, spec)
+    m = sh.devices_indices_map(tuple(shape))
+    names = list(mesh.axis_names)
+    groups = {}
+    for idx in np.ndindex(mesh.devices.shape):
+        key = tuple(i for n, i in zip(names, idx) if n not in axes)
+        groups.setdefault(key, []).append(m[mesh.devices[idx]])
+    return all(all(s == g[0] for s in g) for g in groups.values())
+
+
+def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
+                            table_shape, base_table_spec, shift_table_spec,
+                            mesh, model_axes: Sequence[str]) -> bool:
+    """Paged extension of the §3.3.1 check. Zero-copy SP↔TP switching over a
+    paged cache needs BOTH halves:
+
+    1. every physical block pool leaf maps identical byte ranges to
+       identical devices under base and shift (the contiguous-cache
+       condition, applied per block), and
+    2. the block table is replicated across the model group in both
+       configs — every rank follows the same logical→physical indirection,
+       so the control plane is also untouched by a switch."""
+    if not verify_invariance(pool_shapes, base_specs, shift_specs, mesh):
+        return False
+    for spec in (base_table_spec, shift_table_spec):
+        if not replicated_over_axes(table_shape, spec, mesh, model_axes):
+            return False
+    a = NamedSharding(mesh, base_table_spec)
+    b = NamedSharding(mesh, shift_table_spec)
+    return cache_specs_equal(table_shape, a, b)

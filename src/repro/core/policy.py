@@ -12,10 +12,15 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+# One constant for the paper's batched-token shift threshold — previously
+# ThresholdPolicy (64) and EngineConfig (32) disagreed; the engine always
+# passed its own value, so 32 is the behavior-preserving choice.
+DEFAULT_SHIFT_THRESHOLD = 32
+
 
 @dataclass(frozen=True)
 class ThresholdPolicy:
-    threshold: int = 64           # batched tokens per iteration
+    threshold: int = DEFAULT_SHIFT_THRESHOLD   # batched tokens per iteration
 
     def use_base(self, n_tokens: int, n_prefill_tokens: int = 0) -> bool:
         return n_tokens > self.threshold

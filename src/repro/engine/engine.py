@@ -4,7 +4,21 @@ One deployment holds TWO compiled program sets over the SAME weights and ONE
 KV cache (paper §3.3): the *base* config (SP,TP — TTFT/throughput-optimal)
 and the *shift* config (pure TP — TPOT-optimal). Each iteration the
 controller counts batched tokens and picks the config (Algorithm 2); the
-cache shardings are structurally identical, so switching moves zero bytes.
+cache shardings are structurally identical, so switching configs moves zero
+bytes.
+
+The KV cache is *paged* (vLLM-style) whenever the architecture allows it:
+sequences map to fixed-size blocks of a shared physical pool through a
+block table (``repro.cache``), so HBM is committed at block granularity
+instead of a fixed ``[max_slots, s_max]`` rectangle. The per-block layout
+keeps the head axis sharded over the tp-major model group — identical in
+base and shift configs — so paging preserves the zero-copy SP↔TP switch.
+Admission control holds requests in the queue until their prompt fits in
+free blocks, and decode-time block exhaustion preempts the least-recently
+scheduled request back to the queue (recompute-style, its blocks are
+freed), which bounds memory while guaranteeing progress. Architectures
+with non-pageable state (MLA latents, ring buffers, recurrent state) fall
+back to the contiguous cache and pure slot admission.
 
 Scheduling is continuous batching with chunked prefill (Sarathi-style; the
 paper runs its experiments with this combination): each iteration is either
@@ -14,14 +28,15 @@ the paper's per-shape CUDA-graph capture."""
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import ThresholdPolicy
+from repro.cache import PagedKVCache, blocks_for_tokens
+from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
 from repro.models.model import Model
 from .request import Request
 
@@ -29,10 +44,18 @@ from .request import Request
 @dataclass
 class EngineConfig:
     max_slots: int = 8               # concurrent sequences (global batch)
-    s_max: int = 256                 # cache length
+    s_max: int = 256                 # max cache length per sequence
     prefill_chunk: int = 64
-    threshold: int = 32              # shift threshold (batched tokens)
+    threshold: int = DEFAULT_SHIFT_THRESHOLD   # shift threshold (tokens)
     eos_id: int = -1                 # -1: never stop early
+    # paged KV cache -------------------------------------------------------
+    paged: Optional[bool] = None     # None: auto (paged when supported)
+    block_size: int = 16             # tokens per KV block
+    num_blocks: int = 0              # physical blocks incl. the null block;
+    #                                  0: auto-size so max_slots×s_max fits
+    #                                  (no memory pressure). Smaller values
+    #                                  oversubscribe and exercise admission
+    #                                  control + preemption.
 
 
 class ShiftEngine:
@@ -49,37 +72,112 @@ class ShiftEngine:
         self.policy = policy or ThresholdPolicy(cfg.threshold)
         self.now = now
 
-        self.cache = model_base.init_cache(cfg.max_slots, cfg.s_max)
+        can_page = model_base.supports_paged and model_base.lay.dp <= 1
+        if cfg.paged and not can_page:
+            raise ValueError(
+                f"config {self.mcfg.name} cannot use a paged KV cache "
+                "(non-pageable layer kinds or dp-sharded engine)")
+        self.paged = can_page if cfg.paged is None else cfg.paged
+        if self.paged:
+            nmax = blocks_for_tokens(cfg.s_max, cfg.block_size)
+            num_blocks = cfg.num_blocks or cfg.max_slots * nmax + 1
+            self.kv = PagedKVCache(num_blocks, cfg.block_size,
+                                   cfg.max_slots, nmax)
+            self.cache = model_base.init_paged_cache(num_blocks,
+                                                     cfg.block_size)
+        else:
+            self.kv = None
+            self.cache = model_base.init_cache(cfg.max_slots, cfg.s_max)
         self.lens = np.zeros((cfg.max_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * cfg.max_slots
         self.queue: List[Request] = []
         self.step_count = 0
+        self.preemptions = 0
         self.config_trace: List[str] = []
         self.step_times: List[float] = []
 
-        self._prefill = {"base": jax.jit(model_base.prefill_fn(), donate_argnums=(1,)),
-                         "shift": jax.jit(model_shift.prefill_fn(), donate_argnums=(1,))}
-        self._decode = {"base": jax.jit(model_base.decode_fn(True), donate_argnums=(1,)),
-                        "shift": jax.jit(model_shift.decode_fn(True), donate_argnums=(1,))}
+        pg = self.paged
+        self._prefill = {
+            "base": jax.jit(model_base.prefill_fn(paged=pg),
+                            donate_argnums=(1,)),
+            "shift": jax.jit(model_shift.prefill_fn(paged=pg),
+                             donate_argnums=(1,))}
+        self._decode = {
+            "base": jax.jit(model_base.decode_fn(True, paged=pg),
+                            donate_argnums=(1,)),
+            "shift": jax.jit(model_shift.decode_fn(True, paged=pg),
+                             donate_argnums=(1,))}
 
     # ---------------------------------------------------------------- admin
     def add_request(self, req: Request):
+        worst = len(req.prompt) + req.max_new_tokens
+        if worst > self.cfg.s_max:
+            raise ValueError(f"request {req.rid} exceeds s_max={self.cfg.s_max}")
+        if self.paged and (blocks_for_tokens(worst, self.cfg.block_size)
+                           > self.kv.allocator.num_blocks - 1):
+            raise ValueError(
+                f"request {req.rid} can never fit: needs "
+                f"{blocks_for_tokens(worst, self.cfg.block_size)} blocks, "
+                f"pool has {self.kv.allocator.num_blocks - 1}")
         self.queue.append(req)
 
-    def _assign_slots(self):
+    def _admit(self):
+        """Assign queue slots FCFS. Paged: a request is admitted only when
+        its whole (re)prompt plus one decode token fits in free blocks —
+        the memory-pressure gate that lets arbitrarily many requests queue
+        against a small pool."""
         for req in list(self.queue):
             if req.slot is not None:
                 continue
-            for s, owner in enumerate(self.slot_req):
-                if owner is None:
-                    req.slot = s
-                    self.slot_req[s] = req
-                    self.lens[s] = 0
-                    break
+            slot = next((s for s, owner in enumerate(self.slot_req)
+                         if owner is None), None)
+            if slot is None:
+                break
+            if self.paged and not self.kv.can_allocate(req.total_tokens + 1):
+                break                           # FCFS: no queue-jumping
+            req.slot = slot
+            self.slot_req[slot] = req
+            self.lens[slot] = 0
+            if self.paged:
+                self.kv.ensure(slot, req.total_tokens + 1)
 
     @property
     def active(self) -> List[Request]:
         return [r for r in self.slot_req if r is not None]
+
+    # ----------------------------------------------------- memory pressure
+    def _preempt(self, victim: Request):
+        """Evict a running request back to the queue, freeing its blocks.
+        Recompute-style: its prompt+generated re-prefills on re-admission."""
+        self.kv.free_seq(victim.slot)
+        self.slot_req[victim.slot] = None
+        self.lens[victim.slot] = 0
+        victim.slot = None
+        victim.prefilled = 0
+        victim.num_preemptions += 1
+        self.preemptions += 1
+
+    def _reserve(self, req: Request, n_tokens: int, protect) -> bool:
+        """Grow req's block table to cover n_tokens, LRU-preempting other
+        active requests if the free list runs dry. Returns False when
+        nothing outside ``protect`` can be evicted."""
+        while not self.kv.ensure(req.slot, n_tokens):
+            victims = [a for a in self.active
+                       if a is not req and a not in protect]
+            if not victims:
+                return False
+            self._preempt(min(victims,
+                              key=lambda a: (a.last_used, -a.arrival)))
+        return True
+
+    def _block_tables(self, rows: List[Request]) -> np.ndarray:
+        """Device block-table batch: rows outside this batch stay all-null
+        so their (garbage) scatter lands in the null block."""
+        bt = np.zeros((self.cfg.max_slots, self.kv.max_blocks_per_seq),
+                      np.int32)
+        for r in rows:
+            bt[r.slot] = self.kv.table[r.slot]
+        return bt
 
     # ---------------------------------------------------------------- steps
     def _choose(self, n_tokens: int, n_prefill: int) -> str:
@@ -89,7 +187,8 @@ class ShiftEngine:
         return name
 
     def _run_prefill(self):
-        """One chunked-prefill iteration over slots that still need prompt."""
+        """One chunked-prefill iteration over slots that still need their
+        (re)prompt — after a preemption, prompt+generated re-prefill here."""
         C = self.cfg.prefill_chunk
         todo = [r for r in self.active if not self._prefill_done(r)]
         if not todo:
@@ -102,12 +201,18 @@ class ShiftEngine:
         uniform = self.mcfg.mla is not None
         base_off = None
         for r in todo:
+            if r.slot is None:
+                continue                   # preempted by an earlier reserve
             off = r.prefilled
             if uniform and base_off is not None and off != base_off:
                 continue
-            # the final prompt token is fed through the decode path instead
-            chunk = r.prompt[off:min(off + C, len(r.prompt) - 1)]
+            # the final known token is fed through the decode path instead
+            seq = r.all_tokens()
+            chunk = seq[off:min(off + C, len(seq) - 1)]
             if not chunk:
+                continue
+            if self.paged and not self._reserve(
+                    r, off + len(chunk), protect={rr for rr, _ in rows}):
                 continue
             toks[r.slot, :len(chunk)] = chunk
             offs[r.slot] = off
@@ -119,19 +224,32 @@ class ShiftEngine:
         mode = self._choose(n_tok, n_tok)
         params = self.p_base if mode == "base" else self.p_shift
         extras = self._extras()
-        _, self.cache = self._prefill[mode](
-            params, self.cache, jnp.asarray(toks), jnp.asarray(offs), *extras)
+        args = [jnp.asarray(toks), jnp.asarray(offs)]
+        if self.paged:
+            args.append(jnp.asarray(self._block_tables([r for r, _ in rows])))
+        _, self.cache = self._prefill[mode](params, self.cache, *args,
+                                            *extras)
         for r, n in rows:
             r.prefilled += n
+            r.last_used = self.step_count
             self.lens[r.slot] = r.prefilled
         return True
 
     def _prefill_done(self, r) -> bool:
-        return r.prefilled >= len(r.prompt) - 1
+        return r.prefilled >= r.pos
 
     def _run_decode(self):
         ready = [r for r in self.active
                  if self._prefill_done(r) and not r.done]
+        if self.paged:
+            kept = []
+            for r in ready:
+                if r.slot is None:
+                    continue                   # preempted by an earlier reserve
+                # coverage for the token written this step (position r.pos)
+                if self._reserve(r, r.total_tokens, protect=set(kept)):
+                    kept.append(r)
+            ready = kept
         if not ready:
             return False
         mode = self._choose(len(ready), 0)
@@ -141,18 +259,28 @@ class ShiftEngine:
         for r in ready:
             toks[r.slot] = (r.generated[-1] if r.generated else r.prompt[-1])
             lens[r.slot] = r.pos               # write position of this token
-        nxt, self.cache = self._decode[mode](
-            params, self.cache, jnp.asarray(toks), jnp.asarray(lens))
+        args = [jnp.asarray(toks), jnp.asarray(lens)]
+        if self.paged:
+            args.append(jnp.asarray(self._block_tables(ready)))
+        nxt, self.cache = self._decode[mode](params, self.cache, *args)
         nxt = np.asarray(nxt)
         t = self.now()
         for r in ready:
             r.generated.append(int(nxt[r.slot]))
+            # the decode wrote this step's input token at position r.pos-1,
+            # so the cache now covers everything before the new last token —
+            # without this, r.pos outruns prefilled and every decode step
+            # would be preceded by a spurious 1-token re-prefill
+            r.prefilled = r.pos
+            r.last_used = self.step_count
             if r.first_token_time is None:
                 r.first_token_time = t
             self.lens[r.slot] = r.pos
             if r.done or (self.cfg.eos_id >= 0
                           and r.generated[-1] == self.cfg.eos_id):
                 r.finish_time = t
+                if self.paged:
+                    self.kv.free_seq(r.slot)
                 self.slot_req[r.slot] = None
                 self.queue = [q for q in self.queue if q.rid != r.rid]
         return True
@@ -170,7 +298,7 @@ class ShiftEngine:
     def step(self) -> bool:
         """One engine iteration. Returns False when idle."""
         t0 = self.now()
-        self._assign_slots()
+        self._admit()
         # prefill-priority with chunking; decode otherwise (chunked prefill
         # interleaves at iteration granularity)
         progressed = self._run_prefill() or self._run_decode()
@@ -188,27 +316,39 @@ class ShiftEngine:
     # ------------------------------------------------------- fault tolerance
     def snapshot(self):
         """Engine state for checkpoint/restart (weights are static)."""
-        return {
+        snap = {
             "cache": jax.tree.map(np.asarray, self.cache),
             "lens": self.lens.copy(),
             "requests": [
                 {"rid": r.rid, "prompt": list(r.prompt), "slot": r.slot,
                  "prefilled": r.prefilled, "generated": list(r.generated),
-                 "max_new_tokens": r.max_new_tokens}
+                 "max_new_tokens": r.max_new_tokens, "arrival": r.arrival,
+                 "first_token_time": r.first_token_time,
+                 "finish_time": r.finish_time, "last_used": r.last_used}
                 for r in self.queue + [x for x in self.slot_req
                                        if x is not None and x not in self.queue]],
         }
+        if self.paged:
+            snap["kv"] = self.kv.state_dict()
+        return snap
 
     def restore(self, snap):
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
         self.lens = snap["lens"].copy()
+        if self.paged:
+            assert "kv" in snap, "paged engine restoring a dense snapshot"
+            self.kv = PagedKVCache.from_state(snap["kv"])
         self.slot_req = [None] * self.cfg.max_slots
         self.queue = []
         for rd in snap["requests"]:
-            r = Request(rd["rid"], rd["prompt"], rd["max_new_tokens"])
+            r = Request(rd["rid"], rd["prompt"], rd["max_new_tokens"],
+                        arrival=rd.get("arrival", 0.0))
             r.slot = rd["slot"]
             r.prefilled = rd["prefilled"]
             r.generated = list(rd["generated"])
+            r.first_token_time = rd.get("first_token_time")
+            r.finish_time = rd.get("finish_time")
+            r.last_used = rd.get("last_used", 0)
             if r.slot is not None:
                 self.slot_req[r.slot] = r
             self.queue.append(r)

@@ -5,7 +5,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 
-@dataclass
+@dataclass(eq=False)                  # identity equality — requests go in sets
 class Request:
     rid: int
     prompt: List[int]
@@ -14,14 +14,21 @@ class Request:
 
     # engine state -----------------------------------------------------------
     slot: Optional[int] = None
-    prefilled: int = 0                # prompt tokens already in the cache
+    prefilled: int = 0                # tokens already written to the cache
     generated: List[int] = field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    last_used: int = 0                # engine step that last batched this
+    num_preemptions: int = 0
+
+    def all_tokens(self) -> List[int]:
+        """Prompt plus generated — after a preemption the whole thing is the
+        effective prompt (vLLM-style recompute preemption)."""
+        return list(self.prompt) + list(self.generated)
 
     @property
-    def prefill_done(self) -> bool:
-        return self.prefilled >= len(self.prompt)
+    def total_tokens(self) -> int:
+        return len(self.prompt) + len(self.generated)
 
     @property
     def done(self) -> bool:
@@ -29,4 +36,7 @@ class Request:
 
     @property
     def pos(self) -> int:
-        return self.prefilled + len(self.generated)
+        """Cache write position of the next decode step's input token (the
+        last known token). Independent of ``prefilled`` so preemption can
+        reset prefill progress without corrupting positions."""
+        return self.total_tokens - 1

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention_kernel
 from .decode_attention import decode_attention_kernel
+from .paged_decode_attention import paged_decode_attention_kernel
 from .ssd_scan import ssd_chunk_kernel
 from .rmsnorm import rmsnorm_kernel
 
@@ -45,6 +46,19 @@ def decode_attention(q, k, v, lens, *, bk=512):
     vf = v.transpose(0, 2, 1, 3)
     out = decode_attention_kernel(qf, kf, vf, lens, bk=min(bk, S),
                                   interpret=_on_cpu())
+    return out.reshape(B, 1, Hq, D)
+
+
+@jax.jit
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lens):
+    """q: [B, 1, Hq, D]; k_pool/v_pool: [num_blocks, bs, Hkv, D];
+    block_tables: [B, nmax]; lens: [B] -> [B, 1, Hq, D]."""
+    B, _, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    g = Hq // Hkv
+    out = paged_decode_attention_kernel(q.reshape(B, Hkv, g, D), k_pool,
+                                        v_pool, block_tables, lens,
+                                        interpret=_on_cpu())
     return out.reshape(B, 1, Hq, D)
 
 

@@ -1,0 +1,106 @@
+"""Paged GQA decode attention Pallas TPU kernel.
+
+Same online-softmax recurrence as ``decode_attention.py``, but KV is
+streamed *through the block table*: the cache lives in a physical pool
+``[num_blocks, block_size, Hkv, D]`` and logical block ``ib`` of sequence
+``b`` is DMA'd from physical block ``block_tables[b, ib]``.  The block
+table and the per-sequence valid lengths are scalar-prefetched (SMEM) so
+the K/V index maps can compute DMA source blocks before the body runs.
+
+The pool's per-block layout ``[block_size, Hkv, D]`` keeps heads on the
+second-to-last axis — the axis the SP/TP-invariant sharding splits — so the
+same kernel (and the same pool bytes) serve the base and shift configs.
+
+Grid: (B*Hkv, max_blocks_per_seq). q rows per instance: the kv head's
+query group [g, D]. Tail positions past ``lens`` are masked; unmapped
+table entries point at the null block and are fully masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs, hkv, scale):
+    n = pl.program_id(0)
+    ib = pl.program_id(1)
+    b = n // hkv
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                 # [g, D]
+    k = k_ref[0, :, 0]                              # [bs, D]
+    v = v_ref[0, :, 0]
+    valid_len = len_ref[b]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ib == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, block_tables, lens, *,
+                                  interpret=False):
+    """q: [B, Hkv, g, D]; k_pool/v_pool: [num_blocks, bs, Hkv, D];
+    block_tables: [B, nmax] (logical→physical, 0 = null block);
+    lens: [B] valid kv length incl. the newly written token.
+    Returns [B, Hkv, g, D]."""
+    B, Hkv, g, D = q.shape
+    bs = k_pool.shape[1]
+    nmax = block_tables.shape[1]
+    kern = functools.partial(_kernel, bs=bs, hkv=Hkv, scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # block_tables, lens
+        grid=(B * Hkv, nmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D),
+                         lambda n, ib, bt, ln: (n // Hkv, n % Hkv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda n, ib, bt, ln: (bt[n // Hkv, ib], 0,
+                                                n % Hkv, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda n, ib, bt, ln: (bt[n // Hkv, ib], 0,
+                                                n % Hkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D),
+                               lambda n, ib, bt, ln: (n // Hkv, n % Hkv,
+                                                      0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens.astype(jnp.int32), q, k_pool,
+      v_pool)
+    return out

@@ -33,6 +33,21 @@ def decode_attention_ref(q, k, v, lens):
     return out.reshape(B, Hkv, g, D)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lens):
+    """Oracle for the paged decode kernel: gather each sequence's blocks in
+    logical order into a contiguous [B, Hkv, nmax*bs, D] view, then run the
+    contiguous decode oracle. q: [B, Hkv, g, D]; k_pool/v_pool:
+    [num_blocks, bs, Hkv, D]; block_tables: [B, nmax]; lens: [B]."""
+    B = q.shape[0]
+    bs = k_pool.shape[1]
+    nmax = block_tables.shape[1]
+    kg = k_pool[block_tables]                       # [B, nmax, bs, Hkv, D]
+    vg = v_pool[block_tables]
+    k = kg.reshape(B, nmax * bs, *k_pool.shape[2:]).transpose(0, 2, 1, 3)
+    v = vg.reshape(B, nmax * bs, *v_pool.shape[2:]).transpose(0, 2, 1, 3)
+    return decode_attention_ref(q, k, v, lens)
+
+
 def ssd_chunk_ref(x, b, c, dt, cum):
     """Oracle for the intra-chunk SSD kernel. Shapes as in ssd_chunk_kernel."""
     xf, bf, cf = (t.astype(jnp.float32) for t in (x, b, c))

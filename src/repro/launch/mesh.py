@@ -14,14 +14,15 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro.parallel.compat import make_mesh as _make_mesh
+
 AXIS_POD, AXIS_DATA, AXIS_SP, AXIS_TP = "pod", "data", "sp", "tp"
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_shift_mesh(sp: int = 8, tp: int = 2, *, multi_pod: bool = False):
@@ -31,15 +32,12 @@ def make_shift_mesh(sp: int = 8, tp: int = 2, *, multi_pod: bool = False):
     shape = (2, 16, sp, tp) if multi_pod else (16, sp, tp)
     axes = (("pod", "data", "sp", "tp") if multi_pod
             else ("data", "sp", "tp"))
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data=1, sp=2, tp=2):
     """Small mesh for CPU multi-device tests (8 virtual devices)."""
-    return jax.make_mesh(
-        (data, sp, tp), ("data", "sp", "tp"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return _make_mesh((data, sp, tp), ("data", "sp", "tp"))
 
 
 def layout_axes(multi_pod: bool = False):

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.policy import ThresholdPolicy, AdaptivePolicy
+from repro.core.policy import (DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy,
+                               AdaptivePolicy)
 from repro.engine import ShiftEngine, EngineConfig, Request
 from repro.models import build_model
 from repro.models.model import Model
@@ -22,8 +23,10 @@ from repro.sim.costmodel import CostModel
 
 
 def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
-                 slots=8, s_max=256, chunk=64, threshold=32,
-                 adaptive=False, dtype=jnp.float32):
+                 slots=8, s_max=256, chunk=64,
+                 threshold=DEFAULT_SHIFT_THRESHOLD, adaptive=False,
+                 paged=None, block_size=16, num_blocks=0,
+                 dtype=jnp.float32):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -41,7 +44,8 @@ def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
     policy = (AdaptivePolicy(CostModel(cfg), sp, tp) if adaptive
               else ThresholdPolicy(threshold))
     ecfg = EngineConfig(max_slots=slots, s_max=s_max, prefill_chunk=chunk,
-                        threshold=threshold)
+                        threshold=threshold, paged=paged,
+                        block_size=block_size, num_blocks=num_blocks)
     return ShiftEngine(base, shift, p_base, p_shift, ecfg, policy=policy)
 
 
@@ -52,9 +56,16 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--adaptive", action="store_true")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged KV block size (tokens)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="physical KV blocks; 0 = no memory pressure. Small "
+                         "values force admission control + preemption")
     args = ap.parse_args()
 
-    eng = build_engine(args.arch, adaptive=args.adaptive)
+    eng = build_engine(args.arch, adaptive=args.adaptive,
+                       block_size=args.block_size,
+                       num_blocks=args.num_blocks)
     reqs = [Request(i, list(range(1, 20 + 3 * i)), max_new_tokens=args.max_new,
                     arrival=time.monotonic())
             for i in range(args.requests)]
@@ -71,6 +82,10 @@ def main():
     print(f"configs used: base={eng.config_trace.count('base')} "
           f"shift={eng.config_trace.count('shift')}; "
           f"{n_tok} tokens in {dt:.2f}s")
+    if eng.paged:
+        print(f"paged cache: {eng.kv.allocator.num_blocks} blocks x "
+              f"{eng.cfg.block_size} tokens, {eng.preemptions} preemptions, "
+              f"{eng.kv.num_free_blocks} free at exit")
 
 
 if __name__ == "__main__":

@@ -109,6 +109,33 @@ def cache_specs(lay: Layout):
     return {"k": P(dp, None, h, None), "v": P(dp, None, h, None)}
 
 
+def paged_cache_init(cfg, lay: Layout, num_blocks: int, block_size: int,
+                     dtype):
+    """Physical KV block pool for one attention layer:
+    ``[num_blocks, block_size, slots, Dh]``.
+
+    The per-block layout is shard-invariant: only the head-slot axis is
+    sharded (over the tp-major model group, same as the contiguous cache),
+    so base (SP,TP) and shift (TP) configs map identical bytes of every
+    block to identical devices and SP↔TP switching moves zero bytes. The
+    pool is shared across the batch; ``block_tables`` assign physical
+    blocks to sequences."""
+    plan = get_plan(cfg, lay)
+    shape = (num_blocks, block_size, plan.kv_slots_total, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_cache_specs(lay: Layout):
+    h = lay.head_spec_entry()
+    return {"k": P(None, None, h, None), "v": P(None, None, h, None)}
+
+
+def block_table_spec(lay: Layout) -> P:
+    """Block tables are replicated across the model group (every rank
+    follows the same logical→physical indirection)."""
+    return P(lay.dp_axes or None, None)
+
+
 # ---------------------------------------------------------------------------
 # shared pieces
 # ---------------------------------------------------------------------------
@@ -260,6 +287,79 @@ def attn_decode(p, x, cache, lens, cfg, lay: Layout, *, window: int = 0,
                                     soft_cap=cfg.logits_soft_cap)
     out = finish_partial(acc, l, mm).astype(q.dtype)
 
+    out = out.transpose(1, 0, 2, 3)                            # [1,B,q_pr,dh]
+    out = _finish(p, out, plan, lay)                           # [1,B_loc,d]
+    return out[0], {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# paged forward (block-table indirection; layouts as in paged_cache_init)
+# ---------------------------------------------------------------------------
+def _paged_gather(pool, block_tables):
+    """Assemble the logical contiguous view [B, nmax*bs, slots, Dh] of each
+    sequence's blocks. The block table is in logical order, so gathered kv
+    position ``p`` is global position ``p`` (null-block tail entries carry
+    garbage and are masked by kv_len)."""
+    B, nmax = block_tables.shape
+    bs = pool.shape[1]
+    g = pool[block_tables]                     # [B, nmax, bs, slots, Dh]
+    return g.reshape(B, nmax * bs, pool.shape[2], pool.shape[3])
+
+
+def paged_attn_prefill(p, x, cache, offsets, block_tables, cfg, lay: Layout):
+    """Chunked prefill against the paged pool. x: [B, S_loc, d]; offsets:
+    [B] chunk start positions; block_tables: [B, nmax] (rows not in this
+    chunk batch must be all-null so their scatter lands in the null
+    block). Returns (out [B, S_loc, d], cache)."""
+    plan = get_plan(cfg, lay)
+    q, k, v = _project_exchange(p, x, cfg, lay, plan)
+    B, S = q.shape[:2]
+    pos = offsets[:, None] + jnp.arange(S)[None, :]            # [B, S] global
+    q, k = _qk_post(p, q, k, pos, cfg, True)
+
+    kc, vc = cache["k"], cache["v"]
+    bs = kc.shape[1]
+    nmax = block_tables.shape[1]
+    # padding columns run past the table when the chunk overhangs s_max
+    # (s_max % chunk != 0). What an out-of-bounds gather returns is a JAX
+    # version/mode detail (fill vs clip — clip would collide the scatter
+    # with live KV), so route those positions to the null block explicitly.
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.minimum(pos // bs, nmax - 1), axis=1)
+    blk = jnp.where(pos // bs < nmax, blk, 0)                   # [B, S]
+    kc = kc.at[blk, pos % bs].set(k)
+    vc = vc.at[blk, pos % bs].set(v)
+    out = attend(q, _paged_gather(kc, block_tables),
+                 _paged_gather(vc, block_tables), pos,
+                 jnp.arange(block_tables.shape[1] * bs), causal=True,
+                 kv_len=offsets + S, soft_cap=cfg.logits_soft_cap)
+    return _finish(p, out, plan, lay), {"k": kc, "v": vc}
+
+
+def paged_attn_decode(p, x, cache, lens, block_tables, cfg, lay: Layout):
+    """One-token decode against the paged pool. x: [B_loc, d]; lens: [B]
+    write positions; block_tables: [B, nmax] (all-null rows for inactive
+    slots scatter into the null block). Returns (out [B_loc, d], cache)."""
+    plan = get_plan(cfg, lay)
+    xs = x[None]                                               # batch-as-seq
+    q, k, v = _project_exchange(p, xs, cfg, lay, plan)
+    B = q.shape[1]
+    q = q.transpose(1, 0, 2, 3)                                # [B,1,q_pr,dh]
+    k = k.transpose(1, 0, 2, 3)
+    v = v.transpose(1, 0, 2, 3)
+    pos = lens[:, None]                                        # [B,1]
+    q, k = _qk_post(p, q, k, pos, cfg, True)
+
+    kc, vc = cache["k"], cache["v"]
+    bs = kc.shape[1]
+    blk = block_tables[jnp.arange(B), lens // bs]              # [B]
+    kc = kc.at[blk, lens % bs].set(k[:, 0])
+    vc = vc.at[blk, lens % bs].set(v[:, 0])
+    acc, l, mm = attend_partial(
+        q, _paged_gather(kc, block_tables), _paged_gather(vc, block_tables),
+        pos, jnp.arange(block_tables.shape[1] * bs), causal=True,
+        kv_len=lens + 1, soft_cap=cfg.logits_soft_cap)
+    out = finish_partial(acc, l, mm).astype(q.dtype)
     out = out.transpose(1, 0, 2, 3)                            # [1,B,q_pr,dh]
     out = _finish(p, out, plan, lay)                           # [1,B_loc,d]
     return out[0], {"k": kc, "v": vc}

@@ -91,6 +91,23 @@ def block_cache_init(kind, cfg, lay: Layout, batch: int, s_max: int, dtype):
     raise ValueError(kind)
 
 
+def block_paged_cache_init(kind, cfg, lay: Layout, num_blocks: int,
+                           block_size: int, dtype):
+    """Paged pool for one block. Only plain GQA attention layers page; the
+    other kinds either keep per-sequence recurrent state (rglru/ssd), a
+    latent layout (MLA), or a ring buffer (local) — the engine falls back
+    to the contiguous cache for configs containing them."""
+    if kind in ("attn", "moe") and not _use_mla(cfg):
+        return A.paged_cache_init(cfg, lay, num_blocks, block_size, dtype)
+    raise ValueError(f"layer kind {kind!r} does not support a paged cache")
+
+
+def block_paged_cache_specs(kind, cfg, lay: Layout):
+    if kind in ("attn", "moe") and not _use_mla(cfg):
+        return A.paged_cache_specs(lay)
+    raise ValueError(f"layer kind {kind!r} does not support a paged cache")
+
+
 def block_cache_specs(kind, cfg, lay: Layout):
     if kind in ("attn", "moe"):
         if _use_mla(cfg):
@@ -122,6 +139,9 @@ def block_prefill(p, kind, x, cache, ctx, cfg, lay: Layout, pod_scale=False,
     if kind in ("attn", "moe"):
         if _use_mla(cfg):
             a, cache = M.mla_prefill(p["attn"], h, cache, offsets, cfg, lay)
+        elif ctx.get("block_tables") is not None:
+            a, cache = A.paged_attn_prefill(p["attn"], h, cache, offsets,
+                                            ctx["block_tables"], cfg, lay)
         else:
             a, cache = A.attn_prefill(p["attn"], h, cache, offsets, cfg, lay)
         x = x + a
@@ -167,6 +187,9 @@ def block_decode(p, kind, x, cache, ctx, cfg, lay: Layout, pod_scale=False):
     if kind in ("attn", "moe"):
         if _use_mla(cfg):
             a, cache = M.mla_decode(p["attn"], h, cache, lens, cfg, lay)
+        elif ctx.get("block_tables") is not None:
+            a, cache = A.paged_attn_decode(p["attn"], h, cache, lens,
+                                           ctx["block_tables"], cfg, lay)
         else:
             a, cache = A.attn_decode(p["attn"], h, cache, lens, cfg, lay)
         x = x + a

@@ -8,10 +8,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.parallel import Layout
+from repro.parallel.compat import shard_map
 from . import transformer as T
 
 POD_SCALE_ARCHS = {"deepseek-v3-671b", "llama4-maverick-400b-a17b",
@@ -53,6 +53,31 @@ class Model:
     def cache_specs(self):
         return T.cache_specs(self.cfg, self.lay)
 
+    # ------------------------------------------------------------ paged cache
+    @property
+    def supports_paged(self) -> bool:
+        """True when every cached layer is plain GQA attention — the kinds
+        whose [block_size, kv_slots, Dh] block layout is shard-invariant.
+        MLA (latent layout), local (ring buffer), rglru/ssd (recurrent
+        state) and encoder/decoder stacks keep the contiguous cache."""
+        return (self.cfg.mla is None and not self.cfg.encoder_layers
+                and all(k in ("attn", "moe") for k in self.cfg.layer_kinds))
+
+    def init_paged_cache(self, num_blocks: int, block_size: int):
+        return T.init_paged_cache(self.cfg, self.lay, num_blocks, block_size,
+                                  self.dtype)
+
+    def abstract_paged_cache(self, num_blocks: int, block_size: int):
+        return jax.eval_shape(
+            lambda: self.init_paged_cache(num_blocks, block_size))
+
+    def paged_cache_specs(self):
+        return T.paged_cache_specs(self.cfg, self.lay)
+
+    def block_table_spec(self):
+        from .attention import block_table_spec
+        return block_table_spec(self.lay)
+
     # ---------------------------------------------------------- step fns
     # All bodies are closed over (cfg, lay) and run inside shard_map when a
     # mesh is present; on a single device they run as plain functions (all
@@ -71,13 +96,18 @@ class Model:
         tok_b = tuple(lay.dp_axes) + tuple(lay.sp_axes)  # decode batch axes
         return dp, seq, (tok_b or None)
 
-    def prefill_fn(self):
+    def prefill_fn(self, paged: bool = False):
+        """With ``paged=True`` the returned fn takes an extra
+        ``block_tables`` [B, nmax] arg after ``offsets`` and the cache arg
+        is the paged block pool (same sharded bytes in base and shift)."""
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
         dp, seq, _ = self._io_specs()
         pspec = self.param_specs()
-        cspec = self.cache_specs()
+        cspec = self.paged_cache_specs() if paged else self.cache_specs()
 
         args = [pspec, cspec, P(dp, seq), P(dp)]
+        if paged:
+            args.append(self.block_table_spec())
         extras = []
         if cfg.frontend == "vision_stub":
             extras.append(P(dp, None, None))
@@ -85,31 +115,38 @@ class Model:
             extras.append(P(dp, seq, None))
 
         def body(params, cache, tokens, offsets, *rest):
+            bt = None
+            if paged:
+                bt, rest = rest[0], rest[1:]
             fe = rest[0] if cfg.frontend == "vision_stub" else None
             ef = rest[-1] if cfg.encoder_layers else None
             logits, cache = T.prefill_body(params, cache, tokens, offsets,
-                                           cfg, lay, pod, fe, ef)
+                                           cfg, lay, pod, fe, ef,
+                                           block_tables=bt)
             return logits, cache
 
         out = (P(dp, lay.tp_axes or None), cspec)
         return self._wrap(body, tuple(args + extras), out)
 
-    def decode_fn(self, sample: bool = True):
+    def decode_fn(self, sample: bool = True, paged: bool = False):
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
         dp, _, tok_b = self._io_specs()
         pspec = self.param_specs()
-        cspec = self.cache_specs()
+        cspec = self.paged_cache_specs() if paged else self.cache_specs()
 
-        def body(params, cache, tokens, lens):
+        def body(params, cache, tokens, lens, *rest):
+            bt = rest[0] if paged else None
             logits, cache = T.decode_body(params, cache, tokens, lens, cfg,
-                                          lay, pod)
+                                          lay, pod, block_tables=bt)
             if sample:
                 return T.greedy_body(logits, lay), cache
             return logits, cache
 
+        in_specs = [pspec, cspec, P(tok_b), P(dp)]
+        if paged:
+            in_specs.append(self.block_table_spec())
         out_tok = P(dp) if sample else P(tok_b, lay.tp_axes or None)
-        return self._wrap(body, (pspec, cspec, P(tok_b), P(dp)),
-                          (out_tok, cspec))
+        return self._wrap(body, tuple(in_specs), (out_tok, cspec))
 
     def loss_fn(self, remat: bool = True):
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale

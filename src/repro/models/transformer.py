@@ -119,6 +119,48 @@ def init_cache(cfg, lay: Layout, batch: int, s_max: int, dtype):
     return c
 
 
+def init_paged_cache(cfg, lay: Layout, num_blocks: int, block_size: int,
+                     dtype):
+    """Paged KV pools, one per cached layer, same tree structure as
+    ``init_cache``. All layers share the block-table indirection (a block
+    maps the same token span in every layer), so one allocator serves the
+    whole stack."""
+    kinds = cfg.layer_kinds
+    npre, nsuf = len(cfg.prefix_layers), len(cfg.suffix_layers)
+    reps = cfg.pattern_repeats
+    c = {"prefix": {str(i): BK.block_paged_cache_init(
+            kinds[i], cfg, lay, num_blocks, block_size, dtype)
+            for i in range(npre)},
+         "suffix": {str(i): BK.block_paged_cache_init(
+             kinds[npre + reps * len(cfg.layer_pattern) + i], cfg, lay,
+             num_blocks, block_size, dtype) for i in range(nsuf)}}
+    body = {}
+    for si, kind in enumerate(cfg.layer_pattern):
+        one = BK.block_paged_cache_init(kind, cfg, lay, num_blocks,
+                                        block_size, dtype)
+        body[f"s{si}"] = jax.tree.map(
+            lambda a: jnp.zeros((reps,) + a.shape, a.dtype), one)
+    c["body"] = body
+    return c
+
+
+def paged_cache_specs(cfg, lay: Layout):
+    kinds = cfg.layer_kinds
+    npre, nsuf = len(cfg.prefix_layers), len(cfg.suffix_layers)
+    reps = cfg.pattern_repeats
+    s = {"prefix": {str(i): BK.block_paged_cache_specs(kinds[i], cfg, lay)
+                    for i in range(npre)},
+         "suffix": {str(i): BK.block_paged_cache_specs(
+             kinds[npre + reps * len(cfg.layer_pattern) + i], cfg, lay)
+             for i in range(nsuf)}}
+    s["body"] = {
+        f"s{si}": jax.tree.map(lambda sp: P(None, *sp),
+                               BK.block_paged_cache_specs(kind, cfg, lay),
+                               is_leaf=lambda x: isinstance(x, P))
+        for si, kind in enumerate(cfg.layer_pattern)}
+    return s
+
+
 def cache_specs(cfg, lay: Layout):
     kinds = cfg.layer_kinds
     npre, nsuf = len(cfg.prefix_layers), len(cfg.suffix_layers)
@@ -254,12 +296,14 @@ def _positions_prefill(tokens, offsets, lay):
 
 
 def prefill_body(params, cache, tokens, offsets, cfg, lay: Layout,
-                 pod_scale=False, frontend_embeds=None, enc_frames=None):
+                 pod_scale=False, frontend_embeds=None, enc_frames=None,
+                 block_tables=None):
     """tokens: [B, S_loc]; offsets: [B]. Returns (last_logits_loc [B, v_loc],
-    cache)."""
+    cache). With ``block_tables`` [B, nmax] the cache is the paged pool."""
     pos = _positions_prefill(tokens, offsets, lay)
     x = _embed_tokens(params, tokens, pos, cfg, lay, frontend_embeds)
-    ctx = {"offsets": offsets, "init_cross": True}
+    ctx = {"offsets": offsets, "init_cross": True,
+           "block_tables": block_tables}
     if cfg.encoder_layers:
         ctx["enc_out"] = _run_encoder(params, enc_frames, cfg, lay)
     x, cache, _ = _run_blocks_prefill(params, cache, x, ctx, cfg, lay,
@@ -275,17 +319,18 @@ def prefill_body(params, cache, tokens, offsets, cfg, lay: Layout,
     return logits, cache
 
 
-def decode_body(params, cache, tokens, lens, cfg, lay: Layout, pod_scale=False):
+def decode_body(params, cache, tokens, lens, cfg, lay: Layout, pod_scale=False,
+                block_tables=None):
     """tokens: [B_loc] (batch sharded over dp×sp); lens: [B_row] global
     per-sequence lengths within this dp row. Returns (logits [B_loc, v_loc],
-    cache)."""
+    cache). With ``block_tables`` [B, nmax] the cache is the paged pool."""
     x = embed_apply(params["embed"], tokens, lay)
     if cfg.family == "audio":
         r = joint_axis_index(lay.sp_axes, dict(lay.axis_sizes)) if lay.sp > 1 else 0
         B_loc = tokens.shape[0]
         pos_loc = jax.lax.dynamic_slice(lens, (r * B_loc,), (B_loc,)) if lay.sp > 1 else lens
         x = x + _sin_pos(pos_loc, cfg.d_model).astype(x.dtype)
-    ctx = {"lens": lens}
+    ctx = {"lens": lens, "block_tables": block_tables}
     x, cache = _run_blocks_decode(params, cache, x, ctx, cfg, lay, pod_scale)
     x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
     logits = (tied_lmhead_apply(params["embed"], x, lay) if cfg.tie_embeddings

@@ -1,5 +1,6 @@
 from .layout import Layout, joint_axis_index, psum_if, all_gather_if
 from .heads import HeadPlan, plan_heads
+from .compat import shard_map
 
 __all__ = ["Layout", "joint_axis_index", "psum_if", "all_gather_if",
-           "HeadPlan", "plan_heads"]
+           "HeadPlan", "plan_heads", "shard_map"]

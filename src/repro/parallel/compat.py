@@ -1,0 +1,37 @@
+"""JAX version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+namespace (and the ``check_rep`` kwarg was renamed ``check_vma``) across JAX
+releases; ``jax.make_mesh`` gained ``axis_types`` later than it appeared.
+Import both from here so the repo runs on either API generation.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                        # newer JAX: jax.shard_map
+    from jax import shard_map as _shard_map
+except ImportError:                         # older JAX: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_REP_KWARG = "check_vma" if "check_vma" in _PARAMS else (
+    "check_rep" if "check_rep" in _PARAMS else None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    kw = {}
+    if _REP_KWARG is not None:
+        kw[_REP_KWARG] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(shape), tuple(axis_names), **kw)

@@ -60,6 +60,12 @@ class CostModel:
                        if k in ("attn", "local", "moe", "dec"))
         return 2.0 * per * n_cached
 
+    def kv_bytes_per_block(self, block_size: int = 16) -> float:
+        """HBM bytes one paged KV block commits across all cached layers.
+        The paged engine allocates at this granularity; partially filled
+        tail blocks are the fragmentation the simulator charges."""
+        return self._kv_bytes_per_tok() * block_size
+
     def _comm_bytes(self, n_tokens: int, strat: Strategy) -> float:
         """Per-device collective bytes for one iteration (paper Table 2)."""
         c = self.cfg

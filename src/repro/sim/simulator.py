@@ -18,6 +18,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.cache import blocks_for_tokens
 from .costmodel import CostModel, Strategy
 
 
@@ -60,34 +61,46 @@ class ReplicaState:
 class ServeSim:
     def __init__(self, cost: CostModel, strategy: str, n_chips: int = 8,
                  max_concurrent: int = 64, prefill_chunk: int = 2048,
-                 kv_capacity_tokens: Optional[int] = None):
+                 kv_capacity_tokens: Optional[int] = None,
+                 kv_block_size: int = 16):
         self.cost = cost
         self.strategy = strategy
         self.n = n_chips
         self.chunk = prefill_chunk
         self.max_conc = max_concurrent
+        self.block_size = kv_block_size
         n_rep = n_chips if strategy == "dp" else 1
         self.reps = [ReplicaState() for _ in range(n_rep)]
         if kv_capacity_tokens is None:
             hbm = self.cost.hw.hbm_bytes
-            w = self.cost._weight_bytes() / (1 if strategy == "dp" else n_chips)
-            per_tok = self.cost._kv_bytes_per_tok() / (
-                1 if strategy == "dp" else n_chips)
-            kv_capacity_tokens = int(max(hbm * 0.85 - w, hbm * 0.05) / per_tok)
-        self.kv_cap = kv_capacity_tokens
+            shard = 1 if strategy == "dp" else n_chips
+            w = self.cost._weight_bytes() / shard
+            per_block = self.cost.kv_bytes_per_block(kv_block_size) / shard
+            kv_capacity_tokens = kv_block_size * int(
+                max(hbm * 0.85 - w, hbm * 0.05) / per_block)
+        # KV memory is committed at block granularity (matching the paged
+        # engine): a sequence occupies ceil(len/bs) blocks, so the tail
+        # slots of its last block are the fragmentation the sim charges.
+        self.kv_cap_blocks = max(kv_capacity_tokens // kv_block_size, 1)
+        self.kv_cap = self.kv_cap_blocks * kv_block_size
         self.trace_tokens: List = []   # (t, tokens_processed) for throughput
+
+    def _used_blocks(self, rep: ReplicaState) -> int:
+        return sum(blocks_for_tokens(r.prefilled + r.decoded, self.block_size)
+                   for r in rep.active)
 
     def _iteration(self, rep: ReplicaState):
         """Run one engine iteration on a replica; returns elapsed time."""
-        # admit
-        kv_used = sum(r.prefilled + r.decoded for r in rep.active)
+        # admit (block-granular, like the engine's admission control)
+        kv_used = self._used_blocks(rep)
         for q in list(rep.queue):
+            need = blocks_for_tokens(q.n_in + 1, self.block_size)
             if (len(rep.active) < self.max_conc
-                    and kv_used + q.n_in < self.kv_cap):
+                    and kv_used + need <= self.kv_cap_blocks):
                 rep.active.append(q)
                 rep.queue.remove(q)
                 q.start = rep.t
-                kv_used += q.n_in
+                kv_used += need
         if not rep.active:
             return 0.0
         # chunked prefill + decode batch composition
@@ -126,7 +139,6 @@ class ServeSim:
 
     def run(self, requests: List[SimRequest], t_end: Optional[float] = None):
         reqs = sorted(requests, key=lambda r: r.arrival)
-        idx = {i: 0 for i in range(len(self.reps))}
         # round-robin assignment to replicas
         assign = [[] for _ in self.reps]
         for i, r in enumerate(reqs):

@@ -12,10 +12,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import Layout, psum_if
+from repro.parallel.compat import shard_map
 from repro.models import Model
 from repro.models import transformer as T
 from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_specs

@@ -13,8 +13,8 @@ import pytest
 
 
 def make_mesh(shape=(1, 2, 2)):
-    return jax.make_mesh(shape, ("data", "sp", "tp"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.parallel.compat import make_mesh as _mk
+    return _mk(shape, ("data", "sp", "tp"))
 
 
 @pytest.fixture(scope="session")

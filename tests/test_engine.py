@@ -36,12 +36,14 @@ def _gen(m, params, ecfg, policy, prompts, n_new=6):
     return {r.rid: tuple(r.generated) for r in reqs}, eng
 
 
-def test_policy_invariance():
-    m, params, ecfg = _engine()
+@pytest.mark.parametrize("paged", [True, False])
+def test_policy_invariance(paged):
+    m, params, ecfg = _engine(paged=paged)
     prompts = [list(range(1, 12 + i)) for i in range(3)]
     g_base, _ = _gen(m, params, ecfg, Always(True), prompts)
     g_shift, _ = _gen(m, params, ecfg, Always(False), prompts)
     g_mix, eng = _gen(m, params, ecfg, ThresholdPolicy(4), prompts)
+    assert eng.paged == paged
     assert g_base == g_shift == g_mix
     assert all(len(v) == 6 for v in g_base.values())
     assert "base" in eng.config_trace and "shift" in eng.config_trace
@@ -57,6 +59,32 @@ def test_chunked_prefill_matches_single_shot():
                     EngineConfig(max_slots=4, s_max=64, prefill_chunk=32),
                     Always(True), prompts)
     assert g_small == g_big
+
+
+def test_snapshot_roundtrips_timing_metrics():
+    """first_token_time / finish_time must survive snapshot→restore, or
+    TTFT metrics are corrupted after an engine restart."""
+    m, params, ecfg = _engine()
+    eng = ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
+    reqs = [Request(i, list(range(1, 10)), max_new_tokens=3, arrival=1.5 + i)
+            for i in range(2)]
+    for r in reqs:
+        eng.add_request(r)
+    # run until the first request has produced tokens (TTFT is set)
+    for _ in range(30):
+        eng.step()
+        if any(r.first_token_time is not None for r in reqs):
+            break
+    assert any(r.first_token_time is not None for r in reqs)
+    eng2 = ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
+    eng2.restore(eng.snapshot())
+    by_rid = {r.rid: r for r in eng2.queue}
+    for r in reqs:
+        if r.rid in by_rid:                    # finished ones left the queue
+            got = by_rid[r.rid]
+            assert got.first_token_time == r.first_token_time
+            assert got.finish_time == r.finish_time
+            assert got.arrival == r.arrival
 
 
 def test_snapshot_restore_resumes_identically():

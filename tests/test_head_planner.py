@@ -1,7 +1,7 @@
 """Head planner: exhaustive alignment + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.parallel.heads import plan_heads
 

@@ -2,7 +2,7 @@
 sharding-equality checks + hypothesis property over (sp, tp)."""
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from conftest import make_mesh, reduced_cfg

@@ -1,0 +1,337 @@
+"""Paged KV cache: allocator/block-table unit tests, paged-vs-contiguous
+decode-attention equivalence (kernel + model), structural+numerical shard
+invariance of the paged pool, and engine oversubscription (admission
+control + LRU preemption completing more requests than physical blocks
+can hold at once)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import make_mesh, reduced_cfg
+from repro.cache import BlockAllocator, BlockOOM, PagedKVCache, blocks_for_tokens
+from repro.core.invariance import verify_paged_invariance
+from repro.core.policy import ThresholdPolicy
+from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.kernels import ops
+from repro.kernels import ref as R
+from repro.models import build_model
+from repro.models.model import Model
+from repro.parallel import Layout
+
+
+# ---------------------------------------------------------------------------
+# allocator / block table units
+# ---------------------------------------------------------------------------
+def test_allocator_alloc_free_refcount():
+    a = BlockAllocator(8)                     # 7 usable + null block
+    assert a.num_free == 7
+    blocks = a.alloc(3)
+    assert len(set(blocks)) == 3 and BlockAllocator.NULL_BLOCK not in blocks
+    assert a.num_free == 4 and a.num_used == 3
+    a.incref(blocks[0])
+    a.decref(blocks[0])
+    assert a.ref_count(blocks[0]) == 1        # still held
+    a.free(blocks)
+    assert a.num_free == 7 and a.num_used == 0
+
+
+def test_allocator_oom():
+    a = BlockAllocator(4)
+    a.alloc(3)
+    with pytest.raises(BlockOOM):
+        a.alloc(1)
+
+
+def test_block_table_growth_and_free():
+    kv = PagedKVCache(num_blocks=8, block_size=4, max_seqs=2,
+                      max_blocks_per_seq=4)          # 7 usable blocks
+    assert kv.ensure(0, 5)                    # 2 blocks
+    assert kv.n_mapped[0] == 2 and kv.capacity_tokens(0) == 8
+    assert kv.ensure(0, 8)                    # still 2 blocks (no growth)
+    assert kv.num_used_blocks == 2
+    t0 = kv.seq_blocks(0)
+    assert kv.ensure(1, 16)                   # 4 blocks; 1 free remains
+    assert not kv.ensure(0, 16)               # needs 2 more, only 1 free
+    assert kv.n_mapped[0] == 2                # failed ensure changes nothing
+    assert kv.ensure(0, 12)                   # 3rd block fits
+    assert kv.seq_blocks(0)[:2] == t0         # growth never remaps
+    kv.free_seq(1)
+    assert kv.num_free_blocks == 4
+    assert all(b == 0 for b in kv.table[1])
+
+
+def test_block_table_fork_refcounts():
+    kv = PagedKVCache(num_blocks=9, block_size=4, max_seqs=2,
+                      max_blocks_per_seq=4)
+    kv.ensure(0, 8)
+    kv.fork(0, 1)
+    assert kv.seq_blocks(1) == kv.seq_blocks(0)
+    assert kv.num_used_blocks == 2            # shared, not copied
+    kv.free_seq(0)
+    assert kv.num_used_blocks == 2            # still referenced by seq 1
+    kv.free_seq(1)
+    assert kv.num_used_blocks == 0
+
+
+def test_state_roundtrip():
+    kv = PagedKVCache(num_blocks=9, block_size=4, max_seqs=2,
+                      max_blocks_per_seq=4)
+    kv.ensure(0, 7)
+    kv2 = PagedKVCache.from_state(kv.state_dict())
+    assert kv2.seq_blocks(0) == kv.seq_blocks(0)
+    assert kv2.num_free_blocks == kv.num_free_blocks
+    assert kv2.ensure(1, 4)                   # allocator state usable
+
+
+def test_blocks_for_tokens_fragmentation():
+    assert blocks_for_tokens(0, 16) == 0
+    assert blocks_for_tokens(1, 16) == 1
+    assert blocks_for_tokens(16, 16) == 1
+    assert blocks_for_tokens(17, 16) == 2     # tail block mostly empty
+
+
+# ---------------------------------------------------------------------------
+# paged decode-attention kernel vs contiguous reference
+# ---------------------------------------------------------------------------
+def _paged_setup(B, S, Hq, Hkv, D, bs, seed=0):
+    """Random contiguous KV + a scattered paged copy of it."""
+    nmax = S // bs
+    nblocks = B * nmax + 1
+    ks = jax.random.split(jax.random.key(seed), 4)
+    q = jax.random.normal(ks[0], (B, 1, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lens = jax.random.randint(ks[3], (B,), 1, S)
+    rng = np.random.default_rng(seed)
+    phys = rng.permutation(np.arange(1, nblocks))
+    bt = phys.reshape(B, nmax).astype(np.int32)
+    kp = np.zeros((nblocks, bs, Hkv, D), np.float32)
+    vp = np.zeros((nblocks, bs, Hkv, D), np.float32)
+    for b in range(B):
+        for i in range(nmax):
+            kp[bt[b, i]] = np.asarray(k[b, i * bs:(i + 1) * bs])
+            vp[bt[b, i]] = np.asarray(v[b, i * bs:(i + 1) * bs])
+    return q, k, v, jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt), lens
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bs", [(4, 256, 8, 2, 64, 16),
+                                             (2, 512, 4, 4, 128, 32),
+                                             (3, 128, 16, 1, 64, 16)])
+def test_paged_decode_attention_matches_contiguous(B, S, Hq, Hkv, D, bs):
+    q, k, v, kp, vp, bt, lens = _paged_setup(B, S, Hq, Hkv, D, bs)
+    out = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    want = ops.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_paged_decode_attention_matches_ref_oracle():
+    B, S, Hq, Hkv, D, bs = 2, 128, 4, 2, 64, 16
+    q, _, _, kp, vp, bt, lens = _paged_setup(B, S, Hq, Hkv, D, bs, seed=3)
+    g = Hq // Hkv
+    out = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    want = R.paged_decode_attention_ref(q.reshape(B, Hkv, g, D), kp, vp,
+                                        bt, lens).reshape(B, 1, Hq, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_paged_decode_null_blocks_masked():
+    """Unmapped (null) tail entries must not influence the output."""
+    B, S, Hq, Hkv, D, bs = 1, 128, 2, 1, 64, 16
+    q, _, _, kp, vp, bt, _ = _paged_setup(B, S, Hq, Hkv, D, bs, seed=5)
+    lens = jnp.array([20], jnp.int32)         # only first 2 blocks valid
+    out1 = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    bt2 = np.asarray(bt).copy()
+    bt2[0, 2:] = 0                            # point tail at the null block
+    kp2 = kp.at[0].set(99.0)                  # poison the null block
+    vp2 = vp.at[0].set(-99.0)
+    out2 = ops.paged_decode_attention(q, kp2, vp2, jnp.asarray(bt2), lens)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# model-level: paged pool == contiguous cache, shard invariance
+# ---------------------------------------------------------------------------
+def test_paged_model_matches_dense_single_device():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    B, bs, nmax = 4, 8, 8
+    dense = m.init_cache(B, bs * nmax)
+    paged = m.init_paged_cache(B * nmax + 1, bs)
+    bt = jnp.asarray(1 + np.arange(B * nmax).reshape(B, nmax), jnp.int32)
+    toks = jax.random.randint(jax.random.key(1), (B, 16), 0, cfg.vocab_size)
+    offs = jnp.zeros((B,), jnp.int32)
+    ld, dense = m.prefill_fn()(params, dense, toks, offs)
+    lp, paged = m.prefill_fn(paged=True)(params, paged, toks, offs, bt)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lp), atol=1e-5)
+    t = jnp.argmax(ld, -1).astype(jnp.int32)
+    lens = jnp.full((B,), 16, jnp.int32)
+    for _ in range(3):
+        nd, dense = m.decode_fn()(params, dense, t, lens)
+        np_, paged = m.decode_fn(paged=True)(params, paged, t, lens, bt)
+        np.testing.assert_array_equal(np.asarray(nd), np.asarray(np_))
+        t, lens = nd.astype(jnp.int32), lens + 1
+
+
+def test_paged_invariance_structural(mesh122):
+    """The §3.3.1 check extended to paging: identical per-block byte→device
+    maps under base and shift + replicated block tables."""
+    cfg = reduced_cfg("qwen3-8b")
+    lay = Layout.from_mesh(mesh122, dp=("data",), sp=("sp",), tp=("tp",))
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh122)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh122)
+    isp = lambda x: isinstance(x, P)
+    assert verify_paged_invariance(
+        jax.tree.leaves(mb.abstract_paged_cache(16, 4)),
+        jax.tree.leaves(mb.paged_cache_specs(), is_leaf=isp),
+        jax.tree.leaves(ms.paged_cache_specs(), is_leaf=isp),
+        (8, 4), mb.block_table_spec(), ms.block_table_spec(),
+        mesh122, lay.model_axes)
+
+
+def test_paged_cache_shared_across_base_and_shift(mesh122):
+    """Zero-copy switching, numerically: prefill under the base (SP,TP)
+    config, then decode the SAME paged pool under the shift (TP) config;
+    tokens must match the single-device dense run."""
+    cfg = reduced_cfg("qwen3-8b")
+    ref = build_model(cfg, dtype=jnp.float32)
+    pr = ref.init_params(jax.random.key(0))
+    lay = Layout.from_mesh(mesh122, dp=("data",), sp=("sp",), tp=("tp",))
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh122, dtype=jnp.float32)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh122, dtype=jnp.float32)
+    pb = mb.init_params(jax.random.key(0))
+    ps = ms.init_params(jax.random.key(0))
+
+    B, bs, nmax = 8, 8, 4
+    bt = jnp.asarray(1 + np.arange(B * nmax).reshape(B, nmax), jnp.int32)
+    toks = jax.random.randint(jax.random.key(1), (B, 16), 0, cfg.vocab_size)
+    offs = jnp.zeros((B,), jnp.int32)
+
+    dense = ref.init_cache(B, bs * nmax)
+    lg, dense = ref.prefill_fn()(pr, dense, toks, offs)
+    t_ref = jnp.argmax(lg, -1).astype(jnp.int32)
+
+    pool = mb.init_paged_cache(B * nmax + 1, bs)
+    lgp, pool = mb.prefill_fn(paged=True)(pb, pool, toks, offs, bt)
+    t = jnp.argmax(lgp[:, :lg.shape[-1]], -1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(t_ref))
+
+    lens = jnp.full((B,), 16, jnp.int32)
+    dec_ref = ref.decode_fn()
+    dec_shift = ms.decode_fn(paged=True)     # shift config, same pool
+    dec_base = mb.decode_fn(paged=True)
+    for step in range(4):
+        nd, dense = dec_ref(pr, dense, t_ref, lens)
+        fn = dec_shift if step % 2 == 0 else dec_base   # alternate configs
+        np_, pool = fn(ps if step % 2 == 0 else pb, pool, t, lens, bt)
+        np.testing.assert_array_equal(np.asarray(nd), np.asarray(np_),
+                                      err_msg=f"step {step}")
+        t_ref = nd.astype(jnp.int32)
+        t = np.asarray(np_).astype(np.int32)
+        t = jnp.asarray(t)
+        lens = lens + 1
+
+
+# ---------------------------------------------------------------------------
+# engine oversubscription: admission control + LRU preemption
+# ---------------------------------------------------------------------------
+def test_engine_oversubscribed_completes_all():
+    """32 requests against block capacity for ~12 concurrent: admission
+    holds the excess in queue, decode-time growth preempts LRU requests,
+    and every request still completes with both configs exercised."""
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    # 12-token prompts + 6 new tokens = 18 tokens = 3 blocks of 8 eventually,
+    # but admission reserves only 2 — growth under pressure forces preemption
+    ecfg = EngineConfig(max_slots=16, s_max=64, prefill_chunk=8,
+                        threshold=4, block_size=8, num_blocks=25)
+    eng = ShiftEngine(m, m, params, params, ecfg,
+                      policy=ThresholdPolicy(4))
+    assert eng.paged
+    reqs = [Request(i, list(range(1, 13 + i % 5)), max_new_tokens=6)
+            for i in range(32)]                # staggered lengths: the tail
+    #                                            decodes in small (shift) batches
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=5000)
+    assert all(len(r.generated) == 6 for r in reqs)
+    assert eng.preemptions > 0                 # memory pressure was real
+    assert eng.kv.num_used_blocks == 0         # no block leaks
+    assert "base" in eng.config_trace and "shift" in eng.config_trace
+
+
+def test_engine_preempted_request_output_unchanged():
+    """Preemption must be output-invariant: a tight pool (forcing
+    recompute preemptions) and a pressure-free pool generate identical
+    tokens for every request."""
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    prompts = [list(range(1, 10 + i)) for i in range(6)]
+
+    def run(num_blocks):
+        ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                            threshold=4, block_size=8, num_blocks=num_blocks)
+        eng = ShiftEngine(m, m, params, params, ecfg,
+                          policy=ThresholdPolicy(4))
+        rs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+        for r in rs:
+            eng.add_request(r)
+        eng.run_until_idle(max_steps=5000)
+        return {r.rid: tuple(r.generated) for r in rs}, eng
+
+    roomy, _ = run(0)                          # auto: no pressure
+    tight, eng = run(7)                        # 6 usable blocks = 2 seqs
+    assert roomy == tight
+    assert eng.preemptions > 0                 # pressure actually preempted
+
+
+def test_paged_prefill_chunk_overhang_hits_null_block():
+    """A prefill chunk whose padding columns run PAST the block table
+    (positions >= nmax*bs) must not disturb real KV written in the same
+    call. The writes are routed to the null block explicitly: if they were
+    clipped into the last real column (one possible OOB-gather semantic),
+    the scatter would collide with — and could clobber — the real token at
+    the same block offset. Pins the contract across JAX OOB defaults."""
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    B, bs, nmax, C = 1, 8, 7, 32              # table covers 56 positions
+    bt = jnp.asarray(1 + np.arange(nmax)[None, :], jnp.int32)
+    toks = np.asarray(jax.random.randint(jax.random.key(2), (B, 49), 1,
+                                         cfg.vocab_size))
+    dense = m.init_cache(B, 64)
+    paged = m.init_paged_cache(nmax + 1, bs)
+    pf_d, pf_p = m.prefill_fn(), m.prefill_fn(paged=True)
+    # chunk 1: positions 0..31; chunk 2: off=32, real tokens through pos 48
+    # (block 6, offset 0) + padding through pos 63 — pos 56..63 overhang the
+    # table, and pre-fix their clipped writes collided with pos 48
+    c2 = np.zeros((B, C), np.int32)
+    c2[:, :17] = toks[:, 32:49]
+    for chunk, off in ((toks[:, :32], 0), (c2, 32)):
+        o = jnp.full((B,), off, jnp.int32)
+        _, dense = pf_d(params, dense, jnp.asarray(chunk), o)
+        _, paged = pf_p(params, paged, jnp.asarray(chunk), o, bt)
+    lens = jnp.full((B,), 49, jnp.int32)      # decode attends pos 0..49
+    t = jnp.asarray([7], jnp.int32)
+    ld, _ = m.decode_fn(sample=False)(params, dense, t, lens)
+    lp, _ = m.decode_fn(sample=False, paged=True)(params, paged, t, lens, bt)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lp),
+                               atol=1e-5, rtol=1e-5)
+    """Recurrent-state archs keep the contiguous cache; forcing paged
+    raises."""
+    cfg = reduced_cfg("mamba2-1.3b")
+    m = build_model(cfg, dtype=jnp.float32)
+    assert not m.supports_paged
+    params = m.init_params(jax.random.key(0))
+    ecfg = EngineConfig(max_slots=2, s_max=32, prefill_chunk=8)
+    eng = ShiftEngine(m, m, params, params, ecfg)
+    assert not eng.paged                       # auto fallback
+    with pytest.raises(ValueError):
+        ShiftEngine(m, m, params, params,
+                    EngineConfig(max_slots=2, s_max=32, paged=True))

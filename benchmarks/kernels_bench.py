@@ -1,56 +1,167 @@
-"""Kernel micro-benchmarks: wall time of the jnp reference path on CPU
-(the Pallas kernels run in interpret mode here — TPU timings are the
-roofline estimates in EXPERIMENTS.md §Roofline)."""
+"""Kernel + scheduling micro-benchmarks.
+
+Wall time of the jnp reference paths and the Pallas kernels in interpret
+mode on CPU (TPU timings are the roofline estimates in EXPERIMENTS.md
+§Roofline), plus two comparisons the mixed-batch engine rests on:
+
+* ragged-vs-padded paged attention — the padded kernel runs the full
+  ``nmax`` grid per sequence; the ragged kernel ``pl.when``-skips blocks
+  past each sequence's occupancy, and the engine additionally slices the
+  table batch to the occupied bucket (``ragged_sliced`` — the shape the
+  engine actually launches).
+* mixed-vs-serialized engine stepping — ServeSim replays the same bursty
+  trace under the fused prefill+decode schedule and the serialized
+  prefill-OR-decode schedule, costed by the roofline CostModel.
+
+Emits CSV rows (legacy, for benchmarks/run.py) and writes a
+machine-readable ``BENCH_kernels.json``:
+``python benchmarks/kernels_bench.py [--smoke] [--out BENCH_kernels.json]``
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels import ops
 from repro.kernels import ref as R
 
 
 def _t(fn, *args, iters=3):
-    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))  # compile
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(emit=print):
+def _ref_benches(rec, iters):
     k = jax.random.key(0)
     q = jax.random.normal(k, (8, 512, 64), jnp.float32)
     kk = jax.random.normal(k, (4, 512, 64), jnp.float32)
     f = jax.jit(lambda a, b, c: R.flash_attention_ref(a, b, c))
-    emit(f"kernel_ref,flash_512,{_t(f, q, kk, kk):.0f},us_per_call")
+    rec("ref.flash_512", _t(f, q, kk, kk, iters=iters), "us_per_call")
 
     qd = jax.random.normal(k, (8, 4, 2, 64), jnp.float32)
     kd = jax.random.normal(k, (8, 4, 1024, 64), jnp.float32)
     lens = jnp.full((8,), 800, jnp.int32)
     g = jax.jit(lambda a, b, c, l: R.decode_attention_ref(a, b, c, l))
-    emit(f"kernel_ref,decode_1k,{_t(g, qd, kd, kd, lens):.0f},us_per_call")
+    rec("ref.decode_1k", _t(g, qd, kd, kd, lens, iters=iters), "us_per_call")
 
     bs, nmax, nblocks = 16, 64, 512
     kpool = jax.random.normal(k, (nblocks, bs, 4, 64), jnp.float32)
     bt = jax.random.randint(k, (8, nmax), 1, nblocks).astype(jnp.int32)
     gp = jax.jit(lambda a, b, c, t, l: R.paged_decode_attention_ref(a, b, c, t, l))
-    emit(f"kernel_ref,paged_decode_1k,"
-         f"{_t(gp, qd, kpool, kpool, bt, lens):.0f},us_per_call")
+    rec("ref.paged_decode_1k", _t(gp, qd, kpool, kpool, bt, lens, iters=iters),
+        "us_per_call")
 
     x = jax.random.normal(k, (12, 64, 32), jnp.float32)
     b = jax.random.normal(k, (12, 64, 16), jnp.float32) * 0.3
     dt = jax.nn.softplus(jax.random.normal(k, (12, 64, 1), jnp.float32))
     cum = jnp.cumsum(-dt * 0.5, axis=1)
     h = jax.jit(lambda *a: R.ssd_chunk_ref(*a))
-    emit(f"kernel_ref,ssd_chunk,{_t(h, x, b, b, dt, cum):.0f},us_per_call")
+    rec("ref.ssd_chunk", _t(h, x, b, b, dt, cum, iters=iters), "us_per_call")
 
     xn = jax.random.normal(k, (4096, 1024), jnp.float32)
     s = jnp.ones((1024,), jnp.float32)
     rn = jax.jit(lambda a, b: R.rmsnorm_ref(a, b))
-    emit(f"kernel_ref,rmsnorm_4Mx,{_t(rn, xn, s):.0f},us_per_call")
+    rec("ref.rmsnorm_4Mx", _t(rn, xn, s, iters=iters), "us_per_call")
+
+
+def _ragged_vs_padded(rec, iters, smoke):
+    """Short sequences (3 mapped blocks) against a long-s_max table: the
+    padded grid pays nmax blocks of DMA+compute per sequence; the ragged
+    kernel skips past the occupancy, and slicing the table to the occupied
+    bucket (what the engine launches) shrinks the grid itself."""
+    B, Hq, Hkv, D, bs = 8, 8, 2, 64, 16
+    nmax = 32 if smoke else 64
+    n_mapped, ctx = 3, 40                        # tokens resident per seq
+    nblocks = B * n_mapped + 1
+    k = jax.random.key(0)
+    q = jax.random.normal(k, (B, 1, Hq, D), jnp.float32)
+    kp = jax.random.normal(k, (nblocks, bs, Hkv, D), jnp.float32)
+    vp = jax.random.normal(k, (nblocks, bs, Hkv, D), jnp.float32)
+    bt = np.zeros((B, nmax), np.int32)           # unmapped tail = null block
+    bt[:, :n_mapped] = 1 + np.arange(B * n_mapped).reshape(B, n_mapped)
+    lens = jnp.full((B,), ctx, jnp.int32)
+    ones = jnp.ones((B,), jnp.int32)
+    sliced = jnp.asarray(bt[:, :4])              # engine's pow2 bucket of 3
+    t_pad = _t(ops.paged_decode_attention, q, kp, vp, jnp.asarray(bt), lens,
+               iters=iters)
+    t_rag = _t(ops.paged_ragged_attention, q, kp, vp, jnp.asarray(bt), ones,
+               lens, iters=iters)
+    t_sli = _t(ops.paged_ragged_attention, q, kp, vp, sliced, ones, lens,
+               iters=iters)
+    rec(f"paged.padded_nmax{nmax}", t_pad, "us_per_call")
+    rec(f"paged.ragged_skip_nmax{nmax}", t_rag, "us_per_call")
+    rec("paged.ragged_sliced", t_sli, "us_per_call")
+    rec("paged.speedup_skip", t_pad / t_rag, "x")
+    rec("paged.speedup_sliced", t_pad / t_sli, "x")
+
+
+def _mixed_vs_serialized(rec, smoke):
+    """Same bursty trace, two schedules, roofline-costed iterations."""
+    from repro.configs import get_config
+    from repro.roofline.terms import H200
+    from repro.sim.costmodel import CostModel
+    from repro.sim.simulator import ServeSim, SimRequest
+
+    cfg = get_config("qwen3-8b")
+    n_req = 16 if smoke else 64
+    # bursts of long prompts landing while earlier requests decode — the
+    # serialized schedule starves those decodes for whole iterations
+    trace = [(0.2 * (i // 8), 512, 64) for i in range(n_req)]
+    out = {}
+    for mixed in (True, False):
+        sim = ServeSim(CostModel(cfg, hw=H200), "shift", n_chips=8,
+                       prefill_chunk=512, mixed=mixed)
+        reqs = sim.run([SimRequest(i, t, ni, no)
+                        for i, (t, ni, no) in enumerate(trace)])
+        done = [r for r in reqs if r.finish >= 0]
+        tpots = sorted(r.tpot for r in done if r.n_out > 1)
+        name = "mixed" if mixed else "serialized"
+        out[name] = dict(iters=sim.iterations, starved=sim.starved_steps,
+                         tpot_p50=tpots[len(tpots) // 2],
+                         tpot_p99=tpots[min(len(tpots) - 1,
+                                            int(len(tpots) * 0.99))],
+                         makespan=max(r.finish for r in done))
+        rec(f"step.{name}_iterations", sim.iterations, "iters")
+        rec(f"step.{name}_starved_steps", sim.starved_steps, "iters")
+        rec(f"step.{name}_tpot_p50", out[name]["tpot_p50"] * 1e3, "ms")
+        rec(f"step.{name}_tpot_p99", out[name]["tpot_p99"] * 1e3, "ms")
+        rec(f"step.{name}_makespan", out[name]["makespan"], "s")
+    rec("step.tpot_p50_ratio",
+        out["serialized"]["tpot_p50"] / out["mixed"]["tpot_p50"], "x")
+    rec("step.tpot_p99_ratio",
+        out["serialized"]["tpot_p99"] / out["mixed"]["tpot_p99"], "x")
+
+
+def main(emit=print, smoke=False, out="BENCH_kernels.json"):
+    entries = []
+
+    def rec(name, value, unit):
+        entries.append({"name": name, "value": float(value), "unit": unit})
+        emit(f"kernel,{name},{value:.1f},{unit}")
+
+    iters = 1 if smoke else 3
+    _ref_benches(rec, iters)
+    _ragged_vs_padded(rec, iters, smoke)
+    _mixed_vs_serialized(rec, smoke)
+    if out:
+        with open(out, "w") as f:
+            json.dump({"smoke": smoke, "entries": entries}, f, indent=1)
+        emit(f"# wrote {out} ({len(entries)} entries)")
+    return entries
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / single iteration (CI)")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    a = ap.parse_args()
+    main(smoke=a.smoke, out=a.out)

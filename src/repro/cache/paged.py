@@ -39,6 +39,15 @@ class PagedKVCache:
         # unmapped entries point at the null block (0)
         self.table = np.zeros((max_seqs, max_blocks_per_seq), np.int32)
         self.n_mapped = np.zeros((max_seqs,), np.int32)
+        # slots whose table rows changed since the last take_dirty() — lets
+        # the engine keep a persistent host mirror and re-copy only changed
+        # rows instead of rebuilding the full [max_seqs, nmax] array each step
+        self._dirty: set = set()
+
+    def take_dirty(self) -> set:
+        """Slots whose tables changed since the last call (and clear)."""
+        d, self._dirty = self._dirty, set()
+        return d
 
     # ------------------------------------------------------------- queries
     @property
@@ -78,12 +87,14 @@ class PagedKVCache:
             return False
         self.table[seq, self.n_mapped[seq]:need] = new
         self.n_mapped[seq] = need
+        self._dirty.add(seq)
         return True
 
     def free_seq(self, seq: int):
         self.allocator.free(self.seq_blocks(seq))
         self.table[seq, :] = BlockAllocator.NULL_BLOCK
         self.n_mapped[seq] = 0
+        self._dirty.add(seq)
 
     def fork(self, src: int, dst: int):
         """Share src's blocks into dst (ref-counted) — prefix-sharing hook."""
@@ -93,6 +104,7 @@ class PagedKVCache:
         n = int(self.n_mapped[src])
         self.table[dst, :n] = self.table[src, :n]
         self.n_mapped[dst] = n
+        self._dirty.add(dst)
 
     # ----------------------------------------------------------- snapshot
     def state_dict(self) -> dict:
@@ -110,4 +122,5 @@ class PagedKVCache:
         kv.table = state["table"].copy()
         kv.n_mapped = state["n_mapped"].copy()
         kv.allocator = BlockAllocator.from_state(alloc_state)
+        kv._dirty = set(range(kv.table.shape[0]))   # force mirror refresh
         return kv

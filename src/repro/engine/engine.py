@@ -20,9 +20,17 @@ freed), which bounds memory while guaranteeing progress. Architectures
 with non-pageable state (MLA latents, ring buffers, recurrent state) fall
 back to the contiguous cache and pure slot admission.
 
-Scheduling is continuous batching with chunked prefill (Sarathi-style; the
-paper runs its experiments with this combination): each iteration is either
-a prefill chunk batch or a decode batch over the active slots. Shapes are
+Scheduling on the paged cache is continuous batching with *mixed* batches
+(Sarathi/Arctic-Inference-style): every iteration packs up to
+``prefill_chunk`` prompt tokens per prefilling row PLUS all ready decode
+rows into ONE forward pass (``Model.forward_fn``), so a prompt burst never
+stalls in-flight decodes — the TPOT interference the serialized
+prefill-OR-decode loop suffered. The shift policy sees the combined token
+count (mixed batches are bigger, so Algorithm 2 reacts to real load) and
+the device batch is compacted to the active rows and bucketed, instead of
+padding every launch to ``max_slots``. The dense fallback (and
+``mixed=False`` for A/B comparison) keeps the serialized iteration: each
+step is either a prefill chunk batch or a decode batch. Shapes are
 bucketed so each (config, shape) pair compiles once — the JAX analogue of
 the paper's per-shape CUDA-graph capture."""
 from __future__ import annotations
@@ -40,6 +48,19 @@ from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
 from repro.models.model import Model
 from .request import Request
 
+# Rolling-window length for per-step diagnostics (config_trace, step_times,
+# step_log). Totals live in counters (step_count, config_counts,
+# total_step_time) so long-running engines don't grow without bound.
+TRACE_WINDOW = 1024
+
+
+def _pow2(n: int) -> int:
+    """Smallest power of two >= n (shape-bucketing for compiled programs)."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
 
 @dataclass
 class EngineConfig:
@@ -56,6 +77,11 @@ class EngineConfig:
     #                                  (no memory pressure). Smaller values
     #                                  oversubscribe and exercise admission
     #                                  control + preemption.
+    # scheduling -----------------------------------------------------------
+    mixed: Optional[bool] = None     # None: auto (mixed whenever paged).
+    #                                  False keeps the serialized
+    #                                  prefill-OR-decode iteration (the
+    #                                  dense fallback always uses it).
 
 
 class ShiftEngine:
@@ -78,6 +104,11 @@ class ShiftEngine:
                 f"config {self.mcfg.name} cannot use a paged KV cache "
                 "(non-pageable layer kinds or dp-sharded engine)")
         self.paged = can_page if cfg.paged is None else cfg.paged
+        self.mixed = self.paged if cfg.mixed is None else cfg.mixed
+        if self.mixed and not self.paged:
+            raise ValueError(
+                "mixed-batch stepping requires the paged KV cache (ragged "
+                "rows scatter through the block table's null block)")
         if self.paged:
             nmax = blocks_for_tokens(cfg.s_max, cfg.block_size)
             num_blocks = cfg.num_blocks or cfg.max_slots * nmax + 1
@@ -85,6 +116,10 @@ class ShiftEngine:
                                    cfg.max_slots, nmax)
             self.cache = model_base.init_paged_cache(num_blocks,
                                                      cfg.block_size)
+            # persistent host mirror of the block tables; only rows the
+            # PagedKVCache marks dirty are re-copied (satellite of the
+            # full-rebuild-per-step fix)
+            self._bt_host = np.zeros((cfg.max_slots, nmax), np.int32)
         else:
             self.kv = None
             self.cache = model_base.init_cache(cfg.max_slots, cfg.s_max)
@@ -93,20 +128,35 @@ class ShiftEngine:
         self.queue: List[Request] = []
         self.step_count = 0
         self.preemptions = 0
+        # rolling diagnostics + monotone totals
+        self.trace_window = TRACE_WINDOW
         self.config_trace: List[str] = []
+        self.config_counts = {"base": 0, "shift": 0}
         self.step_times: List[float] = []
+        self.total_step_time = 0.0
+        self.step_log: List[dict] = []   # per-step batch composition
 
         pg = self.paged
-        self._prefill = {
-            "base": jax.jit(model_base.prefill_fn(paged=pg),
-                            donate_argnums=(1,)),
-            "shift": jax.jit(model_shift.prefill_fn(paged=pg),
-                             donate_argnums=(1,))}
-        self._decode = {
-            "base": jax.jit(model_base.decode_fn(True, paged=pg),
-                            donate_argnums=(1,)),
-            "shift": jax.jit(model_shift.decode_fn(True, paged=pg),
-                             donate_argnums=(1,))}
+        if self.mixed:
+            # ONE unified program per config replaces the 2×2
+            # prefill/decode table: prefill chunks and decode rows share a
+            # forward pass, so the policy prices the real iteration.
+            self._forward = {
+                "base": jax.jit(model_base.forward_fn(paged=True),
+                                donate_argnums=(1,)),
+                "shift": jax.jit(model_shift.forward_fn(paged=True),
+                                 donate_argnums=(1,))}
+        else:
+            self._prefill = {
+                "base": jax.jit(model_base.prefill_fn(paged=pg),
+                                donate_argnums=(1,)),
+                "shift": jax.jit(model_shift.prefill_fn(paged=pg),
+                                 donate_argnums=(1,))}
+            self._decode = {
+                "base": jax.jit(model_base.decode_fn(True, paged=pg),
+                                donate_argnums=(1,)),
+                "shift": jax.jit(model_shift.decode_fn(True, paged=pg),
+                                 donate_argnums=(1,))}
 
     # ---------------------------------------------------------------- admin
     def add_request(self, req: Request):
@@ -170,22 +220,144 @@ class ShiftEngine:
                               key=lambda a: (a.last_used, -a.arrival)))
         return True
 
+    def _refresh_block_tables(self):
+        """Sync the persistent host mirror: re-copy only rows whose tables
+        changed since the last step (growth, free, fork)."""
+        for s in self.kv.take_dirty():
+            self._bt_host[s] = self.kv.table[s]
+
     def _block_tables(self, rows: List[Request]) -> np.ndarray:
-        """Device block-table batch: rows outside this batch stay all-null
-        so their (garbage) scatter lands in the null block."""
+        """Device block-table batch for the serialized path, from the host
+        mirror. Rows outside this batch stay all-null so their (garbage)
+        scatter lands in the null block."""
+        self._refresh_block_tables()
         bt = np.zeros((self.cfg.max_slots, self.kv.max_blocks_per_seq),
                       np.int32)
-        for r in rows:
-            bt[r.slot] = self.kv.table[r.slot]
+        idx = [r.slot for r in rows]
+        bt[idx] = self._bt_host[idx]
         return bt
 
     # ---------------------------------------------------------------- steps
     def _choose(self, n_tokens: int, n_prefill: int) -> str:
         use_base = self.policy.use_base(n_tokens, n_prefill)
         name = "base" if use_base else "shift"
+        self.config_counts[name] += 1
         self.config_trace.append(name)
+        if len(self.config_trace) > self.trace_window:
+            del self.config_trace[:len(self.config_trace) - self.trace_window]
         return name
 
+    def _log_step(self, n_prefill: int, n_decode: int, n_ready: int):
+        self.step_log.append({"prefill_tokens": n_prefill,
+                              "decode_tokens": n_decode,
+                              "ready_decodes": n_ready})
+        if len(self.step_log) > self.trace_window:
+            del self.step_log[:len(self.step_log) - self.trace_window]
+
+    def _finish_token(self, r: Request, tok: int, t: float):
+        """Append a sampled token and retire the request if it is done."""
+        r.generated.append(tok)
+        # the forward wrote this step's input tokens through position
+        # r.pos-1, so the cache covers everything before the new last token
+        r.prefilled = r.pos
+        if r.first_token_time is None:
+            r.first_token_time = t
+        self.lens[r.slot] = r.pos
+        if r.done or (self.cfg.eos_id >= 0
+                      and r.generated[-1] == self.cfg.eos_id):
+            r.finish_time = t
+            if self.paged:
+                self.kv.free_seq(r.slot)
+            self.slot_req[r.slot] = None
+            self.queue = [q for q in self.queue if q.rid != r.rid]
+
+    # -------------------------------------------------------- mixed stepping
+    def _run_mixed(self) -> bool:
+        """One fused iteration: every ready decode row PLUS a prefill chunk
+        for every row still swallowing its (re)prompt, in a single forward
+        pass. Decode rows reserve blocks first — a prompt burst can shrink
+        the prefill side but never starve in-flight decodes (it can only
+        lose rows to preemption under real memory pressure). A prefill row
+        whose chunk reaches its last known token samples its next token in
+        the same pass (fused prefill→first-token, one fewer iteration per
+        request)."""
+        C = self.cfg.prefill_chunk
+        ready = [r for r in self.active if self._prefill_done(r) and not r.done]
+        n_ready = len(ready)
+        rows = []                          # (req, off, q_len, produces)
+        protect = set()
+        for r in ready:
+            if r.slot is None:
+                continue                   # preempted by an earlier reserve
+            # coverage for the token written this step (position r.pos)
+            if self._reserve(r, r.total_tokens, protect=protect):
+                rows.append((r, r.pos, 1, True))
+                protect.add(r)
+        n_decode = len(rows)
+        n_prefill_tok = 0
+        for r in list(self.active):
+            if r.slot is None or r.done or self._prefill_done(r):
+                continue
+            off = r.prefilled
+            end = min(off + C, r.total_tokens)
+            if end <= off:
+                continue
+            if not self._reserve(r, end, protect=protect):
+                continue
+            # the chunk runs through the LAST known token: when it reaches
+            # the end, this pass also samples the row's next token
+            rows.append((r, off, end - off, end == r.total_tokens))
+            protect.add(r)
+            n_prefill_tok += end - off
+        if not rows:
+            self._log_step(0, 0, n_ready)
+            return False
+
+        mode = self._choose(n_prefill_tok + n_decode, n_prefill_tok)
+        model = self.base if mode == "base" else self.shift
+        params = self.p_base if mode == "base" else self.p_shift
+        # compact to active rows; bucket every axis so each (config, shape)
+        # compiles once. The chunk axis must stay divisible by the chosen
+        # config's sp degree (decode-only batches on the shift config are
+        # [R, 1] — no padded rectangle).
+        Rb = _pow2(len(rows))
+        Cb = max(_pow2(max(ql for _, _, ql, _ in rows)),
+                 max(model.lay.sp, 1))
+        self._refresh_block_tables()
+        nmax = self.kv.max_blocks_per_seq
+        # slice the table batch to the occupied prefix: gather/scatter and
+        # attention work scale with actual cache occupancy, not s_max
+        nb = max(int(max(self.kv.n_mapped[r.slot] for r, _, _, _ in rows)), 1)
+        nbb = min(_pow2(nb), nmax)
+        toks = np.zeros((Rb, Cb), np.int32)
+        qlen = np.zeros((Rb,), np.int32)
+        offs = np.zeros((Rb,), np.int32)
+        bt = np.zeros((Rb, nbb), np.int32)
+        for i, (r, off, ql, _) in enumerate(rows):
+            if ql == 1 and off == r.pos:       # decode row: O(1) last token
+                toks[i, 0] = (r.generated[-1] if r.generated
+                              else r.prompt[-1])
+            else:
+                toks[i, :ql] = r.all_tokens()[off:off + ql]
+            qlen[i] = ql
+            offs[i] = off
+            bt[i] = self._bt_host[r.slot, :nbb]
+        args = [jnp.asarray(toks), jnp.asarray(qlen), jnp.asarray(offs),
+                jnp.asarray(bt)]
+        nxt, self.cache = self._forward[mode](params, self.cache, *args,
+                                              *self._extras(Rb))
+        nxt = np.asarray(nxt)
+        t = self.now()
+        for i, (r, off, ql, produces) in enumerate(rows):
+            r.prefilled = off + ql
+            r.last_used = self.step_count
+            self.lens[r.slot] = r.prefilled
+            if produces:
+                self._finish_token(r, int(nxt[i]), t)
+        self._log_step(n_prefill_tok, n_decode, n_ready)
+        return True
+
+    # --------------------------------------------------- serialized stepping
     def _run_prefill(self):
         """One chunked-prefill iteration over slots that still need their
         (re)prompt — after a preemption, prompt+generated re-prefill here."""
@@ -223,7 +395,7 @@ class ShiftEngine:
         n_tok = sum(n for _, n in rows)
         mode = self._choose(n_tok, n_tok)
         params = self.p_base if mode == "base" else self.p_shift
-        extras = self._extras()
+        extras = self._extras(self.cfg.max_slots)
         args = [jnp.asarray(toks), jnp.asarray(offs)]
         if self.paged:
             args.append(jnp.asarray(self._block_tables([r for r, _ in rows])))
@@ -233,6 +405,9 @@ class ShiftEngine:
             r.prefilled += n
             r.last_used = self.step_count
             self.lens[r.slot] = r.prefilled
+        self._log_step(n_tok, 0,
+                       sum(1 for r in self.active
+                           if self._prefill_done(r) and not r.done))
         return True
 
     def _prefill_done(self, r) -> bool:
@@ -241,6 +416,7 @@ class ShiftEngine:
     def _run_decode(self):
         ready = [r for r in self.active
                  if self._prefill_done(r) and not r.done]
+        n_ready = len(ready)
         if self.paged:
             kept = []
             for r in ready:
@@ -266,32 +442,18 @@ class ShiftEngine:
         nxt = np.asarray(nxt)
         t = self.now()
         for r in ready:
-            r.generated.append(int(nxt[r.slot]))
-            # the decode wrote this step's input token at position r.pos-1,
-            # so the cache now covers everything before the new last token —
-            # without this, r.pos outruns prefilled and every decode step
-            # would be preceded by a spurious 1-token re-prefill
-            r.prefilled = r.pos
             r.last_used = self.step_count
-            if r.first_token_time is None:
-                r.first_token_time = t
-            self.lens[r.slot] = r.pos
-            if r.done or (self.cfg.eos_id >= 0
-                          and r.generated[-1] == self.cfg.eos_id):
-                r.finish_time = t
-                if self.paged:
-                    self.kv.free_seq(r.slot)
-                self.slot_req[r.slot] = None
-                self.queue = [q for q in self.queue if q.rid != r.rid]
+            self._finish_token(r, int(nxt[r.slot]), t)
+        self._log_step(0, len(ready), n_ready)
         return True
 
-    def _extras(self):
+    def _extras(self, batch: int):
         ex = []
         if self.mcfg.frontend == "vision_stub":
-            ex.append(jnp.zeros((self.cfg.max_slots, self.mcfg.frontend_seq,
+            ex.append(jnp.zeros((batch, self.mcfg.frontend_seq,
                                  self.mcfg.d_model), self.base.dtype))
         if self.mcfg.encoder_layers:
-            ex.append(jnp.zeros((self.cfg.max_slots, self.mcfg.encoder_seq,
+            ex.append(jnp.zeros((batch, self.mcfg.encoder_seq,
                                  self.mcfg.d_model), self.base.dtype))
         return ex
 
@@ -299,11 +461,20 @@ class ShiftEngine:
         """One engine iteration. Returns False when idle."""
         t0 = self.now()
         self._admit()
-        # prefill-priority with chunking; decode otherwise (chunked prefill
-        # interleaves at iteration granularity)
-        progressed = self._run_prefill() or self._run_decode()
+        if self.mixed:
+            # fused prefill+decode batch: no iteration-granularity
+            # interference between a prompt burst and in-flight decodes
+            progressed = self._run_mixed()
+        else:
+            # prefill-priority with chunking; decode otherwise (chunked
+            # prefill interleaves at iteration granularity)
+            progressed = self._run_prefill() or self._run_decode()
         self.step_count += 1
-        self.step_times.append(self.now() - t0)
+        dt = self.now() - t0
+        self.total_step_time += dt
+        self.step_times.append(dt)
+        if len(self.step_times) > self.trace_window:
+            del self.step_times[:len(self.step_times) - self.trace_window]
         return progressed
 
     def run_until_idle(self, max_steps: int = 10000):
@@ -338,6 +509,7 @@ class ShiftEngine:
         if self.paged:
             assert "kv" in snap, "paged engine restoring a dense snapshot"
             self.kv = PagedKVCache.from_state(snap["kv"])
+            self._refresh_block_tables()   # from_state marks all rows dirty
         self.slot_req = [None] * self.cfg.max_slots
         self.queue = []
         for rd in snap["requests"]:

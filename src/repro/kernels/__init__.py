@@ -1,4 +1,4 @@
 from .ops import (flash_attention, decode_attention, paged_decode_attention,
-                  ssd_chunk, rmsnorm)
+                  paged_ragged_attention, ssd_chunk, rmsnorm)
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
-           "ssd_chunk", "rmsnorm"]
+           "paged_ragged_attention", "ssd_chunk", "rmsnorm"]

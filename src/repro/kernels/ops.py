@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention_kernel
 from .decode_attention import decode_attention_kernel
 from .paged_decode_attention import paged_decode_attention_kernel
+from .paged_ragged_attention import paged_ragged_attention_kernel
 from .ssd_scan import ssd_chunk_kernel
 from .rmsnorm import rmsnorm_kernel
 
@@ -60,6 +61,22 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lens):
                                         v_pool, block_tables, lens,
                                         interpret=_on_cpu())
     return out.reshape(B, 1, Hq, D)
+
+
+@jax.jit
+def paged_ragged_attention(q, k_pool, v_pool, block_tables, q_lens, ctx_lens):
+    """q: [B, C, Hq, D] — C ragged query columns (columns >= q_lens[b] are
+    padding); k_pool/v_pool: [num_blocks, bs, Hkv, D]; block_tables:
+    [B, nmax]; q_lens/ctx_lens: [B] -> [B, C, Hq, D]. Work is proportional
+    to each sequence's mapped blocks, not nmax."""
+    B, C, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    g = Hq // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B, Hkv, g, C, D)
+    out = paged_ragged_attention_kernel(qf, k_pool, v_pool, block_tables,
+                                        q_lens, ctx_lens,
+                                        interpret=_on_cpu())
+    return out.reshape(B, Hq, C, D).transpose(0, 2, 1, 3)
 
 
 @jax.jit

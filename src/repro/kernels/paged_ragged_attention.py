@@ -1,0 +1,125 @@
+"""Work-proportional ragged paged GQA attention Pallas TPU kernel.
+
+Generalizes ``paged_decode_attention.py`` along two axes:
+
+* **Ragged queries** — every sequence brings ``q_lens[b]`` fresh tokens
+  (``q_len ∈ {0, 1, …, C}``), so one kernel serves pure decode (``C == 1``),
+  chunked prefill, and the engine's mixed prefill+decode batches.  Rows past
+  ``q_lens[b]`` are padding; their output is unspecified-but-finite (the
+  caller discards them).
+
+* **Work proportional to cache occupancy** — the per-sequence block count
+  ``ceil(ctx_lens[b] / block_size)`` is derived from the scalar-prefetched
+  ``ctx_lens`` and every grid step past it is ``pl.when``-skipped entirely
+  (no compute, no softmax update, no output write).  Unmapped table entries
+  point at the null block (0), so the skipped steps' index maps keep
+  returning block 0 and the pipeline never re-DMAs it.  A short sequence in
+  a long-``nmax`` table therefore costs ~its own blocks, not ``nmax``.
+
+Grid: ``(B*Hkv, nmax)``.  One instance owns the kv head's query group for
+all C ragged columns — ``[g*C, D]`` rows of online softmax state.  The
+output for row ``c`` attends positions ``0 .. ctx_lens[b]-q_lens[b]+c``
+(causal over the global positions of the ragged tail).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, qlen_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs, hkv, C, scale):
+    n = pl.program_id(0)
+    ib = pl.program_id(1)
+    b = n // hkv
+    ctx = ctx_ref[b]
+    # blocks this sequence actually occupies; at least 1 so the ib == 0 step
+    # still initializes + writes (empty rows produce zeros, not garbage)
+    nblk = jnp.maximum(pl.cdiv(ctx, bs), 1)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((ib < nblk) & (ctx > 0))
+    def _compute():
+        q = q_ref[0, 0].reshape(-1, q_ref.shape[-1])    # [g*C, D]
+        k = k_ref[0, :, 0]                              # [bs, D]
+        v = v_ref[0, :, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # row r of the flattened [g*C] axis is ragged column c = r % C whose
+        # global query position is ctx - q_len + c
+        c = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % C
+        qpos = ctx - qlen_ref[b] + c
+        kpos = ib * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((kpos <= qpos) & (kpos < ctx), s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ib == nblk - 1)
+    def _done():
+        g = o_ref.shape[2]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).reshape(g, C, o_ref.shape[-1]).astype(o_ref.dtype)
+
+
+def paged_ragged_attention_kernel(q, k_pool, v_pool, block_tables, q_lens,
+                                  ctx_lens, *, interpret=False):
+    """q: [B, Hkv, g, C, D] — C ragged query columns per sequence;
+    k_pool/v_pool: [num_blocks, bs, Hkv, D];
+    block_tables: [B, nmax] (logical→physical, 0 = null block);
+    q_lens: [B] fresh tokens this call (columns >= q_lens[b] are padding);
+    ctx_lens: [B] total valid kv length incl. the fresh tokens.
+    Returns [B, Hkv, g, C, D]; padding columns are unspecified."""
+    B, Hkv, g, C, D = q.shape
+    bs = k_pool.shape[1]
+    nmax = block_tables.shape[1]
+    kern = functools.partial(_kernel, bs=bs, hkv=Hkv, C=C, scale=D ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                  # block_tables, q_lens, ctx_lens
+        grid=(B * Hkv, nmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, C, D),
+                         lambda n, ib, bt, ql, cl: (n // Hkv, n % Hkv,
+                                                    0, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda n, ib, bt, ql, cl: (bt[n // Hkv, ib], 0,
+                                                    n % Hkv, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda n, ib, bt, ql, cl: (bt[n // Hkv, ib], 0,
+                                                    n % Hkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, C, D),
+                               lambda n, ib, bt, ql, cl: (n // Hkv, n % Hkv,
+                                                          0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * C, 1), jnp.float32),
+            pltpu.VMEM((g * C, 1), jnp.float32),
+            pltpu.VMEM((g * C, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, C, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q_lens.astype(jnp.int32),
+      ctx_lens.astype(jnp.int32), q, k_pool, v_pool)
+    return out

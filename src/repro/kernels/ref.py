@@ -48,6 +48,29 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lens):
     return decode_attention_ref(q, k, v, lens)
 
 
+def paged_ragged_attention_ref(q, k_pool, v_pool, block_tables, q_lens,
+                               ctx_lens):
+    """Oracle for the ragged paged kernel. q: [B, Hkv, g, C, D] — C ragged
+    query columns per sequence, column c of row b sits at global position
+    ``ctx_lens[b] - q_lens[b] + c``; k_pool/v_pool: [num_blocks, bs, Hkv, D];
+    block_tables: [B, nmax]; q_lens/ctx_lens: [B]. Returns
+    [B, Hkv, g, C, D]; columns >= q_lens[b] carry padding positions and are
+    don't-care (but match the kernel's masking exactly)."""
+    B, Hkv, g, C, D = q.shape
+    bs = k_pool.shape[1]
+    nmax = block_tables.shape[1]
+    kg = k_pool[block_tables].reshape(B, nmax * bs, Hkv, D)
+    vg = v_pool[block_tables].reshape(B, nmax * bs, Hkv, D)
+    qb = q.transpose(0, 3, 1, 2, 4).reshape(B, C, Hkv * g, D)
+    q_pos = ctx_lens[:, None] - q_lens[:, None] + jnp.arange(C)[None, :]
+    out = _attend(qb, kg, vg, q_pos, jnp.arange(nmax * bs), causal=True,
+                  kv_len=ctx_lens)
+    # empty rows (ctx == 0): fully-masked softmax degenerates to a mean of
+    # the null block; the kernel defines them as zeros instead
+    out = jnp.where((ctx_lens > 0)[:, None, None, None], out, 0.0)
+    return out.reshape(B, C, Hkv, g, D).transpose(0, 2, 3, 1, 4)
+
+
 def ssd_chunk_ref(x, b, c, dt, cum):
     """Oracle for the intra-chunk SSD kernel. Shapes as in ssd_chunk_kernel."""
     xf, bf, cf = (t.astype(jnp.float32) for t in (x, b, c))

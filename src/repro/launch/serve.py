@@ -79,8 +79,9 @@ def main():
         print(f"req {r.rid}: {len(r.generated)} tokens, ttft={ttft*1e3:.0f}ms, "
               f"out={r.generated[:8]}...")
     n_tok = sum(len(r.generated) for r in reqs)
-    print(f"configs used: base={eng.config_trace.count('base')} "
-          f"shift={eng.config_trace.count('shift')}; "
+    # totals, not config_trace.count(): the trace is a rolling window
+    print(f"configs used: base={eng.config_counts['base']} "
+          f"shift={eng.config_counts['shift']}; "
           f"{n_tok} tokens in {dt:.2f}s")
     if eng.paged:
         print(f"paged cache: {eng.kv.allocator.num_blocks} blocks x "

@@ -365,6 +365,38 @@ def paged_attn_decode(p, x, cache, lens, block_tables, cfg, lay: Layout):
     return out[0], {"k": kc, "v": vc}
 
 
+def paged_attn_mixed(p, x, cache, offsets, q_lens, block_tables, cfg,
+                     lay: Layout):
+    """Ragged mixed prefill+decode against the paged pool. x: [B, S_loc, d]
+    where each row carries ``q_lens[b]`` fresh tokens starting at cache
+    position ``offsets[b]`` (decode rows have q_len == 1, prefill rows up
+    to the chunk width, padding rows 0). Columns past ``q_lens`` scatter
+    into the null block and their outputs are garbage-but-finite (the
+    caller discards them). Returns (out [B, S_loc, d], cache)."""
+    plan = get_plan(cfg, lay)
+    q, k, v = _project_exchange(p, x, cfg, lay, plan)
+    B, S = q.shape[:2]
+    pos = offsets[:, None] + jnp.arange(S)[None, :]            # [B, S] global
+    q, k = _qk_post(p, q, k, pos, cfg, True)
+
+    kc, vc = cache["k"], cache["v"]
+    bs = kc.shape[1]
+    nmax = block_tables.shape[1]
+    # ragged scatter: only the first q_lens[b] columns are real tokens; the
+    # rest (and any chunk overhang past the table) land in the null block
+    valid = (jnp.arange(S)[None, :] < q_lens[:, None]) & (pos // bs < nmax)
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.minimum(pos // bs, nmax - 1), axis=1)
+    blk = jnp.where(valid, blk, 0)                              # [B, S]
+    kc = kc.at[blk, pos % bs].set(k)
+    vc = vc.at[blk, pos % bs].set(v)
+    out = attend(q, _paged_gather(kc, block_tables),
+                 _paged_gather(vc, block_tables), pos,
+                 jnp.arange(nmax * bs), causal=True,
+                 kv_len=offsets + q_lens, soft_cap=cfg.logits_soft_cap)
+    return _finish(p, out, plan, lay), {"k": kc, "v": vc}
+
+
 # ---------------------------------------------------------------------------
 # cross attention (whisper decoder)
 # ---------------------------------------------------------------------------

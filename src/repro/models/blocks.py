@@ -139,6 +139,10 @@ def block_prefill(p, kind, x, cache, ctx, cfg, lay: Layout, pod_scale=False,
     if kind in ("attn", "moe"):
         if _use_mla(cfg):
             a, cache = M.mla_prefill(p["attn"], h, cache, offsets, cfg, lay)
+        elif ctx.get("q_lens") is not None:
+            a, cache = A.paged_attn_mixed(p["attn"], h, cache, offsets,
+                                          ctx["q_lens"],
+                                          ctx["block_tables"], cfg, lay)
         elif ctx.get("block_tables") is not None:
             a, cache = A.paged_attn_prefill(p["attn"], h, cache, offsets,
                                             ctx["block_tables"], cfg, lay)

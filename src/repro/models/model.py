@@ -148,6 +148,36 @@ class Model:
         out_tok = P(dp) if sample else P(tok_b, lay.tp_axes or None)
         return self._wrap(body, tuple(in_specs), (out_tok, cspec))
 
+    def forward_fn(self, paged: bool = True, sample: bool = True):
+        """Unified mixed-batch step: chunked-prefill rows (q_len up to the
+        chunk width) and decode rows (q_len == 1) in ONE forward pass over
+        the shared paged pool. For the paged engine this replaces the
+        separate prefill/decode program pair — the shift policy sees the
+        combined token count and the device batch is compacted to active
+        rows. Signature of the returned fn:
+        ``(params, pool, tokens [B, C], q_lens [B], offsets [B],
+        block_tables [B, nmax], *extras) -> (next_tokens [B], pool)``."""
+        if not paged:
+            raise ValueError("the mixed forward requires the paged KV cache")
+        cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        dp, seq, _ = self._io_specs()
+        pspec = self.param_specs()
+        cspec = self.paged_cache_specs()
+
+        args = [pspec, cspec, P(dp, seq), P(dp), P(dp),
+                self.block_table_spec()]
+        extras = []
+        if cfg.frontend == "vision_stub":
+            extras.append(P(dp, None, None))
+
+        def body(params, cache, tokens, q_lens, offsets, bt, *rest):
+            fe = rest[0] if cfg.frontend == "vision_stub" else None
+            return T.mixed_body(params, cache, tokens, q_lens, offsets, cfg,
+                                lay, pod, fe, block_tables=bt, sample=sample)
+
+        out_tok = P(dp) if sample else P(dp, lay.tp_axes or None)
+        return self._wrap(body, tuple(args + extras), (out_tok, cspec))
+
     def loss_fn(self, remat: bool = True):
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
         dp, seq, _ = self._io_specs()

@@ -319,6 +319,42 @@ def prefill_body(params, cache, tokens, offsets, cfg, lay: Layout,
     return logits, cache
 
 
+def mixed_body(params, cache, tokens, q_lens, offsets, cfg, lay: Layout,
+               pod_scale=False, frontend_embeds=None, block_tables=None,
+               sample=True):
+    """Unified mixed prefill+decode step against the paged pool.
+
+    tokens: [B, S_loc] — row b carries ``q_lens[b]`` fresh tokens written
+    at cache positions ``offsets[b] ..``; decode rows have q_len == 1,
+    chunked-prefill rows up to the chunk width, padding rows 0. Returns
+    (next_token [B] greedy — or last-token logits [B, v_loc] with
+    ``sample=False`` — and the updated pool). Rows whose chunk does not
+    reach the end of their known tokens get a garbage next_token the
+    engine ignores."""
+    pos = _positions_prefill(tokens, offsets, lay)
+    x = _embed_tokens(params, tokens, pos, cfg, lay, frontend_embeds)
+    ctx = {"offsets": offsets, "q_lens": q_lens, "block_tables": block_tables}
+    x, cache, _ = _run_blocks_prefill(params, cache, x, ctx, cfg, lay,
+                                      pod_scale, train=False)
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    # ragged last-token extraction: row b's newest token sits at global
+    # column q_lens[b]-1, which lives on exactly one sp rank
+    B, S_loc = x.shape[:2]
+    r = joint_axis_index(lay.sp_axes, dict(lay.axis_sizes)) if lay.sp > 1 else 0
+    loc = q_lens - 1 - r * S_loc                               # [B] local col
+    here = (loc >= 0) & (loc < S_loc)
+    take = jnp.take_along_axis(
+        x, jnp.clip(loc, 0, S_loc - 1)[:, None, None], axis=1)[:, 0]
+    last = jnp.where(here[:, None], take, jnp.zeros_like(take))
+    if lay.sp > 1:
+        last = jax.lax.psum(last, lay.sp_axes)
+    logits = (tied_lmhead_apply(params["embed"], last, lay) if cfg.tie_embeddings
+              else lmhead_apply(params["lm_head"], last, lay))
+    if sample:
+        return distributed_argmax(logits, lay), cache
+    return logits, cache
+
+
 def decode_body(params, cache, tokens, lens, cfg, lay: Layout, pod_scale=False,
                 block_tables=None):
     """tokens: [B_loc] (batch sharded over dp×sp); lens: [B_row] global

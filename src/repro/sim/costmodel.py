@@ -90,7 +90,12 @@ class CostModel:
     def iteration_time(self, n_prefill: int, n_decode: int, ctx: int,
                        strat: Strategy) -> float:
         """One engine iteration with n_prefill chunk tokens + n_decode
-        decode tokens against average context ctx.
+        decode tokens against average context ctx. A call with both terms
+        nonzero prices a *mixed* batch (the engine's fused
+        prefill+decode pass): the weights stream from HBM once for the
+        combined batch and the collectives run once, which is exactly the
+        advantage the mixed schedule has over running the same tokens as
+        two serialized iterations.
 
         The strategy asymmetries follow the paper (Tables 1-2):
           tp — weights sharded n ways; all-reduce on the critical path

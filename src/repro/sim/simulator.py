@@ -1,7 +1,9 @@
 """Event-driven serving simulator.
 
 Replays a request trace against an engine model (continuous batching +
-chunked prefill) whose per-iteration latency comes from the roofline
+chunked prefill, mixed prefill+decode iterations by default — matching
+``ShiftEngine``'s paged path — or serialized prefill-OR-decode with
+``mixed=False``) whose per-iteration latency comes from the roofline
 CostModel. Reproduces the paper's latency/throughput experiments (Figs
 7/9/10/12/13/14/17, Table 5) without GPUs: the *mechanism* (scheduling,
 padding, config switching) is simulated exactly; only iteration wall time
@@ -62,13 +64,21 @@ class ServeSim:
     def __init__(self, cost: CostModel, strategy: str, n_chips: int = 8,
                  max_concurrent: int = 64, prefill_chunk: int = 2048,
                  kv_capacity_tokens: Optional[int] = None,
-                 kv_block_size: int = 16):
+                 kv_block_size: int = 16, mixed: bool = True):
         self.cost = cost
         self.strategy = strategy
         self.n = n_chips
         self.chunk = prefill_chunk
         self.max_conc = max_concurrent
         self.block_size = kv_block_size
+        # mixed=True (default, matching ShiftEngine's paged path): prefill
+        # chunks and decode tokens share one iteration, costed as a single
+        # pass by the roofline model. mixed=False replays the serialized
+        # prefill-OR-decode engine: an iteration that takes prefill tokens
+        # makes no decode progress (the TPOT interference being measured).
+        self.mixed = mixed
+        self.iterations = 0
+        self.starved_steps = 0    # ready decodes present but no decode ran
         n_rep = n_chips if strategy == "dp" else 1
         self.reps = [ReplicaState() for _ in range(n_rep)]
         if kv_capacity_tokens is None:
@@ -104,6 +114,8 @@ class ServeSim:
         if not rep.active:
             return 0.0
         # chunked prefill + decode batch composition
+        n_ready = sum(1 for r in rep.active
+                      if r.prefilled >= r.n_in and r.decoded < r.n_out)
         n_prefill = 0
         for r in rep.active:
             if r.prefilled < r.n_in:
@@ -112,9 +124,15 @@ class ServeSim:
                     break
                 r.prefilled += take
                 n_prefill += take
-        deco = [r for r in rep.active if r.prefilled >= r.n_in
-                and r.decoded < r.n_out]
+        if not self.mixed and n_prefill:
+            deco = []                  # serialized: prefill-priority step
+        else:
+            deco = [r for r in rep.active if r.prefilled >= r.n_in
+                    and r.decoded < r.n_out]
         n_decode = len(deco)
+        self.iterations += 1
+        if n_ready and not n_decode:
+            self.starved_steps += 1
         ctxs = [r.prefilled + r.decoded for r in rep.active] or [1]
         ctx = int(np.mean(ctxs))
 
@@ -189,6 +207,8 @@ def simulate(cfg, trace, strategy: str, hw=None, n_chips: int = 8,
     makespan = max((r.finish for r in done), default=1e-9)
     return {
         "strategy": strategy, "n_done": len(done),
+        "iterations": sim.iterations,
+        "starved_steps": sim.starved_steps,
         "ttft_p50_ms": 1e3 * _pct(ttfts, 50),
         "ttft_p99_ms": 1e3 * _pct(ttfts, 99),
         "tpot_p50_ms": 1e3 * _pct(tpots, 50),

@@ -3,10 +3,8 @@
 ``--hw v5e`` for the TPU deployment this framework targets)."""
 from __future__ import annotations
 
-import time
-
 from repro.configs import get_config
-from repro.roofline.terms import H200, V5E
+from repro.roofline.terms import H200
 from repro.sim import (simulate, bursty_trace, azure_code_trace,
                        mooncake_conv_trace, uniform_trace)
 from repro.sim.costmodel import CostModel, Strategy

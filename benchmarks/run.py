@@ -1,7 +1,6 @@
 # One function per paper table/figure. Prints ``name,...`` CSV rows.
 from __future__ import annotations
 
-import sys
 import time
 
 

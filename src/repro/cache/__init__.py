@@ -14,8 +14,16 @@ rank-invariant.
 ``PagedKVCache`` maps each engine slot to a logical→physical block table.
 Both are host-side (numpy) control-plane objects — the data plane stays in
 jitted model step functions that consume the block table as a device array.
+
+``PrefixIndex`` adds automatic prefix caching on top: full blocks of token
+ids are indexed by chained hash and pinned with their own reference, so a
+later request with the same prompt prefix maps the cached blocks instead of
+recomputing them.  Writes into shared blocks go through
+``PagedKVCache.copy_on_write``.
 """
 from .block_allocator import BlockAllocator, BlockOOM
 from .paged import PagedKVCache, blocks_for_tokens
+from .prefix_index import PrefixIndex
 
-__all__ = ["BlockAllocator", "BlockOOM", "PagedKVCache", "blocks_for_tokens"]
+__all__ = ["BlockAllocator", "BlockOOM", "PagedKVCache", "PrefixIndex",
+           "blocks_for_tokens"]

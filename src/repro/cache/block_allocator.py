@@ -50,11 +50,17 @@ class BlockAllocator:
         return out
 
     def incref(self, block: int):
-        assert block in self._refs, block
+        # the null block is never allocated, so it must never be
+        # ref-counted: a stray incref/decref on block 0 would eventually
+        # push it onto the free list and hand the garbage sink out as a
+        # real block
+        assert block != self.NULL_BLOCK, "refcounting the null block"
+        assert block in self._refs, f"incref of unallocated block {block}"
         self._refs[block] += 1
 
     def decref(self, block: int):
-        assert block in self._refs, block
+        assert block != self.NULL_BLOCK, "refcounting the null block"
+        assert block in self._refs, f"double free of block {block}"
         self._refs[block] -= 1
         if self._refs[block] == 0:
             del self._refs[block]

@@ -17,9 +17,12 @@ zero bytes.
 """
 from __future__ import annotations
 
+from typing import List, Optional, Sequence, Tuple
+
 import numpy as np
 
 from .block_allocator import BlockAllocator, BlockOOM
+from .prefix_index import PrefixIndex
 
 
 def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
@@ -43,6 +46,9 @@ class PagedKVCache:
         # the engine keep a persistent host mirror and re-copy only changed
         # rows instead of rebuilding the full [max_seqs, nmax] array each step
         self._dirty: set = set()
+        # optional prefix cache: when set, allocation pressure first evicts
+        # unpinned cached-prefix blocks (leaf-first LRU) before reporting OOM
+        self.prefix_index: Optional[PrefixIndex] = None
 
     def take_dirty(self) -> set:
         """Slots whose tables changed since the last call (and clear)."""
@@ -62,14 +68,42 @@ class PagedKVCache:
         """Tokens the currently mapped blocks of ``seq`` can hold."""
         return int(self.n_mapped[seq]) * self.block_size
 
-    def can_allocate(self, n_tokens: int) -> bool:
-        return blocks_for_tokens(n_tokens, self.block_size) \
-            <= self.allocator.num_free
+    def can_allocate(self, n_tokens: int, cached_blocks=()) -> bool:
+        """True when ``n_tokens`` worth of NEW blocks (minus the
+        ``cached_blocks`` a prefix match already covers) fits in the free
+        list plus what prefix-cache eviction could reclaim right now.
+
+        The matched blocks must not be double-counted: an index-only
+        (refcount 1) matched block appears in ``reclaimable()`` too, but
+        mapping it pins it — it both satisfies one needed block AND stops
+        being evictable, so it is subtracted from the eviction credit."""
+        need = blocks_for_tokens(n_tokens, self.block_size) \
+            - len(cached_blocks)
+        avail = self.allocator.num_free
+        if self.prefix_index is not None:
+            matched_evictable = sum(
+                1 for b in cached_blocks if self.allocator.ref_count(b) == 1)
+            avail += max(self.prefix_index.reclaimable()
+                         - matched_evictable, 0)
+        return need <= avail
 
     def seq_blocks(self, seq: int):
         return [int(b) for b in self.table[seq, :self.n_mapped[seq]]]
 
     # ------------------------------------------------------------ alloc/free
+    def _alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` blocks, evicting unpinned cached-prefix blocks
+        (leaf-first LRU) under pressure. Raises BlockOOM like the allocator.
+        Eviction only runs when it can fully cover the shortfall — a doomed
+        allocation must leave the index untouched so a failed ensure/COW is
+        genuinely state-unchanged (failed admission probes must not drain
+        the prefix cache)."""
+        short = n - self.allocator.num_free
+        if short > 0 and self.prefix_index is not None \
+                and self.prefix_index.reclaimable() >= short:
+            self.prefix_index.evict(short)
+        return self.allocator.alloc(n)
+
     def ensure(self, seq: int, n_tokens: int) -> bool:
         """Grow ``seq``'s table to cover ``n_tokens`` positions. Returns
         False (state unchanged) when the free list cannot satisfy it."""
@@ -82,7 +116,7 @@ class PagedKVCache:
         if grow <= 0:
             return True
         try:
-            new = self.allocator.alloc(grow)
+            new = self._alloc(grow)
         except BlockOOM:
             return False
         self.table[seq, self.n_mapped[seq]:need] = new
@@ -90,15 +124,75 @@ class PagedKVCache:
         self._dirty.add(seq)
         return True
 
+    def assign_prefix(self, seq: int, blocks: Sequence[int]):
+        """Map already-cached prefix blocks (from ``PrefixIndex.match``)
+        into an empty slot's table, taking one reference per block. The
+        sequence then prefills starting at ``len(blocks) * block_size``."""
+        assert self.n_mapped[seq] == 0, "prefix assignment into a mapped slot"
+        assert BlockAllocator.NULL_BLOCK not in blocks
+        for b in blocks:
+            self.allocator.incref(b)
+        n = len(blocks)
+        self.table[seq, :n] = np.asarray(blocks, np.int32)
+        self.n_mapped[seq] = n
+        if n:
+            self._dirty.add(seq)
+
+    def copy_on_write(self, seq: int, start_tok: int,
+                      end_tok: int) -> Tuple[bool, List[Tuple[int, int]]]:
+        """Make the mapped blocks covering positions ``[start_tok, end_tok)``
+        exclusively owned before a write: every block with refcount > 1 in
+        that range is remapped to a fresh block. Returns ``(ok, copies)``
+        where ``copies`` is the [(src, dst), ...] list of physical block
+        copies the caller must apply to the device pool BEFORE the write
+        lands (the manager is control-plane only). On OOM returns
+        ``(False, [])`` with the table unchanged."""
+        if end_tok <= start_tok:
+            return True, []
+        first = start_tok // self.block_size
+        last = min((end_tok - 1) // self.block_size, int(self.n_mapped[seq]) - 1)
+        shared = [i for i in range(first, last + 1)
+                  if self.allocator.ref_count(int(self.table[seq, i])) > 1]
+        if not shared:
+            return True, []
+        try:
+            fresh = self._alloc(len(shared))
+        except BlockOOM:
+            return False, []
+        copies = []
+        for i, dst in zip(shared, fresh):
+            src = int(self.table[seq, i])
+            self.allocator.decref(src)      # shared: decrements, never frees
+            self.table[seq, i] = dst
+            copies.append((src, dst))
+        self._dirty.add(seq)
+        return True, copies
+
     def free_seq(self, seq: int):
-        self.allocator.free(self.seq_blocks(seq))
+        blocks = self.seq_blocks(seq)
+        # Refcount invariants (the COW path relies on these to keep the free
+        # list sound): a mapped entry is never the null block — freeing a
+        # slot can therefore never decref block 0, whose refcount the
+        # allocator does not track — and shared blocks (prefix-cache pins,
+        # forked tables) are DECREMENTED here, not freed; the last holder
+        # (or an index eviction) returns them to the free list.
+        assert BlockAllocator.NULL_BLOCK not in blocks, \
+            f"slot {seq} maps the null block — table corrupt"
+        self.allocator.free(blocks)
         self.table[seq, :] = BlockAllocator.NULL_BLOCK
         self.n_mapped[seq] = 0
         self._dirty.add(seq)
 
     def fork(self, src: int, dst: int):
-        """Share src's blocks into dst (ref-counted) — prefix-sharing hook."""
+        """Share src's blocks into dst (ref-counted) — prefix-sharing hook.
+        Writes into dst must go through ``copy_on_write`` first."""
+        assert src != dst, "fork onto itself"
         assert self.n_mapped[dst] == 0, "fork into a mapped slot"
+        # dst's table must be fully cleared (all-null), not just n_mapped=0:
+        # stale physical ids past n_mapped would alias freed blocks if a
+        # later ensure() grew the row without rewriting every entry.
+        assert (self.table[dst] == BlockAllocator.NULL_BLOCK).all(), \
+            f"slot {dst} table not cleared before fork"
         for b in self.seq_blocks(src):
             self.allocator.incref(b)
         n = int(self.n_mapped[src])

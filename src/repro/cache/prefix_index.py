@@ -1,0 +1,231 @@
+"""Hash-based prefix index over the paged block pool (automatic prefix
+caching, Arctic-Inference / vLLM style).
+
+One entry per FULL block of token ids: chunk ``i`` of a sequence (tokens
+``[i*bs, (i+1)*bs)``) is keyed by a *chained* hash
+``h_i = hash((h_{i-1}, chunk_i))`` — the chain makes the key depend on every
+preceding token, which is required for correctness: the KV values inside
+block ``i`` are functions of ALL tokens ``0..(i+1)*bs-1`` (causal attention),
+not just the chunk's own ids.  Each entry maps its chain hash to a physical
+block and holds ONE allocator reference of its own, so a cached block
+survives ``free_seq`` of every sequence that wrote or mapped it
+(decrement-not-free) and is reclaimed only by explicit LRU eviction.
+
+Hash collisions can not corrupt output: every entry stores its
+``(parent, tokens)`` pair and a lookup verifies both — a colliding probe is
+a cache miss, never a wrong block.
+
+Eviction is leaf-first LRU: only entries with no children in the index and
+no sequence mapping them (allocator refcount == 1, the index's own pin) are
+candidates.  Evicting leaf-first keeps every remaining entry reachable —
+dropping a parent while a child stayed indexed would pin the child's block
+forever without it ever being matchable again (matching walks the chain from
+the root).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .block_allocator import BlockAllocator
+
+# chain seed for block 0 of every sequence (any fixed int works; hashes are
+# only compared within one process — entries also verify tokens exactly)
+_ROOT = 0x51F7A11E
+
+
+@dataclass
+class PrefixEntry:
+    key: int                      # chained hash (dict key, denormalized)
+    parent: int                   # chain hash of the previous block (_ROOT)
+    tokens: Tuple[int, ...]       # this block's token ids (collision check)
+    block: int                    # physical block id (holds one ref)
+    last_used: int = 0            # index clock at last match/commit (LRU)
+    children: int = 0             # indexed entries chaining off this one
+
+
+class PrefixIndex:
+    def __init__(self, block_size: int, allocator: BlockAllocator):
+        self.block_size = block_size
+        self.allocator = allocator
+        self._entries: Dict[int, PrefixEntry] = {}
+        self._clock = 0
+        # counters (engine/serve surface these)
+        self.hits = 0                 # match() calls that reused >= 1 block
+        self.misses = 0               # match() calls that reused nothing
+        self.tokens_saved = 0         # prefill tokens covered by matches
+        self.evictions = 0            # entries reclaimed under pressure
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def chain_key(parent: int, chunk: Sequence[int]) -> int:
+        return hash((parent, tuple(chunk)))
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # --------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int],
+              max_tokens: Optional[int] = None) -> List[int]:
+        """Physical blocks of the longest indexed prefix of ``tokens``
+        (full blocks only), capped so at most ``max_tokens`` positions are
+        reused — the engine caps at ``len(tokens) - 1`` so the last known
+        token always runs through the forward pass to produce logits.
+
+        Read-only apart from the LRU bump; the caller records hit/miss
+        stats via ``record`` once the match is actually *used* (an
+        admission gate may probe without admitting)."""
+        bs = self.block_size
+        limit = len(tokens) if max_tokens is None else min(max_tokens,
+                                                           len(tokens))
+        t = self._tick()
+        out: List[int] = []
+        parent = _ROOT
+        for i in range(limit // bs):
+            chunk = tuple(tokens[i * bs:(i + 1) * bs])
+            e = self._entries.get(self.chain_key(parent, chunk))
+            if e is None or e.parent != parent or e.tokens != chunk:
+                break                      # miss (or hash collision): stop
+            e.last_used = t
+            out.append(e.block)
+            parent = e.key
+        return out
+
+    def record(self, n_matched_blocks: int):
+        """Count one admission's match outcome in the hit/miss stats."""
+        if n_matched_blocks > 0:
+            self.hits += 1
+            self.tokens_saved += n_matched_blocks * self.block_size
+        else:
+            self.misses += 1
+
+    # -------------------------------------------------------------- commit
+    def commit(self, tokens: Sequence[int], n_blocks: int,
+               phys_blocks: Sequence[int]) -> int:
+        """Index the first ``n_blocks`` full blocks of ``tokens``, backed by
+        ``phys_blocks`` (the sequence's block table). Already-indexed chunks
+        are LRU-bumped but keep their existing physical block — two
+        sequences that prefill the same content concurrently converge on one
+        entry; the loser's block stays private to it. Returns the number of
+        newly indexed entries (each takes one allocator ref)."""
+        _, _, new = self.commit_incremental(tokens, 0, n_blocks, None,
+                                            phys_blocks)
+        return new
+
+    def commit_incremental(self, tokens: Sequence[int], lo: int, hi: int,
+                           parent: Optional[int],
+                           phys_blocks: Sequence[int]):
+        """Index chunks ``lo..hi-1``, continuing a chain whose hash at
+        depth ``lo`` is ``parent`` (``None`` = chain root). Lets the engine
+        commit each newly completed block in O(1) instead of re-hashing the
+        whole chain from the root every step; the caller persists the
+        returned ``(done, parent)`` cursor per request (and resets it on
+        preemption — a live request's committed chain cannot be evicted,
+        since its blocks are pinned by the request itself, so the cursor's
+        parent entry is always still present for child accounting).
+        Returns ``(done, parent, new_entries)`` where ``done`` is the chunk
+        index after the last processed chunk (< hi only on a verified hash
+        collision, where indexing stops)."""
+        bs = self.block_size
+        assert hi * bs <= len(tokens) and hi <= len(phys_blocks)
+        if parent is None:
+            parent = _ROOT
+        t = self._tick()
+        new = 0
+        done = lo
+        for i in range(lo, hi):
+            chunk = tuple(tokens[i * bs:(i + 1) * bs])
+            key = self.chain_key(parent, chunk)
+            e = self._entries.get(key)
+            if e is not None and (e.parent != parent or e.tokens != chunk):
+                break                      # hash collision: stop indexing
+            if e is None:
+                e = PrefixEntry(key, parent, chunk, int(phys_blocks[i]))
+                self.allocator.incref(e.block)         # the index's own pin
+                self._entries[key] = e
+                if parent != _ROOT:
+                    self._entries[parent].children += 1
+                new += 1
+            e.last_used = t
+            parent = key
+            done = i + 1
+        return done, parent, new
+
+    # ------------------------------------------------------------ eviction
+    def _candidates(self) -> List[PrefixEntry]:
+        """Leaf entries whose block only the index holds (refcount == 1) —
+        evicting one returns exactly one block to the free list."""
+        return [e for e in self._entries.values()
+                if e.children == 0 and self.allocator.ref_count(e.block) == 1]
+
+    def reclaimable(self) -> int:
+        """Blocks eviction could free right now, by simulated leaf peeling
+        (evicting a leaf can expose its parent as the next candidate)."""
+        children = {k: e.children for k, e in self._entries.items()}
+        live = set(self._entries)
+        n = 0
+        while True:
+            leaves = [k for k in live
+                      if children[k] == 0
+                      and self.allocator.ref_count(self._entries[k].block) == 1]
+            if not leaves:
+                return n
+            for k in leaves:
+                live.discard(k)
+                p = self._entries[k].parent
+                if p in children:
+                    children[p] -= 1
+            n += len(leaves)
+
+    def evict(self, n_blocks: int) -> int:
+        """Reclaim up to ``n_blocks`` blocks, least-recently-used leaves
+        first. Returns blocks actually freed."""
+        freed = 0
+        while freed < n_blocks:
+            cands = self._candidates()
+            if not cands:
+                break
+            e = min(cands, key=lambda c: c.last_used)
+            del self._entries[e.key]
+            if e.parent in self._entries:
+                self._entries[e.parent].children -= 1
+            self.allocator.decref(e.block)             # refcount 1 -> freed
+            self.evictions += 1
+            freed += 1
+        return freed
+
+    # ------------------------------------------------------------- queries
+    def blocks(self) -> List[int]:
+        """Physical blocks currently pinned by the index."""
+        return [e.block for e in self._entries.values()]
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "tokens_saved": self.tokens_saved,
+                "evictions": self.evictions}
+
+    # ----------------------------------------------------------- snapshot
+    # The allocator snapshot already carries the index's pins (one ref per
+    # entry), so a restore MUST rebuild the entries — dropping them would
+    # leak those references as permanently pinned blocks.
+    def state_dict(self) -> dict:
+        return {"block_size": self.block_size,
+                "entries": [(e.key, e.parent, list(e.tokens), e.block,
+                             e.last_used) for e in self._entries.values()],
+                "clock": self._clock}
+
+    @classmethod
+    def from_state(cls, state: dict,
+                   allocator: BlockAllocator) -> "PrefixIndex":
+        idx = cls(state["block_size"], allocator)
+        idx._clock = state["clock"]
+        for key, parent, tokens, block, last_used in state["entries"]:
+            idx._entries[key] = PrefixEntry(key, parent, tuple(tokens),
+                                            block, last_used)
+        for e in idx._entries.values():
+            if e.parent in idx._entries:
+                idx._entries[e.parent].children += 1
+        return idx

@@ -16,13 +16,11 @@ the pool bytes nor the indirection move on an SP↔TP switch.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding
-
-from repro.parallel import Layout
 
 
 def head_order_base(sp: int, tp: int):
@@ -84,9 +82,38 @@ def replicated_over_axes(shape, spec, mesh, axes: Sequence[str]) -> bool:
     return all(all(s == g[0] for s in g) for g in groups.values())
 
 
+def shared_blocks_identical(pool_base, pool_shift,
+                            shared_blocks: Sequence[int]) -> bool:
+    """Bitwise equality of the listed physical blocks across two pool
+    pytrees (e.g. one populated under the base config, one under shift).
+
+    With prefix caching, a multi-ref block may be read by requests admitted
+    under EITHER config — its bytes must therefore not depend on which
+    config produced them, or an SP↔TP switch would silently change every
+    request that shares the block. Pool leaves are ``[num_blocks, bs,
+    slots, Dh]`` (or with a leading layer-repeat axis, found by rank)."""
+    blocks = np.asarray(list(shared_blocks), np.int32)
+    if blocks.size == 0:
+        return True
+    la = jax.tree.leaves(pool_base)
+    lb = jax.tree.leaves(pool_shift)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape:
+            return False
+        sel = (slice(None), blocks) if a.ndim == 5 else (blocks,)
+        if not (a[sel] == b[sel]).all():       # bitwise (no tolerance)
+            return False
+    return True
+
+
 def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
                             table_shape, base_table_spec, shift_table_spec,
-                            mesh, model_axes: Sequence[str]) -> bool:
+                            mesh, model_axes: Sequence[str],
+                            pool_base=None, pool_shift=None,
+                            shared_blocks: Optional[Sequence[int]] = None
+                            ) -> bool:
     """Paged extension of the §3.3.1 check. Zero-copy SP↔TP switching over a
     paged cache needs BOTH halves:
 
@@ -95,7 +122,13 @@ def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
        condition, applied per block), and
     2. the block table is replicated across the model group in both
        configs — every rank follows the same logical→physical indirection,
-       so the control plane is also untouched by a switch."""
+       so the control plane is also untouched by a switch.
+
+    When ``pool_base``/``pool_shift`` arrays and a ``shared_blocks`` id list
+    are given (prefix caching: blocks with refcount > 1), a third check
+    requires those blocks to be *bitwise identical* across the two pools —
+    shared prefix blocks are read by sequences under both configs, so their
+    contents must not encode which config wrote them."""
     if not verify_invariance(pool_shapes, base_specs, shift_specs, mesh):
         return False
     for spec in (base_table_spec, shift_table_spec):
@@ -103,4 +136,10 @@ def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
             return False
     a = NamedSharding(mesh, base_table_spec)
     b = NamedSharding(mesh, shift_table_spec)
-    return cache_specs_equal(table_shape, a, b)
+    if not cache_specs_equal(table_shape, a, b):
+        return False
+    if shared_blocks is not None:
+        assert pool_base is not None and pool_shift is not None, \
+            "shared-block check needs both populated pools"
+        return shared_blocks_identical(pool_base, pool_shift, shared_blocks)
+    return True

@@ -20,6 +20,20 @@ freed), which bounds memory while guaranteeing progress. Architectures
 with non-pageable state (MLA latents, ring buffers, recurrent state) fall
 back to the contiguous cache and pure slot admission.
 
+With ``EngineConfig(prefix_cache=True)`` the paged cache gains automatic
+prefix reuse (Arctic-Inference-style): full blocks of token ids are
+indexed by chained hash (``repro.cache.PrefixIndex``) as prefill
+completes them, and admission maps the longest indexed prefix of a new
+prompt straight into the request's block table — prefill then starts at
+the first uncached token, so ``ThresholdPolicy`` prices only the
+*uncached* prefill work and heavy shared-prefix traffic stays below the
+SP→TP shift threshold longer. Cached blocks are pinned by the index's
+own reference: ``free_seq``/preemption decrement-not-free them, and an
+LRU (leaf-first) eviction reclaims unpinned prefix blocks under memory
+pressure. Writes into shared blocks (refcount > 1) go through
+copy-on-write: the manager remaps the block and the engine applies the
+physical copy to the device pool before the forward pass lands.
+
 Scheduling on the paged cache is continuous batching with *mixed* batches
 (Sarathi/Arctic-Inference-style): every iteration packs up to
 ``prefill_chunk`` prompt tokens per prefilling row PLUS all ready decode
@@ -43,7 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import PagedKVCache, blocks_for_tokens
+from repro.cache import PagedKVCache, PrefixIndex, blocks_for_tokens
 from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
 from repro.models.model import Model
 from .request import Request
@@ -82,6 +96,12 @@ class EngineConfig:
     #                                  False keeps the serialized
     #                                  prefill-OR-decode iteration (the
     #                                  dense fallback always uses it).
+    # prefix caching -------------------------------------------------------
+    prefix_cache: bool = False       # hash-indexed prefix reuse + COW on the
+    #                                  paged pool (opt-in: reused blocks make
+    #                                  warm prefills shape-differently from
+    #                                  cold ones, so A/B comparisons should
+    #                                  enable it on both sides)
 
 
 class ShiftEngine:
@@ -109,6 +129,10 @@ class ShiftEngine:
             raise ValueError(
                 "mixed-batch stepping requires the paged KV cache (ragged "
                 "rows scatter through the block table's null block)")
+        if cfg.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix caching requires the paged KV cache (cached blocks "
+                "are shared through ref-counted block tables)")
         if self.paged:
             nmax = blocks_for_tokens(cfg.s_max, cfg.block_size)
             num_blocks = cfg.num_blocks or cfg.max_slots * nmax + 1
@@ -120,9 +144,21 @@ class ShiftEngine:
             # PagedKVCache marks dirty are re-copied (satellite of the
             # full-rebuild-per-step fix)
             self._bt_host = np.zeros((cfg.max_slots, nmax), np.int32)
+            if cfg.prefix_cache:
+                self.prefix = PrefixIndex(cfg.block_size, self.kv.allocator)
+                self.kv.prefix_index = self.prefix
+            else:
+                self.prefix = None
+            # pending (src, dst) physical block copies from copy-on-write;
+            # applied to the device pool in one batched scatter before the
+            # next forward pass launches
+            self._step_copies: List[tuple] = []
+            self._cow_fn = jax.jit(self._cow_body, donate_argnums=(0,))
         else:
             self.kv = None
+            self.prefix = None
             self.cache = model_base.init_cache(cfg.max_slots, cfg.s_max)
+        self.cow_copies = 0
         self.lens = np.zeros((cfg.max_slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * cfg.max_slots
         self.queue: List[Request] = []
@@ -173,9 +209,13 @@ class ShiftEngine:
 
     def _admit(self):
         """Assign queue slots FCFS. Paged: a request is admitted only when
-        its whole (re)prompt plus one decode token fits in free blocks —
-        the memory-pressure gate that lets arbitrarily many requests queue
-        against a small pool."""
+        its whole (re)prompt plus one decode token fits in free blocks
+        (counting blocks a prefix match already covers and blocks LRU
+        eviction of the prefix index could reclaim) — the memory-pressure
+        gate that lets arbitrarily many requests queue against a small
+        pool. On admission the longest indexed prefix of the (re)prompt is
+        mapped into the slot's block table, so prefill starts at the first
+        uncached token."""
         for req in list(self.queue):
             if req.slot is not None:
                 continue
@@ -183,17 +223,41 @@ class ShiftEngine:
                          if owner is None), None)
             if slot is None:
                 break
-            if self.paged and not self.kv.can_allocate(req.total_tokens + 1):
-                break                           # FCFS: no queue-jumping
+            matched = []
+            if self.paged:
+                if self.prefix is not None:
+                    # cap at total-1: the last known token always runs
+                    # through the forward pass to produce the next logits
+                    matched = self.prefix.match(
+                        req.all_tokens(), max_tokens=req.total_tokens - 1)
+                if not self.kv.can_allocate(req.total_tokens + 1,
+                                            cached_blocks=matched):
+                    break                       # FCFS: no queue-jumping
             req.slot = slot
             self.slot_req[slot] = req
-            self.lens[slot] = 0
             if self.paged:
+                if self.prefix is not None:
+                    self.prefix.record(len(matched))
+                if matched:
+                    self.kv.assign_prefix(slot, matched)
+                    req.prefilled = len(matched) * self.cfg.block_size
+                    req.cached_tokens = req.prefilled
                 self.kv.ensure(slot, req.total_tokens + 1)
+            self.lens[slot] = req.prefilled
 
     @property
     def active(self) -> List[Request]:
         return [r for r in self.slot_req if r is not None]
+
+    @property
+    def prefix_stats(self) -> dict:
+        """Prefix-cache counters (zeros when caching is off) plus the
+        engine's COW copy count."""
+        s = (self.prefix.stats() if self.prefix is not None
+             else {"entries": 0, "hits": 0, "misses": 0, "tokens_saved": 0,
+                   "evictions": 0})
+        s["cow_copies"] = self.cow_copies
+        return s
 
     # ----------------------------------------------------- memory pressure
     def _preempt(self, victim: Request):
@@ -204,21 +268,82 @@ class ShiftEngine:
         self.lens[victim.slot] = 0
         victim.slot = None
         victim.prefilled = 0
+        victim.cached_tokens = 0
+        victim.pc_blocks, victim.pc_parent = 0, None   # recommit from root
         victim.num_preemptions += 1
         self.preemptions += 1
 
-    def _reserve(self, req: Request, n_tokens: int, protect) -> bool:
-        """Grow req's block table to cover n_tokens, LRU-preempting other
-        active requests if the free list runs dry. Returns False when
-        nothing outside ``protect`` can be evicted."""
-        while not self.kv.ensure(req.slot, n_tokens):
+    def _reserve(self, req: Request, n_tokens: int, protect,
+                 write_from: Optional[int] = None) -> bool:
+        """Grow req's block table to cover n_tokens — and, when
+        ``write_from`` is given, copy-on-write any shared block in the
+        write range ``[write_from, n_tokens)`` — LRU-preempting other
+        active requests if the free list (plus prefix-index eviction) runs
+        dry. Returns False when nothing outside ``protect`` can be
+        evicted. COW block copies are queued on ``_step_copies``; the
+        caller applies them to the device pool before the forward pass."""
+        while True:
+            if self.kv.ensure(req.slot, n_tokens):
+                if write_from is None:
+                    return True
+                ok, copies = self.kv.copy_on_write(req.slot, write_from,
+                                                   n_tokens)
+                if ok:
+                    self._step_copies.extend(copies)
+                    return True
             victims = [a for a in self.active
                        if a is not req and a not in protect]
             if not victims:
                 return False
             self._preempt(min(victims,
                               key=lambda a: (a.last_used, -a.arrival)))
-        return True
+
+    @staticmethod
+    def _cow_body(cache, src, dst):
+        """Batched physical block copy (COW data plane): pool[dst] =
+        pool[src] on every cached layer. Body-stack leaves carry a leading
+        layer-repeat axis, so the block axis is found by rank. Padding
+        pairs are (0, 0) null-block self-copies. All gathers read the
+        pre-copy pool (gather-then-scatter), so a block freed by
+        preemption and reallocated as another copy's dst in the same step
+        still sources its original bytes."""
+        def cp(pool):
+            if pool.ndim == 5:      # [reps, num_blocks, bs, slots, Dh]
+                return pool.at[:, dst].set(pool[:, src])
+            return pool.at[dst].set(pool[src])
+        return jax.tree.map(cp, cache)
+
+    def _apply_copies(self):
+        """Flush queued COW copies to the device pool (one batched op)."""
+        if not self._step_copies:
+            return
+        pairs = self._step_copies
+        self._step_copies = []
+        self.cow_copies += len(pairs)
+        n = _pow2(len(pairs))
+        src = np.zeros((n,), np.int32)      # padding: null-block self-copy
+        dst = np.zeros((n,), np.int32)
+        for i, (s, d) in enumerate(pairs):
+            src[i], dst[i] = s, d
+        self.cache = self._cow_fn(self.cache, jnp.asarray(src),
+                                  jnp.asarray(dst))
+
+    def _commit_prefix(self, req: Request):
+        """Index every fully-written block of ``req`` (token positions
+        ``0..prefilled-1`` are in the cache) so later requests sharing the
+        prefix reuse it. Called before the request could release its
+        blocks; already-indexed chunks are only LRU-bumped. Incremental:
+        the per-request ``(pc_blocks, pc_parent)`` cursor means a decode
+        step hashes at most one new chunk instead of re-walking the chain
+        from the root (which would be O(len^2) over a request's life)."""
+        if self.prefix is None or req.slot is None:
+            return
+        full = min(req.prefilled // self.cfg.block_size,
+                   int(self.kv.n_mapped[req.slot]))
+        if full > req.pc_blocks:
+            req.pc_blocks, req.pc_parent, _ = self.prefix.commit_incremental(
+                req.all_tokens(), req.pc_blocks, full, req.pc_parent,
+                self.kv.seq_blocks(req.slot))
 
     def _refresh_block_tables(self):
         """Sync the persistent host mirror: re-copy only rows whose tables
@@ -290,7 +415,8 @@ class ShiftEngine:
             if r.slot is None:
                 continue                   # preempted by an earlier reserve
             # coverage for the token written this step (position r.pos)
-            if self._reserve(r, r.total_tokens, protect=protect):
+            if self._reserve(r, r.total_tokens, protect=protect,
+                             write_from=r.pos):
                 rows.append((r, r.pos, 1, True))
                 protect.add(r)
         n_decode = len(rows)
@@ -302,7 +428,7 @@ class ShiftEngine:
             end = min(off + C, r.total_tokens)
             if end <= off:
                 continue
-            if not self._reserve(r, end, protect=protect):
+            if not self._reserve(r, end, protect=protect, write_from=off):
                 continue
             # the chunk runs through the LAST known token: when it reaches
             # the end, this pass also samples the row's next token
@@ -342,6 +468,7 @@ class ShiftEngine:
             qlen[i] = ql
             offs[i] = off
             bt[i] = self._bt_host[r.slot, :nbb]
+        self._apply_copies()               # COW copies land before the write
         args = [jnp.asarray(toks), jnp.asarray(qlen), jnp.asarray(offs),
                 jnp.asarray(bt)]
         nxt, self.cache = self._forward[mode](params, self.cache, *args,
@@ -352,6 +479,7 @@ class ShiftEngine:
             r.prefilled = off + ql
             r.last_used = self.step_count
             self.lens[r.slot] = r.prefilled
+            self._commit_prefix(r)         # before a finish frees the slot
             if produces:
                 self._finish_token(r, int(nxt[i]), t)
         self._log_step(n_prefill_tok, n_decode, n_ready)
@@ -384,7 +512,8 @@ class ShiftEngine:
             if not chunk:
                 continue
             if self.paged and not self._reserve(
-                    r, off + len(chunk), protect={rr for rr, _ in rows}):
+                    r, off + len(chunk), protect={rr for rr, _ in rows},
+                    write_from=off):
                 continue
             toks[r.slot, :len(chunk)] = chunk
             offs[r.slot] = off
@@ -399,12 +528,14 @@ class ShiftEngine:
         args = [jnp.asarray(toks), jnp.asarray(offs)]
         if self.paged:
             args.append(jnp.asarray(self._block_tables([r for r, _ in rows])))
+            self._apply_copies()
         _, self.cache = self._prefill[mode](params, self.cache, *args,
                                             *extras)
         for r, n in rows:
             r.prefilled += n
             r.last_used = self.step_count
             self.lens[r.slot] = r.prefilled
+            self._commit_prefix(r)
         self._log_step(n_tok, 0,
                        sum(1 for r in self.active
                            if self._prefill_done(r) and not r.done))
@@ -423,7 +554,8 @@ class ShiftEngine:
                 if r.slot is None:
                     continue                   # preempted by an earlier reserve
                 # coverage for the token written this step (position r.pos)
-                if self._reserve(r, r.total_tokens, protect=set(kept)):
+                if self._reserve(r, r.total_tokens, protect=set(kept),
+                                 write_from=r.pos):
                     kept.append(r)
             ready = kept
         if not ready:
@@ -438,11 +570,14 @@ class ShiftEngine:
         args = [jnp.asarray(toks), jnp.asarray(lens)]
         if self.paged:
             args.append(jnp.asarray(self._block_tables(ready)))
+            self._apply_copies()
         nxt, self.cache = self._decode[mode](params, self.cache, *args)
         nxt = np.asarray(nxt)
         t = self.now()
         for r in ready:
             r.last_used = self.step_count
+            r.prefilled = r.pos + 1        # this step wrote position r.pos
+            self._commit_prefix(r)
             self._finish_token(r, int(nxt[r.slot]), t)
         self._log_step(0, len(ready), n_ready)
         return True
@@ -495,12 +630,17 @@ class ShiftEngine:
                  "prefilled": r.prefilled, "generated": list(r.generated),
                  "max_new_tokens": r.max_new_tokens, "arrival": r.arrival,
                  "first_token_time": r.first_token_time,
-                 "finish_time": r.finish_time, "last_used": r.last_used}
+                 "finish_time": r.finish_time, "last_used": r.last_used,
+                 "cached_tokens": r.cached_tokens}
                 for r in self.queue + [x for x in self.slot_req
                                        if x is not None and x not in self.queue]],
         }
         if self.paged:
             snap["kv"] = self.kv.state_dict()
+            if self.prefix is not None:
+                # the allocator snapshot carries the index's pins — the
+                # index must round-trip with it or those refs would leak
+                snap["prefix"] = self.prefix.state_dict()
         return snap
 
     def restore(self, snap):
@@ -509,6 +649,20 @@ class ShiftEngine:
         if self.paged:
             assert "kv" in snap, "paged engine restoring a dense snapshot"
             self.kv = PagedKVCache.from_state(snap["kv"])
+            if self.prefix is not None:
+                assert "prefix" in snap, \
+                    "prefix-caching engine restoring a snapshot without " \
+                    "the index (its allocator pins would leak)"
+                self.prefix = PrefixIndex.from_state(snap["prefix"],
+                                                     self.kv.allocator)
+                self.kv.prefix_index = self.prefix
+            else:
+                # symmetric guard: the snapshot's allocator refcounts carry
+                # one pin per index entry — restoring without rebuilding
+                # the index would leak every pinned block unreachably
+                assert "prefix" not in snap, \
+                    "snapshot carries a prefix index but this engine has " \
+                    "prefix_cache=False (its allocator pins would leak)"
             self._refresh_block_tables()   # from_state marks all rows dirty
         self.slot_req = [None] * self.cfg.max_slots
         self.queue = []
@@ -521,6 +675,7 @@ class ShiftEngine:
             r.first_token_time = rd.get("first_token_time")
             r.finish_time = rd.get("finish_time")
             r.last_used = rd.get("last_used", 0)
+            r.cached_tokens = rd.get("cached_tokens", 0)
             if r.slot is not None:
                 self.slot_req[r.slot] = r
             self.queue.append(r)

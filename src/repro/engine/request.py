@@ -15,6 +15,15 @@ class Request:
     # engine state -----------------------------------------------------------
     slot: Optional[int] = None
     prefilled: int = 0                # tokens already written to the cache
+    cached_tokens: int = 0            # prefill tokens served by a prefix hit
+    #                                   at the current admission (reset on
+    #                                   preemption; observability only)
+    # prefix-index commit cursor: blocks already committed this residency
+    # and the chain hash at that depth (None = root). Engine-internal,
+    # reset on preemption; not snapshotted (a restore recommits from the
+    # root once — commit is an idempotent LRU bump for existing entries).
+    pc_blocks: int = 0
+    pc_parent: Optional[int] = None
     generated: List[int] = field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None

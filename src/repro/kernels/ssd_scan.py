@@ -14,12 +14,9 @@ Per grid cell (one head, one chunk) in VMEM:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, b_ref, c_ref, dt_ref, cum_ref, y_ref, st_ref, dec_ref):

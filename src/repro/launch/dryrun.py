@@ -5,20 +5,18 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import re
 import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs, applicable_shapes, SHAPES_BY_NAME
 from repro.models.model import Model
 from repro.parallel import Layout
 from repro.core.invariance import verify_invariance
-from repro.launch.mesh import make_production_mesh, make_shift_mesh, layout_axes
+from repro.launch.mesh import make_shift_mesh, layout_axes
 from repro.training import Trainer
 from repro.training.optimizer import AdamWConfig
 from repro.roofline import (collective_bytes_hlo, comm_bytes_analytic,
@@ -132,8 +130,6 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, mode: str,
 
     params = model.abstract_params()
     pspecs = model.param_specs()
-    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
-                           is_leaf=lambda x: isinstance(x, P))
 
     if shape.kind == "train":
         tr = Trainer(model, AdamWConfig(state_dtype=jnp.bfloat16),

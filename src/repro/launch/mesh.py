@@ -11,8 +11,6 @@ ever spans the (slower) pod interconnect, which is what makes the design
 valid at 1000+ nodes."""
 from __future__ import annotations
 
-import jax
-from jax.sharding import Mesh
 
 from repro.parallel.compat import make_mesh as _make_mesh
 

@@ -25,7 +25,7 @@ from repro.sim.costmodel import CostModel
 def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
                  slots=8, s_max=256, chunk=64,
                  threshold=DEFAULT_SHIFT_THRESHOLD, adaptive=False,
-                 paged=None, block_size=16, num_blocks=0,
+                 paged=None, block_size=16, num_blocks=0, prefix_cache=False,
                  dtype=jnp.float32):
     cfg = get_config(arch)
     if reduced:
@@ -45,7 +45,8 @@ def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
               else ThresholdPolicy(threshold))
     ecfg = EngineConfig(max_slots=slots, s_max=s_max, prefill_chunk=chunk,
                         threshold=threshold, paged=paged,
-                        block_size=block_size, num_blocks=num_blocks)
+                        block_size=block_size, num_blocks=num_blocks,
+                        prefix_cache=prefix_cache)
     return ShiftEngine(base, shift, p_base, p_shift, ecfg, policy=policy)
 
 
@@ -61,13 +62,21 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="physical KV blocks; 0 = no memory pressure. Small "
                          "values force admission control + preemption")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="hash-indexed prefix reuse + copy-on-write on the "
+                         "paged pool")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared 'system prompt' tokens "
+                         "to every request (demonstrates prefix reuse)")
     args = ap.parse_args()
 
     eng = build_engine(args.arch, adaptive=args.adaptive,
                        block_size=args.block_size,
-                       num_blocks=args.num_blocks)
-    reqs = [Request(i, list(range(1, 20 + 3 * i)), max_new_tokens=args.max_new,
-                    arrival=time.monotonic())
+                       num_blocks=args.num_blocks,
+                       prefix_cache=args.prefix_cache)
+    system = list(range(1000, 1000 + args.shared_prefix))
+    reqs = [Request(i, system + list(range(1, 20 + 3 * i)),
+                    max_new_tokens=args.max_new, arrival=time.monotonic())
             for i in range(args.requests)]
     for r in reqs:
         eng.add_request(r)
@@ -87,6 +96,12 @@ def main():
         print(f"paged cache: {eng.kv.allocator.num_blocks} blocks x "
               f"{eng.cfg.block_size} tokens, {eng.preemptions} preemptions, "
               f"{eng.kv.num_free_blocks} free at exit")
+        if eng.prefix is not None:
+            s = eng.prefix_stats
+            print(f"prefix cache: {s['entries']} cached blocks, "
+                  f"{s['hits']} hits / {s['misses']} misses, "
+                  f"{s['tokens_saved']} prefill tokens saved, "
+                  f"{s['evictions']} evictions, {s['cow_copies']} COW copies")
 
 
 if __name__ == "__main__":

@@ -6,12 +6,10 @@ CPU demo: ``PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticCorpus, TokenBatcher

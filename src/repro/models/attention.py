@@ -11,7 +11,6 @@ sharding ``P(dp, None, model_axes, None)`` is identical in base and shift
 configs (KV-cache invariance)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,6 @@ q head ``s`` uses kv head ``s // (Hq//Hkv)``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

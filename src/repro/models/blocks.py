@@ -5,7 +5,6 @@ layer pattern."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import Layout

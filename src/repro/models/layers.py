@@ -4,7 +4,7 @@ device; the same code runs unsharded in smoke tests)."""
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -220,7 +220,6 @@ def causal_depthwise_conv(x, w, state=None):
 
 def conv_step(x, w, state):
     """Single decode step of the causal conv. x: [B, C]; state [B, cw-1, C]."""
-    cw = w.shape[0]
     xp = jnp.concatenate([state, x[:, None]], axis=1)  # [B, cw, C]
     y = (xp * w[None]).sum(1)
     return y, xp[:, 1:]

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel import Layout, psum_if, joint_axis_index
-from .attention_math import attend, attend_partial, merge_partials, finish_partial
+from .attention_math import attend, attend_partial, merge_partials
 from .layers import dense_init, rmsnorm, apply_rope
 
 

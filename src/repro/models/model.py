@@ -3,7 +3,6 @@ jit/shard_map-wrapped step functions plus abstract init for the dry-run."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import cached_property, partial
 from typing import Optional
 
 import jax

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel import Layout, psum_if, joint_axis_index
+from repro.parallel import Layout, psum_if
 from repro.core.ulysses import ulysses_scatter_heads, ulysses_gather_heads
 from .layers import dense_init, causal_depthwise_conv, conv_step
 
@@ -87,7 +87,6 @@ def _scan(a, bx, h0):
 
 def rglru_prefill(p, x, state, cfg, lay: Layout):
     """x: [B, S_loc, d]. Returns (out, state)."""
-    w = _width(cfg)
     B, S_loc, _ = x.shape
     xb = x @ p["wx"]
     yb = x @ p["wy"]

@@ -189,7 +189,6 @@ def ssd_decode(p, x, state, cfg, lay: Layout):
     # post-a2a: [1, B, hpr, hd] etc (batch-as-seq)
     z, xin, bc, dt = (t[0] for t in (z, xin, bc, dt))
     B, hpr, hd = xin.shape
-    ds = s.d_state
     g = _model_rank(lay)
     conv_x_loc = _slice_by_rank(p["conv_x"], g, hpr * hd, lay)
     xc = jnp.concatenate([xin.reshape(B, hpr * hd), bc[:, 0]], axis=-1)

@@ -5,8 +5,6 @@ and exposes the three step bodies (train / prefill / decode) that run inside
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ in ``repro.core.invariance``.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import jax

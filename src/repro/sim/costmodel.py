@@ -63,7 +63,14 @@ class CostModel:
     def kv_bytes_per_block(self, block_size: int = 16) -> float:
         """HBM bytes one paged KV block commits across all cached layers.
         The paged engine allocates at this granularity; partially filled
-        tail blocks are the fragmentation the simulator charges."""
+        tail blocks are the fragmentation the simulator charges.
+
+        With prefix caching a multi-ref (shared) block commits these bytes
+        ONCE no matter how many sequences map it — the simulator charges
+        shared blocks through the per-replica resident set, and the saved
+        prefill work shows up as fewer ``n_prefill`` tokens in
+        ``iteration_time`` (a prefix hit shrinks the compute term, not the
+        model: cached tokens are simply never batched)."""
         return self._kv_bytes_per_tok() * block_size
 
     def _comm_bytes(self, n_tokens: int, strat: Strategy) -> float:

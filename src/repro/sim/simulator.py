@@ -3,7 +3,10 @@
 Replays a request trace against an engine model (continuous batching +
 chunked prefill, mixed prefill+decode iterations by default — matching
 ``ShiftEngine``'s paged path — or serialized prefill-OR-decode with
-``mixed=False``) whose per-iteration latency comes from the roofline
+``mixed=False``; ``prefix_cache=True`` additionally models hash-indexed
+prefix reuse: annotated shared prompt spans prefill once per replica,
+their blocks are charged once, and later requests start at the first
+uncached token) whose per-iteration latency comes from the roofline
 CostModel. Reproduces the paper's latency/throughput experiments (Figs
 7/9/10/12/13/14/17, Table 5) without GPUs: the *mechanism* (scheduling,
 padding, config switching) is simulated exactly; only iteration wall time
@@ -14,7 +17,6 @@ TP/SP/Shift run one group over all chips.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -30,12 +32,19 @@ class SimRequest:
     arrival: float
     n_in: int
     n_out: int
+    # shared-prefix annotation: the first ``prefix_len`` prompt tokens are
+    # identical across every request with the same ``prefix_id`` (e.g. a
+    # shared system prompt). With ``ServeSim(prefix_cache=True)`` those
+    # tokens prefill once per replica and later requests skip them.
+    prefix_id: int = -1
+    prefix_len: int = 0
     # outcome
     start: float = -1.0
     first_token: float = -1.0
     finish: float = -1.0
     prefilled: int = 0
     decoded: int = 0
+    shared_blocks: int = 0            # KV blocks this request maps shared
 
     @property
     def ttft(self):
@@ -58,19 +67,34 @@ class ReplicaState:
     queue: List[SimRequest] = field(default_factory=list)
     t: float = 0.0
     busy_tokens: float = 0.0
+    # prefix_id -> resident shared KV blocks (counted once, like the
+    # engine's index-pinned blocks); populated when a seeding request
+    # finishes prefilling the shared span
+    resident: dict = field(default_factory=dict)
 
 
 class ServeSim:
     def __init__(self, cost: CostModel, strategy: str, n_chips: int = 8,
                  max_concurrent: int = 64, prefill_chunk: int = 2048,
                  kv_capacity_tokens: Optional[int] = None,
-                 kv_block_size: int = 16, mixed: bool = True):
+                 kv_block_size: int = 16, mixed: bool = True,
+                 prefix_cache: bool = False):
         self.cost = cost
         self.strategy = strategy
         self.n = n_chips
         self.chunk = prefill_chunk
         self.max_conc = max_concurrent
         self.block_size = kv_block_size
+        # prefix_cache=True models the engine's hash-indexed prefix reuse:
+        # requests annotated with (prefix_id, prefix_len) skip the shared
+        # span's prefill after a seeding request has written it, and the
+        # shared blocks are charged ONCE per replica (block-granular, like
+        # the index pins) instead of per request. Unreferenced resident
+        # prefixes are evicted when admission runs out of blocks.
+        self.prefix_cache = prefix_cache
+        self.prefill_tokens_saved = 0
+        self.shared_blocks_peak = 0
+        self.prefix_evictions = 0
         # mixed=True (default, matching ShiftEngine's paged path): prefill
         # chunks and decode tokens share one iteration, costed as a single
         # pass by the roofline model. mixed=False replays the serialized
@@ -96,21 +120,51 @@ class ServeSim:
         self.trace_tokens: List = []   # (t, tokens_processed) for throughput
 
     def _used_blocks(self, rep: ReplicaState) -> int:
-        return sum(blocks_for_tokens(r.prefilled + r.decoded, self.block_size)
-                   for r in rep.active)
+        """Blocks committed on a replica: per-request private blocks plus
+        each resident shared prefix charged once (the engine's index pins)."""
+        private = sum(
+            blocks_for_tokens(r.prefilled + r.decoded, self.block_size)
+            - r.shared_blocks for r in rep.active)
+        return private + sum(rep.resident.values())
+
+    def _matched_blocks(self, r: SimRequest) -> int:
+        """Full blocks of ``r``'s shared span (capped at n_in - 1: the last
+        prompt token always runs through the forward pass)."""
+        if not self.prefix_cache or r.prefix_id < 0:
+            return 0
+        return min(r.prefix_len, r.n_in - 1) // self.block_size
 
     def _iteration(self, rep: ReplicaState):
         """Run one engine iteration on a replica; returns elapsed time."""
         # admit (block-granular, like the engine's admission control)
         kv_used = self._used_blocks(rep)
         for q in list(rep.queue):
-            need = blocks_for_tokens(q.n_in + 1, self.block_size)
-            if (len(rep.active) < self.max_conc
-                    and kv_used + need <= self.kv_cap_blocks):
-                rep.active.append(q)
-                rep.queue.remove(q)
-                q.start = rep.t
-                kv_used += need
+            matched = (self._matched_blocks(q)
+                       if q.prefix_id in rep.resident else 0)
+            need = blocks_for_tokens(q.n_in + 1, self.block_size) - matched
+            if len(rep.active) >= self.max_conc:
+                continue
+            if kv_used + need > self.kv_cap_blocks:
+                # reclaim resident prefixes no active request maps (the
+                # engine's LRU eviction of unpinned index blocks)
+                in_use = {r.prefix_id for r in rep.active
+                          if r.shared_blocks > 0}
+                for pid in list(rep.resident):
+                    if kv_used + need <= self.kv_cap_blocks:
+                        break
+                    if pid not in in_use and pid != q.prefix_id:
+                        kv_used -= rep.resident.pop(pid)
+                        self.prefix_evictions += 1
+                if kv_used + need > self.kv_cap_blocks:
+                    continue
+            rep.active.append(q)
+            rep.queue.remove(q)
+            q.start = rep.t
+            if matched:
+                q.prefilled = matched * self.block_size
+                q.shared_blocks = matched
+                self.prefill_tokens_saved += q.prefilled
+            kv_used += need
         if not rep.active:
             return 0.0
         # chunked prefill + decode batch composition
@@ -124,6 +178,18 @@ class ServeSim:
                     break
                 r.prefilled += take
                 n_prefill += take
+        if self.prefix_cache:
+            # a request that has prefilled past its shared span seeds the
+            # prefix for later arrivals; its own blocks become the shared
+            # copy (charged once via `resident`, not per request)
+            for r in rep.active:
+                mb = self._matched_blocks(r)
+                if (mb and r.prefix_id not in rep.resident
+                        and r.prefilled >= mb * self.block_size):
+                    rep.resident[r.prefix_id] = mb
+                    r.shared_blocks = mb
+            self.shared_blocks_peak = max(self.shared_blocks_peak,
+                                          sum(rep.resident.values()))
         if not self.mixed and n_prefill:
             deco = []                  # serialized: prefill-priority step
         else:
@@ -188,8 +254,13 @@ def simulate(cfg, trace, strategy: str, hw=None, n_chips: int = 8,
     from repro.roofline.terms import V5E
     cost = CostModel(cfg, hw=hw or V5E)
     sim = ServeSim(cost, strategy, n_chips=n_chips, **kw)
-    reqs = sim.run([SimRequest(i, t, ni, no)
-                    for i, (t, ni, no) in enumerate(trace)])
+    reqs = []
+    for i, tr in enumerate(trace):
+        t, ni, no = tr[:3]
+        # optional shared-prefix annotation: (t, n_in, n_out, pid, plen)
+        pid, plen = (int(tr[3]), int(tr[4])) if len(tr) > 3 else (-1, 0)
+        reqs.append(SimRequest(i, t, ni, no, prefix_id=pid, prefix_len=plen))
+    reqs = sim.run(reqs)
     done = [r for r in reqs if r.finish >= 0]
     ttfts = [r.ttft for r in done if r.first_token >= 0]
     tpots = [r.tpot for r in done if r.n_out > 1]
@@ -209,6 +280,9 @@ def simulate(cfg, trace, strategy: str, hw=None, n_chips: int = 8,
         "strategy": strategy, "n_done": len(done),
         "iterations": sim.iterations,
         "starved_steps": sim.starved_steps,
+        "prefill_tokens_saved": sim.prefill_tokens_saved,
+        "shared_blocks_peak": sim.shared_blocks_peak,
+        "prefix_evictions": sim.prefix_evictions,
         "ttft_p50_ms": 1e3 * _pct(ttfts, 50),
         "ttft_p99_ms": 1e3 * _pct(ttfts, 99),
         "tpot_p50_ms": 1e3 * _pct(tpots, 50),

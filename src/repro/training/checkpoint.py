@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ all-gathers the resulting delta (classic ZeRO-1)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +66,8 @@ def opt_state_specs(param_specs, param_shapes, lay: Layout):
 
 
 def adamw_init(params, cfg: AdamWConfig):
-    z = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    def z(p):
+        return jnp.zeros(p.shape, cfg.state_dtype)
     return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
             "step": jnp.zeros((), jnp.int32)}
 

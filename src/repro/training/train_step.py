@@ -7,19 +7,16 @@ keeps activation memory bounded; remat is applied per layer superblock."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel import Layout, psum_if
 from repro.parallel.compat import shard_map
 from repro.models import Model
 from repro.models import transformer as T
 from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_specs
-from .compress import int8_compress_psum, plain_psum
+from .compress import int8_compress_psum
 
 
 @dataclass
@@ -61,9 +58,6 @@ class Trainer:
         remat = self.remat
 
         pspec = model.param_specs()
-        ospec_template = None  # resolved by caller via opt_specs
-        dp = lay.dp_axes or None
-        seq = lay.sp_axes or None
         reduce_axes = tuple(lay.dp_axes) + tuple(lay.sp_axes)
         shard_axes = tuple(lay.tp_axes)  # disjoint param shards
 

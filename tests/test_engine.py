@@ -2,7 +2,6 @@
 chunked prefill correctness, snapshot/restore (fault tolerance)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from conftest import reduced_cfg

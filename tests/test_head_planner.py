@@ -1,5 +1,4 @@
 """Head planner: exhaustive alignment + hypothesis property tests."""
-import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 

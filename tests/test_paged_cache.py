@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from conftest import make_mesh, reduced_cfg
+from conftest import reduced_cfg
 from repro.cache import BlockAllocator, BlockOOM, PagedKVCache, blocks_for_tokens
 from repro.core.invariance import verify_paged_invariance
 from repro.core.policy import ThresholdPolicy
@@ -184,7 +184,7 @@ def test_paged_invariance_structural(mesh122):
     lay = Layout.from_mesh(mesh122, dp=("data",), sp=("sp",), tp=("tp",))
     mb = Model(cfg=cfg, lay=lay, mesh=mesh122)
     ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh122)
-    isp = lambda x: isinstance(x, P)
+    isp = lambda x: isinstance(x, P)  # noqa: E731
     assert verify_paged_invariance(
         jax.tree.leaves(mb.abstract_paged_cache(16, 4)),
         jax.tree.leaves(mb.paged_cache_specs(), is_leaf=isp),

@@ -2,7 +2,6 @@
 compiled program with a known collective schedule, and comm-model sanity."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from repro.parallel.compat import shard_map
 from jax.sharding import PartitionSpec as P
 

@@ -1,14 +1,11 @@
 """Training substrate: loss decreases under (dp, sp, tp) sharding with
 ZeRO-1 + microbatching; int8 gradient compression converges (error
 feedback); checkpoint round-trips and reshards across layouts."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from conftest import make_mesh, reduced_cfg
+from conftest import reduced_cfg
 from repro.models import build_model
 from repro.models.model import Model
 from repro.parallel import Layout

@@ -15,6 +15,9 @@ mode on CPU (TPU timings are the roofline estimates in EXPERIMENTS.md
 * prefix-cache reuse — the same shared-system-prompt trace with and
   without hash-indexed prefix caching (deterministic sim numbers: saved
   prefill tokens, TTFT ratio).
+* dp=2 paged engine smoke — a real per-dp-row ShiftEngine (paged + mixed
+  + prefix cache) on a 2×1×1 host mesh; gated on deterministic scheduling
+  counters so a silent dense fallback under dp>1 fails CI.
 
 Emits CSV rows (legacy, for benchmarks/run.py) and writes a
 machine-readable ``BENCH_kernels.json``:
@@ -27,7 +30,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+
+# the dp=2 paged-engine smoke needs >= 2 (virtual) devices; harmless for
+# every other bench (they ignore the extra CPU devices)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +191,49 @@ def _prefix_reuse(rec, smoke):
         out["cold"]["ttft_p50"] / out["warm"]["ttft_p50"], "x")
 
 
+def _dp_paged_smoke(rec, emit):
+    """End-to-end dp=2 paged+mixed+prefix ShiftEngine on a 2×1×1 host
+    mesh: per-row block pools, free-block-aware routing, in-flight
+    prefill sharing. The gated numbers are SCHEDULING outputs (iteration
+    count, prefill tokens saved by the per-row prefix caches, preemptions)
+    — deterministic integers, independent of wall clock — so CI catches a
+    per-dp-row regression (e.g. the engine silently falling back to the
+    dense cache again) as a hard failure."""
+    if len(jax.devices()) < 2:
+        emit("# dp_paged_smoke skipped: <2 devices "
+             "(XLA_FLAGS was pre-set without host_platform_device_count)")
+        return
+    from repro.configs import get_config
+    from repro.core.policy import ThresholdPolicy
+    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.model import Model
+    from repro.parallel import Layout
+
+    cfg = get_config("qwen3-8b").reduced()
+    mesh = make_test_mesh(data=2, sp=1, tp=1)
+    lay = Layout.from_mesh(mesh, dp=("data",), sp=("sp",), tp=("tp",))
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.float32)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh, dtype=jnp.float32)
+    pb = mb.init_params(jax.random.key(0))
+    ps = ms.init_params(jax.random.key(0))
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
+                        block_size=8, prefix_cache=True)
+    eng = ShiftEngine(mb, ms, pb, ps, ecfg, policy=ThresholdPolicy(4))
+    assert eng.paged and eng.dp == 2, eng.paged_disabled_reason
+    shared = list(range(1, 17))                # 2 full blocks per row
+    reqs = [Request(i, shared + list(range(100 + 3 * i, 104 + 3 * i)),
+                    max_new_tokens=4) for i in range(8)]
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=500)
+    assert all(r.finish_time is not None for r in reqs)
+    s = eng.prefix_stats
+    rec("dp.paged_iterations", eng.step_count, "iters")
+    rec("dp.paged_prefill_tokens_saved", s["tokens_saved"], "tokens")
+    rec("dp.paged_preemptions", eng.preemptions, "iters")
+
+
 def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     entries = []
 
@@ -195,6 +246,7 @@ def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     _ragged_vs_padded(rec, iters, smoke)
     _mixed_vs_serialized(rec, smoke)
     _prefix_reuse(rec, smoke)
+    _dp_paged_smoke(rec, emit)
     if out:
         with open(out, "w") as f:
             json.dump({"smoke": smoke, "entries": entries}, f, indent=1)

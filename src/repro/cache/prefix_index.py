@@ -45,6 +45,10 @@ class PrefixEntry:
 
 
 class PrefixIndex:
+    # chain seed, exposed so callers (the engine's in-flight prefill
+    # registry) can walk the same chain-hash sequence commit/match use
+    ROOT = _ROOT
+
     def __init__(self, block_size: int, allocator: BlockAllocator):
         self.block_size = block_size
         self.allocator = allocator
@@ -69,19 +73,24 @@ class PrefixIndex:
 
     # --------------------------------------------------------------- match
     def match(self, tokens: Sequence[int],
-              max_tokens: Optional[int] = None) -> List[int]:
+              max_tokens: Optional[int] = None,
+              bump: bool = True) -> List[int]:
         """Physical blocks of the longest indexed prefix of ``tokens``
         (full blocks only), capped so at most ``max_tokens`` positions are
         reused — the engine caps at ``len(tokens) - 1`` so the last known
         token always runs through the forward pass to produce logits.
 
-        Read-only apart from the LRU bump; the caller records hit/miss
-        stats via ``record`` once the match is actually *used* (an
-        admission gate may probe without admitting)."""
+        With ``bump=False`` the call is strictly read-only. An admission
+        gate that may NOT admit must probe with ``bump=False`` and call
+        ``bump`` only once the match is actually used: a queue head that
+        repeatedly fails admission would otherwise refresh the recency of
+        its matched entries every engine step, skewing leaf-first LRU
+        eviction toward entries nobody can map yet. The caller records
+        hit/miss stats via ``record`` on the same condition."""
         bs = self.block_size
         limit = len(tokens) if max_tokens is None else min(max_tokens,
                                                            len(tokens))
-        t = self._tick()
+        t = self._tick() if bump else None
         out: List[int] = []
         parent = _ROOT
         for i in range(limit // bs):
@@ -89,10 +98,31 @@ class PrefixIndex:
             e = self._entries.get(self.chain_key(parent, chunk))
             if e is None or e.parent != parent or e.tokens != chunk:
                 break                      # miss (or hash collision): stop
-            e.last_used = t
+            if bump:
+                e.last_used = t
             out.append(e.block)
             parent = e.key
         return out
+
+    def bump(self, tokens: Sequence[int], n_blocks: int):
+        """LRU-touch the first ``n_blocks`` indexed chunks of ``tokens`` —
+        the deferred half of a ``match(..., bump=False)`` probe, called
+        once the matched blocks are actually mapped."""
+        self.match(tokens, max_tokens=n_blocks * self.block_size)
+
+    @classmethod
+    def chain_keys(cls, tokens: Sequence[int], block_size: int,
+                   n_blocks: int):
+        """Yield the chain hash at each full-block depth ``1..n_blocks``
+        of ``tokens`` — THE chain-key traversal, shared with
+        ``match``/``commit`` key derivation so external consumers (the
+        engine's in-flight prefill registry) can never drift from the
+        index's own key scheme."""
+        parent = cls.ROOT
+        for i in range(n_blocks):
+            parent = cls.chain_key(
+                parent, tuple(tokens[i * block_size:(i + 1) * block_size]))
+            yield parent
 
     def record(self, n_matched_blocks: int):
         """Count one admission's match outcome in the hit/miss stats."""

@@ -82,6 +82,39 @@ def replicated_over_axes(shape, spec, mesh, axes: Sequence[str]) -> bool:
     return all(all(s == g[0] for s in g) for g in groups.values())
 
 
+def _axis_fraction(sharding_map, shape, axis):
+    """Per-device (start, stop) fraction of ``axis`` each device holds."""
+    out = {}
+    for d, idx in sharding_map.items():
+        s = idx[axis]
+        lo = 0 if s.start is None else s.start
+        hi = shape[axis] if s.stop is None else s.stop
+        out[d] = (lo / shape[axis], hi / shape[axis])
+    return out
+
+
+def dp_rows_aligned(pool_shape, pool_spec, table_shape, table_spec,
+                    mesh, dp_axes: Sequence[str]) -> bool:
+    """Per-dp-row pool/table alignment: the pool's block axis (axis 0, or
+    axis 1 under a leading layer-repeat axis — found by rank, like the
+    engine's COW body) and the block table's leading slot axis must be
+    sharded over the dp axes *identically in fraction* — every device's
+    table shard (the slots of the rows it serves) must line up with the
+    pool shard holding exactly those rows' physical blocks, or a
+    row-local block id would dereference into another row's pool slice
+    inside ``shard_map``."""
+    if not dp_axes:
+        return True
+    blk_axis = 1 if len(pool_shape) == 5 else 0
+    mp = _axis_fraction(
+        NamedSharding(mesh, pool_spec).devices_indices_map(tuple(pool_shape)),
+        pool_shape, blk_axis)
+    mt = _axis_fraction(
+        NamedSharding(mesh, table_spec).devices_indices_map(tuple(table_shape)),
+        table_shape, 0)
+    return all(mp[d] == mt[d] for d in mt)
+
+
 def shared_blocks_identical(pool_base, pool_shift,
                             shared_blocks: Sequence[int]) -> bool:
     """Bitwise equality of the listed physical blocks across two pool
@@ -112,7 +145,8 @@ def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
                             table_shape, base_table_spec, shift_table_spec,
                             mesh, model_axes: Sequence[str],
                             pool_base=None, pool_shift=None,
-                            shared_blocks: Optional[Sequence[int]] = None
+                            shared_blocks: Optional[Sequence[int]] = None,
+                            dp_axes: Sequence[str] = ()
                             ) -> bool:
     """Paged extension of the §3.3.1 check. Zero-copy SP↔TP switching over a
     paged cache needs BOTH halves:
@@ -124,11 +158,18 @@ def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
        configs — every rank follows the same logical→physical indirection,
        so the control plane is also untouched by a switch.
 
+    With ``dp_axes`` (per-dp-row pools) a further check runs per row: the
+    pool's block axis and the table's slot axis must be dp-sharded in
+    lockstep under BOTH configs, so each row's replicated-within-the-group
+    table indexes exactly that row's pool slice — per-row invariance, not
+    just global.
+
     When ``pool_base``/``pool_shift`` arrays and a ``shared_blocks`` id list
     are given (prefix caching: blocks with refcount > 1), a third check
     requires those blocks to be *bitwise identical* across the two pools —
     shared prefix blocks are read by sequences under both configs, so their
-    contents must not encode which config wrote them."""
+    contents must not encode which config wrote them. ``shared_blocks``
+    are pool-global ids (row offset applied), so the check spans rows."""
     if not verify_invariance(pool_shapes, base_specs, shift_specs, mesh):
         return False
     for spec in (base_table_spec, shift_table_spec):
@@ -138,6 +179,18 @@ def verify_paged_invariance(pool_shapes, base_specs, shift_specs,
     b = NamedSharding(mesh, shift_table_spec)
     if not cache_specs_equal(table_shape, a, b):
         return False
+    if dp_axes:
+        shapes = jax.tree.leaves(pool_shapes)
+        isp = lambda x: isinstance(x, jax.sharding.PartitionSpec)  # noqa: E731
+        for specs, tspec in ((jax.tree.leaves(base_specs, is_leaf=isp),
+                              base_table_spec),
+                             (jax.tree.leaves(shift_specs, is_leaf=isp),
+                              shift_table_spec)):
+            for sh, ps in zip(shapes, specs):
+                shape = sh.shape if hasattr(sh, "shape") else sh
+                if not dp_rows_aligned(shape, ps, table_shape, tspec,
+                                       mesh, dp_axes):
+                    return False
     if shared_blocks is not None:
         assert pool_base is not None and pool_shift is not None, \
             "shared-block check needs both populated pools"

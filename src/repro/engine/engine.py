@@ -13,12 +13,22 @@ block table (``repro.cache``), so HBM is committed at block granularity
 instead of a fixed ``[max_slots, s_max]`` rectangle. The per-block layout
 keeps the head axis sharded over the tp-major model group — identical in
 base and shift configs — so paging preserves the zero-copy SP↔TP switch.
-Admission control holds requests in the queue until their prompt fits in
-free blocks, and decode-time block exhaustion preempts the least-recently
-scheduled request back to the queue (recompute-style, its blocks are
-freed), which bounds memory while guaranteeing progress. Architectures
-with non-pageable state (MLA latents, ring buffers, recurrent state) fall
-back to the contiguous cache and pure slot admission.
+Under data parallelism the engine pages PER dp row: slots partition into
+``dp`` contiguous ranges, each row owns a private block pool (the pool's
+leading block axis is sharded over the dp mesh axes, aligned with the
+dp-sharded block-table batch, so row-local block ids index each shard's
+local pool slice directly), and queued requests are routed to the row
+with the most free blocks — FCFS within a row. Admission control holds
+requests in the queue until their prompt fits in their row's free
+blocks, and decode-time block exhaustion preempts the least-recently
+scheduled request OF THE SAME ROW back to the queue (recompute-style,
+its blocks are freed), which bounds memory while guaranteeing progress —
+and isolates rows: pressure in one row can never evict another row's
+requests or cached prefixes. Architectures with non-pageable state (MLA
+latents, ring buffers, recurrent state) fall back to the contiguous
+cache and pure slot admission; the fallback is recorded in
+``paged_disabled_reason`` and surfaced via ``prefix_stats``/``step_log``
+so a deployment can never lose paging silently.
 
 With ``EngineConfig(prefix_cache=True)`` the paged cache gains automatic
 prefix reuse (Arctic-Inference-style): full blocks of token ids are
@@ -32,7 +42,13 @@ own reference: ``free_seq``/preemption decrement-not-free them, and an
 LRU (leaf-first) eviction reclaims unpinned prefix blocks under memory
 pressure. Writes into shared blocks (refcount > 1) go through
 copy-on-write: the manager remaps the block and the engine applies the
-physical copy to the device pool before the forward pass lands.
+physical copy to the device pool before the forward pass lands. The
+index is per dp row (blocks never cross rows), routing is sticky across
+preemptions so a request re-matches its own committed blocks, and an
+in-flight registry shares concurrent same-prefix prefills: a request
+whose next prompt block another admission is currently writing waits in
+the queue and maps the block once committed instead of prefilling the
+span again.
 
 Scheduling on the paged cache is continuous batching with *mixed* batches
 (Sarathi/Arctic-Inference-style): every iteration packs up to
@@ -86,9 +102,11 @@ class EngineConfig:
     # paged KV cache -------------------------------------------------------
     paged: Optional[bool] = None     # None: auto (paged when supported)
     block_size: int = 16             # tokens per KV block
-    num_blocks: int = 0              # physical blocks incl. the null block;
-    #                                  0: auto-size so max_slots×s_max fits
-    #                                  (no memory pressure). Smaller values
+    num_blocks: int = 0              # physical blocks PER DP ROW, incl.
+    #                                  each row's null block;
+    #                                  0: auto-size so the row's
+    #                                  slots×s_max fits (no memory
+    #                                  pressure). Smaller values
     #                                  oversubscribe and exercise admission
     #                                  control + preemption.
     # scheduling -----------------------------------------------------------
@@ -118,12 +136,27 @@ class ShiftEngine:
         self.policy = policy or ThresholdPolicy(cfg.threshold)
         self.now = now
 
-        can_page = model_base.supports_paged and model_base.lay.dp <= 1
-        if cfg.paged and not can_page:
+        self.dp = max(model_base.lay.dp, 1)
+        reason = None
+        if not model_base.supports_paged:
+            reason = (f"architecture {self.mcfg.name} has non-pageable "
+                      "layer kinds (MLA latents / ring buffers / recurrent "
+                      "state keep the contiguous cache)")
+        elif cfg.max_slots % self.dp != 0:
+            reason = (f"max_slots={cfg.max_slots} not divisible by "
+                      f"dp={self.dp} — slots partition into dp rows")
+        if cfg.paged and reason is not None:
             raise ValueError(
-                f"config {self.mcfg.name} cannot use a paged KV cache "
-                "(non-pageable layer kinds or dp-sharded engine)")
-        self.paged = can_page if cfg.paged is None else cfg.paged
+                f"config {self.mcfg.name} cannot use a paged KV cache: "
+                f"{reason}")
+        self.paged = reason is None if cfg.paged is None else cfg.paged
+        if not self.paged and reason is None:
+            reason = "paged=False in EngineConfig"
+        # why paging is off, if it is. The dense fallback must be LOUD: it
+        # also disables mixed batching and prefix caching, so the reason is
+        # surfaced in prefix_stats and every step_log entry — a dp-sharded
+        # deployment can't silently lose paging again.
+        self.paged_disabled_reason = None if self.paged else reason
         self.mixed = self.paged if cfg.mixed is None else cfg.mixed
         if self.mixed and not self.paged:
             raise ValueError(
@@ -133,30 +166,45 @@ class ShiftEngine:
             raise ValueError(
                 "prefix caching requires the paged KV cache (cached blocks "
                 "are shared through ref-counted block tables)")
+        self.slots_per_row = cfg.max_slots // self.dp if self.paged \
+            else cfg.max_slots
         if self.paged:
             nmax = blocks_for_tokens(cfg.s_max, cfg.block_size)
-            num_blocks = cfg.num_blocks or cfg.max_slots * nmax + 1
-            self.kv = PagedKVCache(num_blocks, cfg.block_size,
-                                   cfg.max_slots, nmax)
-            self.cache = model_base.init_paged_cache(num_blocks,
+            # cfg.num_blocks is PER dp row — each row owns a private pool
+            # (and null block); the device pool concatenates the rows on
+            # its dp-sharded leading axis
+            row_blocks = cfg.num_blocks or self.slots_per_row * nmax + 1
+            self.kv = PagedKVCache(row_blocks, cfg.block_size,
+                                   cfg.max_slots, nmax, dp=self.dp)
+            self.cache = model_base.init_paged_cache(row_blocks,
                                                      cfg.block_size)
             # persistent host mirror of the block tables; only rows the
             # PagedKVCache marks dirty are re-copied (satellite of the
             # full-rebuild-per-step fix)
             self._bt_host = np.zeros((cfg.max_slots, nmax), np.int32)
             if cfg.prefix_cache:
-                self.prefix = PrefixIndex(cfg.block_size, self.kv.allocator)
-                self.kv.prefix_index = self.prefix
+                # one index per dp row: physical blocks never cross rows,
+                # so neither can cached prefixes — row pressure can only
+                # evict that row's entries
+                self.prefix_rows = [
+                    PrefixIndex(cfg.block_size, self.kv.allocators[r])
+                    for r in range(self.dp)]
+                self.kv.prefix_indices = list(self.prefix_rows)
             else:
-                self.prefix = None
-            # pending (src, dst) physical block copies from copy-on-write;
-            # applied to the device pool in one batched scatter before the
-            # next forward pass launches
+                self.prefix_rows = None
+            # in-flight prefix registry, one dict per row: chain hash of
+            # every full prompt block an admitted request will write ->
+            # its rid. A same-prefix admission probes it and waits for the
+            # writer's commit instead of prefilling the span again.
+            self._inflight: List[dict] = [dict() for _ in range(self.dp)]
+            # pending (src, dst) pool-global block copies from
+            # copy-on-write; applied to the device pool in one batched
+            # scatter before the next forward pass launches
             self._step_copies: List[tuple] = []
             self._cow_fn = jax.jit(self._cow_body, donate_argnums=(0,))
         else:
             self.kv = None
-            self.prefix = None
+            self.prefix_rows = None
             self.cache = model_base.init_cache(cfg.max_slots, cfg.s_max)
         self.cow_copies = 0
         self.lens = np.zeros((cfg.max_slots,), np.int32)
@@ -200,69 +248,189 @@ class ShiftEngine:
         if worst > self.cfg.s_max:
             raise ValueError(f"request {req.rid} exceeds s_max={self.cfg.s_max}")
         if self.paged and (blocks_for_tokens(worst, self.cfg.block_size)
-                           > self.kv.allocator.num_blocks - 1):
+                           > self.kv.num_blocks_per_row - 1):
             raise ValueError(
                 f"request {req.rid} can never fit: needs "
                 f"{blocks_for_tokens(worst, self.cfg.block_size)} blocks, "
-                f"pool has {self.kv.allocator.num_blocks - 1}")
+                f"each dp row's pool has {self.kv.num_blocks_per_row - 1}")
         self.queue.append(req)
 
+    # ----------------------------------------------------------- dp routing
+    def _route(self, req: Request):
+        """Assign a queued request to a dp row, free-block-aware: minimize
+        routed-but-unadmitted demand MINUS allocatable blocks (free +
+        prefix-reclaimable), ties to the lowest row id. Pending demand is
+        part of the primary score, not a tie-break: a whole burst is
+        routed before any admission updates the free lists, so scoring on
+        free blocks alone would send the entire burst to the single
+        freest row (``ServeSim._route`` prices placement the same way).
+        Sticky: a preempted request keeps its row — its committed prefix
+        blocks live in that row's pool, so re-admission there re-matches
+        them."""
+        if req.row is not None:
+            return
+        pend = [0] * self.dp
+        for q in self.queue:
+            if q.slot is None and q.row is not None:
+                pend[q.row] += blocks_for_tokens(q.total_tokens + 1,
+                                                 self.cfg.block_size)
+
+        def score(r):
+            free = self.kv.allocators[r].num_free
+            idx = self.kv.prefix_indices[r]
+            if idx is not None:
+                free += idx.reclaimable()
+            return (pend[r] - free, r)
+
+        req.row = min(range(self.dp), key=score)
+
+    def _register_inflight(self, req: Request, row: int, n_matched: int):
+        """Publish the chain hash of every full prompt block this
+        admission will write (depths past its prefix match), so a
+        same-prefix request admitted behind it can wait for the commit
+        instead of prefilling the shared span again."""
+        bs = self.cfg.block_size
+        keys = []
+        for i, key in enumerate(PrefixIndex.chain_keys(
+                req.all_tokens(), bs, (req.total_tokens - 1) // bs)):
+            if i >= n_matched:
+                self._inflight[row][key] = req.rid
+                keys.append(key)
+        req.inflight_keys = keys
+
+    def _unregister_inflight(self, req: Request):
+        if not self.paged or req.row is None or not req.inflight_keys:
+            return
+        m = self._inflight[req.row]
+        for k in req.inflight_keys:
+            if m.get(k) == req.rid:
+                del m[k]
+        req.inflight_keys = []
+
+    def _wait_for_inflight(self, req: Request, row: int, matched) -> bool:
+        """True when another request in this row is mid-prefill over the
+        next full block of ``req``'s prompt: its chain hash (one depth
+        past ``req``'s committed match) is registered in the row's
+        in-flight map and the writer has not yet written it. ``req`` then
+        stays queued — once the writer's block commits, the normal match
+        maps it and ``req`` prefills only past the shared span."""
+        if self.prefix_rows is None:
+            return False
+        bs = self.cfg.block_size
+        i = len(matched)
+        if (i + 1) * bs > req.total_tokens - 1:
+            return False                 # no further full block to share
+        *_, key = PrefixIndex.chain_keys(req.all_tokens(), bs, i + 1)
+        wrid = self._inflight[row].get(key)
+        if wrid is None:
+            return False
+        w = next((a for a in self.active if a.rid == wrid), None)
+        if w is None or w is req or w.done:
+            self._inflight[row].pop(key, None)         # stale entry
+            return False
+        # writer already wrote the block but the match didn't extend: the
+        # commit was stopped (hash collision) and never will cover it —
+        # don't wait on it (livelock guard)
+        return w.prefilled < (i + 1) * bs
+
     def _admit(self):
-        """Assign queue slots FCFS. Paged: a request is admitted only when
-        its whole (re)prompt plus one decode token fits in free blocks
-        (counting blocks a prefix match already covers and blocks LRU
-        eviction of the prefix index could reclaim) — the memory-pressure
-        gate that lets arbitrarily many requests queue against a small
-        pool. On admission the longest indexed prefix of the (re)prompt is
-        mapped into the slot's block table, so prefill starts at the first
-        uncached token."""
-        for req in list(self.queue):
-            if req.slot is not None:
-                continue
-            slot = next((s for s, owner in enumerate(self.slot_req)
-                         if owner is None), None)
-            if slot is None:
-                break
-            matched = []
-            if self.paged:
-                if self.prefix is not None:
-                    # cap at total-1: the last known token always runs
-                    # through the forward pass to produce the next logits
-                    matched = self.prefix.match(
-                        req.all_tokens(), max_tokens=req.total_tokens - 1)
+        """Assign queue slots FCFS per dp row. Unrouted requests are first
+        routed to the row with the most free blocks; slots of row r are
+        the contiguous range [r*slots_per_row, (r+1)*slots_per_row).
+        Paged: a request is admitted only when its whole (re)prompt plus
+        one decode token fits in its row's free blocks (counting blocks a
+        prefix match already covers and blocks LRU eviction of the row's
+        prefix index could reclaim) — the memory-pressure gate that lets
+        arbitrarily many requests queue against a small pool. On admission
+        the longest indexed prefix of the (re)prompt is mapped into the
+        slot's block table, so prefill starts at the first uncached token.
+        One FCFS exception: a request voluntarily waiting on an in-flight
+        same-prefix prefill is skipped, not blocking — its wait is bounded
+        by the writer's progress, so later arrivals may admit past it."""
+        if not self.paged:
+            for req in list(self.queue):
+                if req.slot is not None:
+                    continue
+                slot = next((s for s, owner in enumerate(self.slot_req)
+                             if owner is None), None)
+                if slot is None:
+                    break
+                req.slot = slot
+                self.slot_req[slot] = req
+                self.lens[slot] = req.prefilled
+            return
+        for req in self.queue:
+            if req.slot is None:
+                self._route(req)
+        spr = self.slots_per_row
+        for row in range(self.dp):
+            for req in list(self.queue):
+                if req.slot is not None or req.row != row:
+                    continue
+                slot = next((s for s in range(row * spr, (row + 1) * spr)
+                             if self.slot_req[s] is None), None)
+                if slot is None:
+                    break
+                idx = self.prefix_rows[row] if self.prefix_rows else None
+                matched = []
+                if idx is not None:
+                    # probe WITHOUT the LRU bump: a queue head that
+                    # repeatedly fails admission must not refresh its
+                    # matched entries' recency (that would skew leaf-first
+                    # LRU eviction toward blocks nobody has mapped). Cap
+                    # at total-1: the last known token always runs through
+                    # the forward pass to produce the next logits.
+                    matched = idx.match(req.all_tokens(),
+                                        max_tokens=req.total_tokens - 1,
+                                        bump=False)
+                    if self._wait_for_inflight(req, row, matched):
+                        continue
                 if not self.kv.can_allocate(req.total_tokens + 1,
-                                            cached_blocks=matched):
-                    break                       # FCFS: no queue-jumping
-            req.slot = slot
-            self.slot_req[slot] = req
-            if self.paged:
-                if self.prefix is not None:
-                    self.prefix.record(len(matched))
-                if matched:
-                    self.kv.assign_prefix(slot, matched)
-                    req.prefilled = len(matched) * self.cfg.block_size
-                    req.cached_tokens = req.prefilled
+                                            cached_blocks=matched, row=row):
+                    break                   # FCFS within the row
+                req.slot = slot
+                self.slot_req[slot] = req
+                if idx is not None:
+                    idx.record(len(matched))
+                    if matched:
+                        idx.bump(req.all_tokens(), len(matched))
+                        self.kv.assign_prefix(slot, matched)
+                        req.prefilled = len(matched) * self.cfg.block_size
+                        req.cached_tokens = req.prefilled
+                    self._register_inflight(req, row, len(matched))
                 self.kv.ensure(slot, req.total_tokens + 1)
-            self.lens[slot] = req.prefilled
+                self.lens[slot] = req.prefilled
 
     @property
     def active(self) -> List[Request]:
         return [r for r in self.slot_req if r is not None]
 
     @property
+    def prefix(self):
+        """Row-0 prefix index — the only one under dp=1 (single-row
+        deployments, most tests). Use ``prefix_rows`` under dp>1."""
+        return self.prefix_rows[0] if self.prefix_rows else None
+
+    @property
     def prefix_stats(self) -> dict:
-        """Prefix-cache counters (zeros when caching is off) plus the
-        engine's COW copy count."""
-        s = (self.prefix.stats() if self.prefix is not None
-             else {"entries": 0, "hits": 0, "misses": 0, "tokens_saved": 0,
-                   "evictions": 0})
+        """Prefix-cache counters summed across dp rows (zeros when caching
+        is off) plus the engine's COW copy count and — so dense fallbacks
+        are observable — the reason paging is off (None when paged)."""
+        s = {"entries": 0, "hits": 0, "misses": 0, "tokens_saved": 0,
+             "evictions": 0}
+        for idx in (self.prefix_rows or []):
+            for k, v in idx.stats().items():
+                s[k] += v
         s["cow_copies"] = self.cow_copies
+        s["paged_disabled_reason"] = self.paged_disabled_reason
         return s
 
     # ----------------------------------------------------- memory pressure
     def _preempt(self, victim: Request):
         """Evict a running request back to the queue, freeing its blocks.
-        Recompute-style: its prompt+generated re-prefills on re-admission."""
+        Recompute-style: its prompt+generated re-prefills on re-admission
+        (into the same dp row — ``row`` is sticky)."""
+        self._unregister_inflight(victim)
         self.kv.free_seq(victim.slot)
         self.slot_req[victim.slot] = None
         self.lens[victim.slot] = 0
@@ -278,10 +446,14 @@ class ShiftEngine:
         """Grow req's block table to cover n_tokens — and, when
         ``write_from`` is given, copy-on-write any shared block in the
         write range ``[write_from, n_tokens)`` — LRU-preempting other
-        active requests if the free list (plus prefix-index eviction) runs
-        dry. Returns False when nothing outside ``protect`` can be
-        evicted. COW block copies are queued on ``_step_copies``; the
-        caller applies them to the device pool before the forward pass."""
+        active requests *in the same dp row* if the row's free list (plus
+        its prefix-index eviction) runs dry. Physical blocks never cross
+        rows, so pressure in one row can never evict another row's
+        requests or pinned prefixes. Returns False when nothing outside
+        ``protect`` can be evicted. COW block copies are queued on
+        ``_step_copies``; the caller applies them to the device pool
+        before the forward pass."""
+        row = self.kv.row_of(req.slot)
         while True:
             if self.kv.ensure(req.slot, n_tokens):
                 if write_from is None:
@@ -292,7 +464,8 @@ class ShiftEngine:
                     self._step_copies.extend(copies)
                     return True
             victims = [a for a in self.active
-                       if a is not req and a not in protect]
+                       if a is not req and a not in protect
+                       and self.kv.row_of(a.slot) == row]
             if not victims:
                 return False
             self._preempt(min(victims,
@@ -336,12 +509,13 @@ class ShiftEngine:
         the per-request ``(pc_blocks, pc_parent)`` cursor means a decode
         step hashes at most one new chunk instead of re-walking the chain
         from the root (which would be O(len^2) over a request's life)."""
-        if self.prefix is None or req.slot is None:
+        if self.prefix_rows is None or req.slot is None:
             return
+        idx = self.prefix_rows[self.kv.row_of(req.slot)]
         full = min(req.prefilled // self.cfg.block_size,
                    int(self.kv.n_mapped[req.slot]))
         if full > req.pc_blocks:
-            req.pc_blocks, req.pc_parent, _ = self.prefix.commit_incremental(
+            req.pc_blocks, req.pc_parent, _ = idx.commit_incremental(
                 req.all_tokens(), req.pc_blocks, full, req.pc_parent,
                 self.kv.seq_blocks(req.slot))
 
@@ -373,9 +547,15 @@ class ShiftEngine:
         return name
 
     def _log_step(self, n_prefill: int, n_decode: int, n_ready: int):
-        self.step_log.append({"prefill_tokens": n_prefill,
-                              "decode_tokens": n_decode,
-                              "ready_decodes": n_ready})
+        entry = {"prefill_tokens": n_prefill,
+                 "decode_tokens": n_decode,
+                 "ready_decodes": n_ready}
+        if self.paged_disabled_reason is not None:
+            # the dense fallback must be visible in the step log, not just
+            # at construction: dp-sharded deployments silently lost paging
+            # (and mixed batching + prefix caching with it) once already
+            entry["paged_disabled_reason"] = self.paged_disabled_reason
+        self.step_log.append(entry)
         if len(self.step_log) > self.trace_window:
             del self.step_log[:len(self.step_log) - self.trace_window]
 
@@ -392,6 +572,7 @@ class ShiftEngine:
                       and r.generated[-1] == self.cfg.eos_id):
             r.finish_time = t
             if self.paged:
+                self._unregister_inflight(r)
                 self.kv.free_seq(r.slot)
             self.slot_req[r.slot] = None
             self.queue = [q for q in self.queue if q.rid != r.rid]
@@ -445,8 +626,23 @@ class ShiftEngine:
         # compact to active rows; bucket every axis so each (config, shape)
         # compiles once. The chunk axis must stay divisible by the chosen
         # config's sp degree (decode-only batches on the shift config are
-        # [R, 1] — no padded rectangle).
-        Rb = _pow2(len(rows))
+        # [R, 1] — no padded rectangle). Under dp>1 the device batch axis
+        # is sharded over dp, so each dp row's requests must land in that
+        # row's contiguous segment; every row gets the same pow2-bucketed
+        # segment width so the sharded shape stays rectangular (a row with
+        # no work this step contributes an all-padding segment whose
+        # scatters land in its null block).
+        if self.dp > 1:
+            per = [[] for _ in range(self.dp)]
+            for e in rows:
+                per[self.kv.row_of(e[0].slot)].append(e)
+            seg = _pow2(max(len(p) for p in per))
+            placed = [(ri * seg + j, e) for ri, p in enumerate(per)
+                      for j, e in enumerate(p)]
+            Rb = self.dp * seg
+        else:
+            placed = list(enumerate(rows))
+            Rb = _pow2(len(rows))
         Cb = max(_pow2(max(ql for _, _, ql, _ in rows)),
                  max(model.lay.sp, 1))
         self._refresh_block_tables()
@@ -459,7 +655,7 @@ class ShiftEngine:
         qlen = np.zeros((Rb,), np.int32)
         offs = np.zeros((Rb,), np.int32)
         bt = np.zeros((Rb, nbb), np.int32)
-        for i, (r, off, ql, _) in enumerate(rows):
+        for i, (r, off, ql, _) in placed:
             if ql == 1 and off == r.pos:       # decode row: O(1) last token
                 toks[i, 0] = (r.generated[-1] if r.generated
                               else r.prompt[-1])
@@ -475,7 +671,7 @@ class ShiftEngine:
                                               *self._extras(Rb))
         nxt = np.asarray(nxt)
         t = self.now()
-        for i, (r, off, ql, produces) in enumerate(rows):
+        for i, (r, off, ql, produces) in placed:
             r.prefilled = off + ql
             r.last_used = self.step_count
             self.lens[r.slot] = r.prefilled
@@ -627,6 +823,7 @@ class ShiftEngine:
             "lens": self.lens.copy(),
             "requests": [
                 {"rid": r.rid, "prompt": list(r.prompt), "slot": r.slot,
+                 "row": r.row,
                  "prefilled": r.prefilled, "generated": list(r.generated),
                  "max_new_tokens": r.max_new_tokens, "arrival": r.arrival,
                  "first_token_time": r.first_token_time,
@@ -637,32 +834,42 @@ class ShiftEngine:
         }
         if self.paged:
             snap["kv"] = self.kv.state_dict()
-            if self.prefix is not None:
-                # the allocator snapshot carries the index's pins — the
-                # index must round-trip with it or those refs would leak
-                snap["prefix"] = self.prefix.state_dict()
+            if self.prefix_rows is not None:
+                # the per-row allocator snapshots carry the indexes' pins —
+                # every row's index must round-trip with them or those refs
+                # would leak
+                snap["prefix"] = [idx.state_dict()
+                                  for idx in self.prefix_rows]
         return snap
 
     def restore(self, snap):
+        """Rebuild engine state from ``snapshot()``. The in-flight prefill
+        registry is intentionally NOT restored (worst case: one duplicated
+        shared-span prefill right after a restart)."""
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
         self.lens = snap["lens"].copy()
         if self.paged:
             assert "kv" in snap, "paged engine restoring a dense snapshot"
             self.kv = PagedKVCache.from_state(snap["kv"])
-            if self.prefix is not None:
+            assert self.kv.dp == self.dp, \
+                f"snapshot has dp={self.kv.dp}, engine has dp={self.dp}"
+            if self.prefix_rows is not None:
                 assert "prefix" in snap, \
                     "prefix-caching engine restoring a snapshot without " \
-                    "the index (its allocator pins would leak)"
-                self.prefix = PrefixIndex.from_state(snap["prefix"],
-                                                     self.kv.allocator)
-                self.kv.prefix_index = self.prefix
+                    "the indexes (their allocator pins would leak)"
+                assert len(snap["prefix"]) == self.dp
+                self.prefix_rows = [
+                    PrefixIndex.from_state(s, self.kv.allocators[r])
+                    for r, s in enumerate(snap["prefix"])]
+                self.kv.prefix_indices = list(self.prefix_rows)
             else:
                 # symmetric guard: the snapshot's allocator refcounts carry
                 # one pin per index entry — restoring without rebuilding
-                # the index would leak every pinned block unreachably
+                # the indexes would leak every pinned block unreachably
                 assert "prefix" not in snap, \
-                    "snapshot carries a prefix index but this engine has " \
-                    "prefix_cache=False (its allocator pins would leak)"
+                    "snapshot carries prefix indexes but this engine has " \
+                    "prefix_cache=False (their allocator pins would leak)"
+            self._inflight = [dict() for _ in range(self.dp)]
             self._refresh_block_tables()   # from_state marks all rows dirty
         self.slot_req = [None] * self.cfg.max_slots
         self.queue = []
@@ -670,6 +877,7 @@ class ShiftEngine:
             r = Request(rd["rid"], rd["prompt"], rd["max_new_tokens"],
                         arrival=rd.get("arrival", 0.0))
             r.slot = rd["slot"]
+            r.row = rd.get("row")
             r.prefilled = rd["prefilled"]
             r.generated = list(rd["generated"])
             r.first_token_time = rd.get("first_token_time")

@@ -14,6 +14,10 @@ class Request:
 
     # engine state -----------------------------------------------------------
     slot: Optional[int] = None
+    row: Optional[int] = None         # dp row this request is routed to
+    #                                   (free-block-aware, assigned once and
+    #                                   sticky across preemptions so the
+    #                                   row's prefix cache stays warm)
     prefilled: int = 0                # tokens already written to the cache
     cached_tokens: int = 0            # prefill tokens served by a prefix hit
     #                                   at the current admission (reset on
@@ -24,6 +28,12 @@ class Request:
     # root once — commit is an idempotent LRU bump for existing entries).
     pc_blocks: int = 0
     pc_parent: Optional[int] = None
+    # chain hashes of the full prompt blocks this admission will write,
+    # published in the engine's in-flight registry so a same-prefix request
+    # admitted behind it waits for the commit instead of duplicating the
+    # prefill. Engine-internal; cleared on preemption/retire, not
+    # snapshotted (post-restore the worst case is one duplicated prefill).
+    inflight_keys: List[int] = field(default_factory=list)
     generated: List[int] = field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None

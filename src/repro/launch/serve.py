@@ -26,10 +26,22 @@ def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
                  slots=8, s_max=256, chunk=64,
                  threshold=DEFAULT_SHIFT_THRESHOLD, adaptive=False,
                  paged=None, block_size=16, num_blocks=0, prefix_cache=False,
-                 dtype=jnp.float32):
+                 dp=1, dtype=jnp.float32):
+    """One ShiftEngine over an optional (data, sp, tp) mesh. With dp > 1
+    (and no explicit mesh) a dp×1×1 test mesh is built: the engine pages
+    per dp row — each row owns a private block pool and prefix index, and
+    queued requests are routed to the row with the most free blocks."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if mesh is None and dp > 1:
+        from repro.launch.mesh import make_test_mesh
+        if len(jax.devices()) < dp:
+            raise ValueError(
+                f"dp={dp} needs {dp} devices, have {len(jax.devices())} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "before jax initializes for a CPU demo)")
+        mesh = make_test_mesh(data=dp, sp=1, tp=1)
     if mesh is None:
         base = build_model(cfg, dtype=dtype)
         shift = base
@@ -68,12 +80,17 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared 'system prompt' tokens "
                          "to every request (demonstrates prefix reuse)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel rows: ONE engine pages per-row "
+                         "block pools over a dp×1×1 mesh (CPU demo needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args()
 
     eng = build_engine(args.arch, adaptive=args.adaptive,
                        block_size=args.block_size,
                        num_blocks=args.num_blocks,
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache,
+                       dp=args.dp)
     system = list(range(1000, 1000 + args.shared_prefix))
     reqs = [Request(i, system + list(range(1, 20 + 3 * i)),
                     max_new_tokens=args.max_new, arrival=time.monotonic())
@@ -93,15 +110,24 @@ def main():
           f"shift={eng.config_counts['shift']}; "
           f"{n_tok} tokens in {dt:.2f}s")
     if eng.paged:
-        print(f"paged cache: {eng.kv.allocator.num_blocks} blocks x "
+        print(f"paged cache: {eng.dp} dp row(s) x "
+              f"{eng.kv.num_blocks_per_row} blocks x "
               f"{eng.cfg.block_size} tokens, {eng.preemptions} preemptions, "
               f"{eng.kv.num_free_blocks} free at exit")
-        if eng.prefix is not None:
+        for r in range(eng.dp):
+            routed = sum(1 for q in reqs if q.row == r)
+            print(f"  row {r}: {routed} requests routed, "
+                  f"{eng.kv.row_free_blocks(r)} free blocks")
+        if eng.prefix_rows is not None:
             s = eng.prefix_stats
             print(f"prefix cache: {s['entries']} cached blocks, "
                   f"{s['hits']} hits / {s['misses']} misses, "
                   f"{s['tokens_saved']} prefill tokens saved, "
                   f"{s['evictions']} evictions, {s['cow_copies']} COW copies")
+    else:
+        # the dense fallback is loud: say WHY paging is off (also recorded
+        # in prefix_stats / step_log)
+        print(f"dense cache fallback: {eng.paged_disabled_reason}")
 
 
 if __name__ == "__main__":

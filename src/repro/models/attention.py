@@ -111,22 +111,28 @@ def cache_specs(lay: Layout):
 def paged_cache_init(cfg, lay: Layout, num_blocks: int, block_size: int,
                      dtype):
     """Physical KV block pool for one attention layer:
-    ``[num_blocks, block_size, slots, Dh]``.
+    ``[dp * num_blocks, block_size, slots, Dh]`` — ``num_blocks`` blocks
+    PER dp row, concatenated on the leading axis, which is sharded over
+    the dp mesh axes so each data-parallel row owns a private pool slice
+    (inside ``shard_map`` a dp shard indexes its local ``[num_blocks, ...]``
+    slice with row-local block ids straight from its block-table shard).
 
     The per-block layout is shard-invariant: only the head-slot axis is
-    sharded (over the tp-major model group, same as the contiguous cache),
-    so base (SP,TP) and shift (TP) configs map identical bytes of every
-    block to identical devices and SP↔TP switching moves zero bytes. The
-    pool is shared across the batch; ``block_tables`` assign physical
-    blocks to sequences."""
+    sharded over the tp-major *model* group (same as the contiguous
+    cache), and the dp axes are identical in base and shift configs, so
+    both map identical bytes of every block to identical devices and
+    SP↔TP switching moves zero bytes. Each row's pool is shared across
+    that row's sequences; ``block_tables`` assign physical blocks."""
     plan = get_plan(cfg, lay)
-    shape = (num_blocks, block_size, plan.kv_slots_total, cfg.head_dim)
+    shape = (max(lay.dp, 1) * num_blocks, block_size, plan.kv_slots_total,
+             cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def paged_cache_specs(lay: Layout):
+    dp = lay.dp_axes or None
     h = lay.head_spec_entry()
-    return {"k": P(None, None, h, None), "v": P(None, None, h, None)}
+    return {"k": P(dp, None, h, None), "v": P(dp, None, h, None)}
 
 
 def block_table_spec(lay: Layout) -> P:

@@ -63,6 +63,9 @@ class Model:
                 and all(k in ("attn", "moe") for k in self.cfg.layer_kinds))
 
     def init_paged_cache(self, num_blocks: int, block_size: int):
+        """Block pools with ``num_blocks`` physical blocks PER dp row (the
+        leading pool axis is ``dp * num_blocks``, sharded over the dp
+        axes). With dp == 1 this is exactly the global pool size."""
         return T.init_paged_cache(self.cfg, self.lay, num_blocks, block_size,
                                   self.dtype)
 

@@ -119,10 +119,11 @@ def init_cache(cfg, lay: Layout, batch: int, s_max: int, dtype):
 
 def init_paged_cache(cfg, lay: Layout, num_blocks: int, block_size: int,
                      dtype):
-    """Paged KV pools, one per cached layer, same tree structure as
+    """Paged KV pools, one per cached layer (``num_blocks`` blocks per dp
+    row — see ``attention.paged_cache_init``), same tree structure as
     ``init_cache``. All layers share the block-table indirection (a block
-    maps the same token span in every layer), so one allocator serves the
-    whole stack."""
+    maps the same token span in every layer), so one allocator per dp row
+    serves the whole stack."""
     kinds = cfg.layer_kinds
     npre, nsuf = len(cfg.prefix_layers), len(cfg.suffix_layers)
     reps = cfg.pattern_repeats

@@ -12,8 +12,9 @@ CostModel. Reproduces the paper's latency/throughput experiments (Figs
 padding, config switching) is simulated exactly; only iteration wall time
 is modeled.
 
-DP runs n independent single-chip-group replicas with round-robin routing;
-TP/SP/Shift run one group over all chips.
+DP runs n independent single-chip-group replicas with free-block-aware
+routing (least outstanding block demand, matching the engine's per-dp-row
+request routing); TP/SP/Shift run one group over all chips.
 """
 from __future__ import annotations
 
@@ -221,12 +222,39 @@ class ServeSim:
         rep.active = [r for r in rep.active if r.finish < 0]
         return dt
 
+    def _route(self, reqs: List[SimRequest]) -> List[List[SimRequest]]:
+        """Free-block-aware routing to replicas, mirroring the engine's
+        per-dp-row admission (the row with the most allocatable blocks
+        wins, ties to the lowest row). Replicas simulate independently, so
+        the load signal is the block demand routed so far; with prefix
+        caching a request whose shared span is already routed to a replica
+        charges only its private blocks there — the sim analogue of the
+        engine's ``can_allocate(cached_blocks=...)`` credit. Uniform
+        traces degenerate to round-robin, so dp throughput is unchanged
+        there; skewed traces now pile onto the emptiest replica exactly
+        like the engine routes onto the emptiest row."""
+        assign: List[List[SimRequest]] = [[] for _ in self.reps]
+        load = [0] * len(self.reps)
+        seen: List[set] = [set() for _ in self.reps]
+        for r in reqs:
+            need = blocks_for_tokens(r.n_in + r.n_out + 1, self.block_size)
+
+            def demand(i):
+                if self.prefix_cache and r.prefix_id in seen[i]:
+                    return need - self._matched_blocks(r)
+                return need
+
+            best = min(range(len(self.reps)),
+                       key=lambda i: (load[i] + demand(i), i))
+            assign[best].append(r)
+            load[best] += demand(best)
+            if self.prefix_cache and r.prefix_id >= 0:
+                seen[best].add(r.prefix_id)
+        return assign
+
     def run(self, requests: List[SimRequest], t_end: Optional[float] = None):
         reqs = sorted(requests, key=lambda r: r.arrival)
-        # round-robin assignment to replicas
-        assign = [[] for _ in self.reps]
-        for i, r in enumerate(reqs):
-            assign[i % len(self.reps)].append(r)
+        assign = self._route(reqs)
         for rep, rs in zip(self.reps, assign):
             pending = list(rs)
             while pending or rep.active or rep.queue:

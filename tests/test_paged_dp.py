@@ -1,0 +1,335 @@
+"""Per-dp-row paged KV pools: a dp=2 engine must behave exactly like two
+independent dp=1 engines fed the routed split (bit-for-bit token parity),
+rows must be isolated (pressure in one row never preempts or evicts the
+other row's requests/prefixes), per-row allocators must snapshot/restore,
+and the invariance check must hold per row on a (dp, sp, tp) mesh.
+
+Plus regression tests for the admission-probe LRU bump and the concurrent
+same-prefix prefill sharing (in-flight registry)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_mesh, reduced_cfg
+from repro.cache import PagedKVCache, PrefixIndex
+from repro.core.invariance import verify_paged_invariance
+from repro.core.policy import ThresholdPolicy
+from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.models import build_model
+from repro.models.model import Model
+from repro.parallel import Layout
+from jax.sharding import PartitionSpec as P
+
+
+def _dp2_models(cfg):
+    mesh = make_mesh((2, 1, 1))
+    lay = Layout.from_mesh(mesh, dp=("data",), sp=("sp",), tp=("tp",))
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.float32)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh, dtype=jnp.float32)
+    return mb, ms
+
+
+def _run(eng, reqs, max_steps=800):
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=max_steps)
+    return {r.rid: tuple(r.generated) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit parity: one dp=2 engine == two routed dp=1 engines
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mixed", [True, False])
+def test_dp2_engine_matches_routed_dp1_engines(mixed):
+    """A dp=2 paged (+prefix-cache) engine constructs, pages, and produces
+    token streams bit-for-bit identical to two independent dp=1 engines
+    fed the same routed split — per-row pools change WHERE blocks live,
+    never WHAT a request reads."""
+    cfg = reduced_cfg("qwen3-8b")
+    mb, ms = _dp2_models(cfg)
+    pb = mb.init_params(jax.random.key(0))
+    ps = ms.init_params(jax.random.key(0))
+    n_req = 6 if mixed else 4
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
+                        block_size=8, prefix_cache=mixed, mixed=mixed)
+    eng = ShiftEngine(mb, ms, pb, ps, ecfg, policy=ThresholdPolicy(4))
+    assert eng.paged and eng.dp == 2 and eng.slots_per_row == 2
+    reqs = [Request(i, list(range(1, 12 + i)), max_new_tokens=6)
+            for i in range(n_req)]
+    got = _run(eng, reqs)
+    assert all(len(v) == 6 for v in got.values())
+    rows = {r.rid: r.row for r in reqs}
+    assert set(rows.values()) == {0, 1}        # both rows actually used
+
+    m1 = build_model(cfg, dtype=jnp.float32)
+    p1 = m1.init_params(jax.random.key(0))
+    for row in (0, 1):
+        e1 = ShiftEngine(m1, m1, p1, p1,
+                         EngineConfig(max_slots=2, s_max=64, prefill_chunk=8,
+                                      threshold=4, block_size=8,
+                                      prefix_cache=mixed, mixed=mixed),
+                         policy=ThresholdPolicy(4))
+        sub = [Request(r.rid, list(r.prompt), max_new_tokens=6)
+               for r in reqs if rows[r.rid] == row]
+        ref = _run(e1, sub)
+        for rid, toks in ref.items():
+            assert got[rid] == toks, f"row {row} rid {rid} diverged"
+
+
+# ---------------------------------------------------------------------------
+# row isolation: pressure in row 0 never touches row 1
+# ---------------------------------------------------------------------------
+def test_dp_row_preemption_isolation():
+    """Block exhaustion in row 0 preempts only row-0 requests: row 1's
+    requests run to completion with num_preemptions == 0 even though row
+    1 has free blocks row 0 could covet."""
+    cfg = reduced_cfg("qwen3-8b")
+    mb, ms = _dp2_models(cfg)
+    pb = mb.init_params(jax.random.key(0))
+    ps = ms.init_params(jax.random.key(0))
+    # 4 usable blocks per row; 12-token prompts reserve 2 blocks each, so
+    # admission fills each row exactly. Row 0's requests decode to 24
+    # tokens (3 blocks): the first one's growth finds the free list dry
+    # and must preempt its row sibling. Row 1's stop at 14 tokens (still
+    # 2 blocks): no pressure, and row 0 must never reach into it.
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
+                        block_size=8, num_blocks=5)
+    eng = ShiftEngine(mb, ms, pb, ps, ecfg, policy=ThresholdPolicy(4))
+    # distinct prompts of EQUAL length: routing sees identical demand and
+    # alternates rows deterministically (0, 1, 0, 1)
+    reqs = [Request(i, list(range(100 * i + 1, 100 * i + 13)),
+                    max_new_tokens=12 if i % 2 == 0 else 2)
+            for i in range(4)]
+    _run(eng, reqs, max_steps=2000)
+    assert [r.row for r in reqs] == [0, 1, 0, 1]
+    assert all(r.finish_time is not None for r in reqs)
+    assert eng.preemptions > 0                 # row 0 really was squeezed
+    for r in reqs:
+        if r.row == 1:
+            assert r.num_preemptions == 0, \
+                "row-0 pressure preempted a row-1 request"
+
+
+def test_dp_row_prefix_eviction_isolation():
+    """Allocation pressure in row 0 evicts only row 0's prefix entries;
+    row 1's pinned blocks are untouchable from row 0 (control plane,
+    no mesh needed)."""
+    kv = PagedKVCache(num_blocks=6, block_size=4, max_seqs=4,
+                      max_blocks_per_seq=8, dp=2)      # 5 usable per row
+    idx0 = PrefixIndex(4, kv.allocators[0])
+    idx1 = PrefixIndex(4, kv.allocators[1])
+    kv.prefix_indices = [idx0, idx1]
+    # row 0 (slots 0-1): commit 2 blocks; row 1 (slots 2-3): commit 2
+    toks = list(range(1, 9))
+    kv.ensure(0, 8)
+    idx0.commit(toks, 2, kv.seq_blocks(0))
+    kv.free_seq(0)                             # pinned only by idx0 now
+    kv.ensure(2, 8)
+    idx1.commit(toks, 2, kv.seq_blocks(2))
+    kv.free_seq(2)
+    assert len(idx0) == 2 and len(idx1) == 2
+    assert kv.row_free_blocks(0) == 3 and kv.row_free_blocks(1) == 3
+    # row 0 allocates past its free list: must evict idx0's pins only
+    assert kv.ensure(1, 20)                    # 5 blocks > 3 free
+    assert len(idx0) == 0 and idx0.evictions == 2
+    assert len(idx1) == 2 and idx1.evictions == 0      # row 1 untouched
+    assert kv.row_free_blocks(1) == 3
+    # row 1 still matches its (identical-content) prefix independently
+    assert len(idx1.match(toks)) == 2
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restore of per-row allocators
+# ---------------------------------------------------------------------------
+def test_dp_kv_state_roundtrip():
+    kv = PagedKVCache(num_blocks=9, block_size=4, max_seqs=4,
+                      max_blocks_per_seq=4, dp=2)
+    kv.ensure(0, 7)                            # row 0: 2 blocks
+    kv.ensure(3, 13)                           # row 1: 4 blocks
+    kv2 = PagedKVCache.from_state(kv.state_dict())
+    assert kv2.dp == 2 and kv2.slots_per_row == 2
+    assert kv2.seq_blocks(0) == kv.seq_blocks(0)
+    assert kv2.seq_blocks(3) == kv.seq_blocks(3)
+    for r in (0, 1):
+        assert kv2.allocators[r].num_free == kv.allocators[r].num_free
+    # row-local ids can coincide across rows — the allocators are disjoint
+    assert kv2.ensure(1, 4) and kv2.ensure(2, 4)
+    assert kv2.row_of(1) == 0 and kv2.row_of(2) == 1
+    assert kv2.table3.shape == (2, 2, 4)
+
+
+def test_dp_engine_snapshot_restores_per_row_state():
+    """Engine-level: admission state (routed rows, per-row tables and
+    prefix indexes) survives snapshot→restore. Control-plane only — no
+    forward pass is compiled."""
+    cfg = reduced_cfg("qwen3-8b")
+    mb, ms = _dp2_models(cfg)
+    pb = mb.init_params(jax.random.key(0))
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                        block_size=8, prefix_cache=True)
+    eng = ShiftEngine(mb, ms, pb, pb, ecfg, policy=ThresholdPolicy(4))
+    reqs = [Request(i, list(range(1, 14 + i)), max_new_tokens=4)
+            for i in range(4)]
+    for r in reqs:
+        eng.add_request(r)
+    eng._admit()                               # routes + maps, no forward
+    assert sorted(r.row for r in reqs) == [0, 0, 1, 1]
+    eng2 = ShiftEngine(mb, ms, pb, pb, ecfg, policy=ThresholdPolicy(4))
+    eng2.restore(eng.snapshot())
+    assert eng2.kv.dp == 2
+    assert (eng2.kv.table == eng.kv.table).all()
+    for r in range(2):
+        assert (eng2.kv.allocators[r].state_dict()
+                == eng.kv.allocators[r].state_dict())
+        assert len(eng2.prefix_rows[r]) == len(eng.prefix_rows[r])
+    by_rid = {r.rid: r for r in eng2.queue}
+    for r in reqs:
+        assert by_rid[r.rid].row == r.row and by_rid[r.rid].slot == r.slot
+
+
+# ---------------------------------------------------------------------------
+# invariance per row on a (dp, sp, tp) mesh
+# ---------------------------------------------------------------------------
+def test_dp_paged_invariance_structural(mesh222):
+    """§3.3.1 extended to per-dp-row pools: identical per-block byte→device
+    maps under base and shift, tables replicated across the model group,
+    AND the pool's block axis dp-sharded in lockstep with the table's slot
+    axis (each row's table indexes exactly its own pool slice)."""
+    cfg = reduced_cfg("qwen3-8b")
+    lay = Layout.from_mesh(mesh222, dp=("data",), sp=("sp",), tp=("tp",))
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh222)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh222)
+    isp = lambda x: isinstance(x, P)  # noqa: E731
+    args = (jax.tree.leaves(mb.abstract_paged_cache(16, 4)),
+            jax.tree.leaves(mb.paged_cache_specs(), is_leaf=isp),
+            jax.tree.leaves(ms.paged_cache_specs(), is_leaf=isp),
+            (8, 4), mb.block_table_spec(), ms.block_table_spec(),
+            mesh222, lay.model_axes)
+    assert verify_paged_invariance(*args, dp_axes=lay.dp_axes)
+    # the row-alignment check has teeth: a replicated (un-dp-sharded)
+    # table would let every shard index every row's pool — reject it
+    bad = args[:4] + (P(None, None), P(None, None)) + args[6:]
+    assert not verify_paged_invariance(*bad, dp_axes=lay.dp_axes)
+
+
+# ---------------------------------------------------------------------------
+# regression: admission probe must not LRU-bump matched entries
+# ---------------------------------------------------------------------------
+def test_admission_probe_does_not_bump_lru():
+    """A probe with bump=False leaves recency untouched, so a queue head
+    that repeatedly fails admission cannot protect its matched blocks
+    from leaf-first LRU eviction. bump() then refreshes recency only on
+    actual use."""
+    kv = PagedKVCache(num_blocks=8, block_size=4, max_seqs=2,
+                      max_blocks_per_seq=4)
+    idx = PrefixIndex(4, kv.allocator)
+    kv.prefix_index = idx
+    a_toks, b_toks = list(range(1, 5)), list(range(11, 15))
+    kv.ensure(0, 4)
+    idx.commit(a_toks, 1, kv.seq_blocks(0))    # entry A (older)
+    kv.free_seq(0)
+    kv.ensure(0, 4)
+    idx.commit(b_toks, 1, kv.seq_blocks(0))    # entry B (newer)
+    kv.free_seq(0)
+    for _ in range(5):                         # failed-admission probes of A
+        assert len(idx.match(a_toks, bump=False)) == 1
+    idx.evict(1)
+    # A stayed least-recently-used despite the probes -> A was evicted
+    assert idx.match(a_toks, bump=False) == []
+    assert len(idx.match(b_toks, bump=False)) == 1
+    # deferred bump on actual use DOES refresh recency
+    kv.ensure(0, 4)
+    idx.commit(a_toks, 1, kv.seq_blocks(0))    # re-add A (now newest)
+    kv.free_seq(0)
+    idx.bump(b_toks, 1)                        # B used -> newest
+    idx.evict(1)
+    assert idx.match(a_toks, bump=False) == []         # A evicted again
+    assert len(idx.match(b_toks, bump=False)) == 1
+
+
+# ---------------------------------------------------------------------------
+# regression: concurrent same-prefix cold admissions share the prefill
+# ---------------------------------------------------------------------------
+def test_concurrent_same_prefix_prefill_shared():
+    """Two cold requests with a common 24-token prefix admitted together:
+    the second must wait for the first's commit and map its blocks —
+    total prefill work ~= one full prompt + the suffix, not double — and
+    the streams must still match independent cold runs bit-for-bit."""
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    shared = list(range(1, 25))                # 3 full blocks of 8
+    pa, pb = shared + [30], shared + [40]
+
+    def cold(rid, prompt):
+        eng = ShiftEngine(m, m, params, params,
+                          EngineConfig(max_slots=4, s_max=64,
+                                       prefill_chunk=8, threshold=4,
+                                       block_size=8, prefix_cache=True),
+                          policy=ThresholdPolicy(4))
+        return _run(eng, [Request(rid, prompt, max_new_tokens=5)])[rid]
+
+    ref = {0: cold(0, pa), 1: cold(1, pb)}
+    eng = ShiftEngine(m, m, params, params,
+                      EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                                   threshold=4, block_size=8,
+                                   prefix_cache=True),
+                      policy=ThresholdPolicy(4))
+    ra = Request(0, pa, max_new_tokens=5)
+    rb = Request(1, pb, max_new_tokens=5)
+    got = _run(eng, [ra, rb])
+    assert got == ref                          # sharing never changes tokens
+    # the second request mapped the first's blocks once committed...
+    assert rb.cached_tokens == 24
+    # ...so the engine prefilled the shared span ONCE (24 tokens, not 48;
+    # each request's final prompt token runs through the fused decode
+    # path, so it never counts as prefill work)
+    total_prefill = sum(e["prefill_tokens"] for e in eng.step_log)
+    assert total_prefill == len(shared)
+    assert eng.prefix_stats["hits"] == 1
+    # registry drained: nothing in flight once both requests finished
+    assert all(not m_ for m_ in eng._inflight)
+
+
+# ---------------------------------------------------------------------------
+# regression: the dense fallback is loud
+# ---------------------------------------------------------------------------
+def test_paged_disabled_reason_surfaced():
+    """When the engine falls back to the dense cache, the reason must be
+    queryable (prefix_stats) and stamped on every step_log entry."""
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    ecfg = EngineConfig(max_slots=2, s_max=32, prefill_chunk=8, paged=False)
+    eng = ShiftEngine(m, m, params, params, ecfg,
+                      policy=ThresholdPolicy(4))
+    assert not eng.paged
+    assert eng.paged_disabled_reason == "paged=False in EngineConfig"
+    assert eng.prefix_stats["paged_disabled_reason"] \
+        == eng.paged_disabled_reason
+    _run(eng, [Request(0, list(range(1, 10)), max_new_tokens=2)])
+    assert eng.step_log
+    assert all(e["paged_disabled_reason"] == eng.paged_disabled_reason
+               for e in eng.step_log)
+    # a paged engine carries no reason
+    eng2 = ShiftEngine(m, m, params, params,
+                       EngineConfig(max_slots=2, s_max=32, prefill_chunk=8),
+                       policy=ThresholdPolicy(4))
+    assert eng2.paged and eng2.paged_disabled_reason is None
+    assert eng2.prefix_stats["paged_disabled_reason"] is None
+
+
+def test_paged_dp_indivisible_slots_reason_and_raise():
+    """max_slots not divisible by dp: auto mode falls back loudly, forced
+    paged raises."""
+    cfg = reduced_cfg("qwen3-8b")
+    mb, ms = _dp2_models(cfg)
+    pb = mb.init_params(jax.random.key(0))
+    ecfg = EngineConfig(max_slots=3, s_max=32, prefill_chunk=8)
+    eng = ShiftEngine(mb, ms, pb, pb, ecfg, policy=ThresholdPolicy(4))
+    assert not eng.paged
+    assert "divisible" in eng.paged_disabled_reason
+    with pytest.raises(ValueError, match="divisible"):
+        ShiftEngine(mb, ms, pb, pb,
+                    EngineConfig(max_slots=3, s_max=32, paged=True),
+                    policy=ThresholdPolicy(4))

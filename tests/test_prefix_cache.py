@@ -340,11 +340,14 @@ def test_engine_serialized_path_prefix_parity():
 def test_engine_preempted_request_reuses_its_own_prefix():
     """Preemption decrements shared blocks without freeing them (the index
     pin survives), so a preempted request re-prefills only what the index
-    lost — and output is invariant vs a pressure-free prefix run."""
+    lost — and output is invariant vs a pressure-free prefix run.
+    Prompts are pairwise DISTINCT: shared prompts would trigger in-flight
+    prefill sharing, which serializes admissions enough to relieve the
+    memory pressure this test needs."""
     cfg = reduced_cfg("qwen3-8b")
     m = build_model(cfg, dtype=jnp.float32)
     params = m.init_params(jax.random.key(0))
-    prompts = [list(range(1, 10 + i)) for i in range(6)]
+    prompts = [list(range(100 * i + 1, 100 * i + 10 + i)) for i in range(6)]
 
     def run(num_blocks):
         eng = _mk_engine(m, params, True, num_blocks=num_blocks)
@@ -355,7 +358,7 @@ def test_engine_preempted_request_reuses_its_own_prefix():
         return {r.rid: tuple(r.generated) for r in rs}, eng
 
     roomy, _ = run(0)
-    tight, eng = run(7)                       # 6 usable blocks -> pressure
+    tight, eng = run(8)                       # 7 usable blocks -> pressure
     assert roomy == tight
     assert eng.preemptions > 0                # eviction alone didn't suffice
     assert eng.prefix_stats["evictions"] > 0  # pins were reclaimed under

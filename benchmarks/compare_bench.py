@@ -6,10 +6,12 @@ when a gated metric regresses by more than the threshold (default 25%),
 so a kernel or scheduling regression fails the build instead of only
 shipping as an artifact someone has to open.
 
-What is gated: the DETERMINISTIC ragged/mixed/prefix metrics — simulator
-outputs (``step.*``, ``prefix.*``: iteration counts, starvation, TPOT/TTFT
-in modeled seconds) and the kernel speedup ratios (``paged.speedup_*``,
-``step.*_ratio``, ``prefix.*_ratio``). Raw wall-clock entries
+What is gated: the DETERMINISTIC ragged/mixed/prefix/work-prop metrics —
+simulator outputs (``step.*``, ``prefix.*``: iteration counts, starvation,
+TPOT/TTFT in modeled seconds), the engine-logged attention occupancy and
+modeled gather/kernel HBM-bytes ratio (``attn.decode_ctx_tokens``,
+``attn.gather_bytes_ratio``) and the kernel speedup ratios
+(``paged.speedup_*``, ``step.*_ratio``, ``prefix.*_ratio``). Raw wall-clock entries
 (``us_per_call``) are reported but NOT gated by default: shared CI runners
 jitter well past any useful threshold, and a flaky gate is worse than no
 gate (pass ``--strict`` to include them locally on a quiet machine).

@@ -9,6 +9,12 @@ mode on CPU (TPU timings are the roofline estimates in EXPERIMENTS.md
   past each sequence's occupancy, and the engine additionally slices the
   table batch to the occupied bucket (``ragged_sliced`` — the shape the
   engine actually launches).
+* work-proportional engine decode (``attn.*``) — a real paged ShiftEngine
+  decoding a skewed batch under the kernel path vs the retired
+  materialized-gather path (``KernelConfig("gather")``): per-step
+  wall-clock (reported), the logged ``attn_ctx_tokens`` occupancy and the
+  modeled gather/kernel HBM-bytes ratio (gated — the cost curve the
+  kernel adoption changes).
 * mixed-vs-serialized engine stepping — ServeSim replays the same bursty
   trace under the fused prefill+decode schedule and the serialized
   prefill-OR-decode schedule, costed by the roofline CostModel.
@@ -112,17 +118,102 @@ def _ragged_vs_padded(rec, iters, smoke):
     lens = jnp.full((B,), ctx, jnp.int32)
     ones = jnp.ones((B,), jnp.int32)
     sliced = jnp.asarray(bt[:, :4])              # engine's pow2 bucket of 3
+    # pin the interpret backend: the skip speedups measure the PALLAS
+    # grid's pl.when behavior (the dispatch would otherwise hand CPU calls
+    # to the jnp mirror, which computes skipped steps)
+    from repro.kernels.ops import KernelConfig
+    itp = KernelConfig("interpret")
+    rag = lambda *a: ops.paged_ragged_attention(*a, kcfg=itp)  # noqa: E731
     t_pad = _t(ops.paged_decode_attention, q, kp, vp, jnp.asarray(bt), lens,
                iters=iters)
-    t_rag = _t(ops.paged_ragged_attention, q, kp, vp, jnp.asarray(bt), ones,
-               lens, iters=iters)
-    t_sli = _t(ops.paged_ragged_attention, q, kp, vp, sliced, ones, lens,
-               iters=iters)
+    t_rag = _t(rag, q, kp, vp, jnp.asarray(bt), ones, lens, iters=iters)
+    t_sli = _t(rag, q, kp, vp, sliced, ones, lens, iters=iters)
+    # the production CPU fallback (the kernel's jnp mirror) on the same
+    # sliced shape — what tier-1 and the engine actually pay per call
+    t_mir = _t(lambda *a: ops.paged_ragged_attention(
+        *a, kcfg=KernelConfig("reference")), q, kp, vp, sliced, ones, lens,
+        iters=iters)
     rec(f"paged.padded_nmax{nmax}", t_pad, "us_per_call")
     rec(f"paged.ragged_skip_nmax{nmax}", t_rag, "us_per_call")
     rec("paged.ragged_sliced", t_sli, "us_per_call")
+    rec("paged.mirror_sliced", t_mir, "us_per_call")
     rec("paged.speedup_skip", t_pad / t_rag, "x")
     rec("paged.speedup_sliced", t_pad / t_sli, "x")
+
+
+def _work_prop_attn(rec, emit, smoke):
+    """End-to-end paged ENGINE decode steps: the work-proportional kernel
+    path (the production default) vs the retired materialized-gather path
+    (``KernelConfig("gather")``), same model, same skewed workload — one
+    long row among short ones, so the gather pays every row at the
+    pow2-bucketed max context while the kernel pays each row's own
+    occupancy.
+
+    Wall-clock per decode step is reported but NOT gated (CPU wall time
+    cannot show the DMA skip — that is TPU behavior; ``paged.speedup_*``
+    already gates the interpret-mode grid skip). The gated entries are
+    deterministic: the engine-logged ``attn_ctx_tokens`` of the first
+    all-decode step (the occupancy the kernel actually reads) and the
+    modeled HBM-bytes ratio between gather and kernel pricing from the
+    roofline CostModel — the cost curve the tentpole changes."""
+    from repro.configs import get_config
+    from repro.core.policy import ThresholdPolicy
+    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.kernels.ops import KernelConfig
+    from repro.models import build_model
+    from repro.roofline.terms import H200
+    from repro.sim.costmodel import CostModel
+
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    long_len = 48 if smoke else 96
+    prompts = [list(range(1, long_len + 1))] + \
+              [list(range(1, 12 + i)) for i in range(3)]
+    n_new = 4 if smoke else 8
+    streams, ctx_decode = {}, 0
+    for name, backend in (("work_prop", "reference"), ("gather", "gather")):
+        ecfg = EngineConfig(max_slots=4, s_max=256, prefill_chunk=32,
+                            block_size=16, kernel=KernelConfig(backend))
+        eng = ShiftEngine(m, m, params, params, ecfg,
+                          policy=ThresholdPolicy(4))
+        reqs = [Request(i, p, max_new_tokens=n_new)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.add_request(r)
+        while not eng.active \
+                or not all(eng._prefill_done(r) for r in eng.active):
+            eng.step()                      # swallow the prompts
+        eng.step()                          # warm-up: compile decode shape
+        ts = []
+        while any(not r.done for r in eng.active):
+            t0 = time.perf_counter()
+            eng.step()
+            ts.append(time.perf_counter() - t0)
+        eng.run_until_idle()
+        ts.sort()
+        ts = ts or [0.0]                    # all rows done in the warm-up
+        streams[name] = {r.rid: tuple(r.generated) for r in reqs}
+        if name == "work_prop":              # host-side log: backend-blind
+            deco = [s for s in eng.step_log
+                    if s["decode_tokens"] and not s["prefill_tokens"]]
+            ctx_decode = deco[0]["attn_ctx_tokens"] if deco else 0
+        rec(f"attn.{name}_decode_step_us", ts[len(ts) // 2] * 1e6,
+            "us_per_call")
+    # the two backends differ only by summation order; greedy streams can
+    # legitimately diverge on a near-tie logit, so note it, don't fail the
+    # whole benchmark job over an ulp (the bitwise contracts live in
+    # tests/test_workprop_attention.py, same-backend only)
+    if streams["work_prop"] != streams["gather"]:
+        emit("# note: work_prop vs gather greedy streams diverged "
+             "(summation-order near-tie)")
+    rec("attn.decode_ctx_tokens", ctx_decode, "tokens")
+    # modeled HBM bytes for that first all-decode step's composition
+    ctxs = [len(p) + 1 for p in prompts]
+    wp = CostModel(cfg, hw=H200, attn_work_prop=True)
+    ga = CostModel(cfg, hw=H200, attn_work_prop=False)
+    rec("attn.gather_bytes_ratio",
+        ga.attn_hbm_bytes(ctxs) / wp.attn_hbm_bytes(ctxs), "x")
 
 
 def _mixed_vs_serialized(rec, smoke):
@@ -244,6 +335,7 @@ def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     iters = 1 if smoke else 3
     _ref_benches(rec, iters)
     _ragged_vs_padded(rec, iters, smoke)
+    _work_prop_attn(rec, emit, smoke)
     _mixed_vs_serialized(rec, smoke)
     _prefix_reuse(rec, smoke)
     _dp_paged_smoke(rec, emit)

@@ -27,8 +27,8 @@ recomputing them.  Writes into shared blocks go through
 ``PagedKVCache.copy_on_write``.
 """
 from .block_allocator import BlockAllocator, BlockOOM
-from .paged import PagedKVCache, blocks_for_tokens
+from .paged import PagedKVCache, blocks_for_tokens, pow2_bucket
 from .prefix_index import PrefixIndex
 
 __all__ = ["BlockAllocator", "BlockOOM", "PagedKVCache", "PrefixIndex",
-           "blocks_for_tokens"]
+           "blocks_for_tokens", "pow2_bucket"]

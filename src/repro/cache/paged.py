@@ -45,6 +45,17 @@ def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
     return -(-max(n_tokens, 0) // block_size)
 
 
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n — the engine's shape-bucketing rule
+    (compiled-program reuse). The roofline CostModel imports it so gather
+    pricing buckets exactly like the engine's sliced launches; keep ONE
+    definition or the model silently drifts from the behavior it prices."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
 class PagedKVCache:
     def __init__(self, num_blocks: int, block_size: int, max_seqs: int,
                  max_blocks_per_seq: int, dp: int = 1):

@@ -22,25 +22,54 @@ DEFAULT_SHIFT_THRESHOLD = 32
 class ThresholdPolicy:
     threshold: int = DEFAULT_SHIFT_THRESHOLD   # batched tokens per iteration
 
-    def use_base(self, n_tokens: int, n_prefill_tokens: int = 0) -> bool:
+    def use_base(self, n_tokens: int, n_prefill_tokens: int = 0,
+                 ctx_tokens: int = 0, n_rows: int = 0,
+                 ctx_max: int = 0) -> bool:
+        """The paper's rule ignores context; ``ctx_tokens`` (sum of the
+        batch rows' actual KV context lengths), ``n_rows`` and ``ctx_max``
+        (the largest row context — the engine's launch bucket derives
+        from it) are accepted so the engine can feed every policy the
+        same iteration facts."""
         return n_tokens > self.threshold
 
 
 @dataclass
 class AdaptivePolicy:
-    """Pick argmin of predicted iteration latency (roofline cost model)."""
+    """Pick argmin of predicted iteration latency (roofline cost model).
+
+    With the work-proportional paged kernel the KV-read term scales with
+    the batch's ACTUAL summed context (``ctx_tokens``), not S_max — the
+    engine passes it per iteration, so the SP/TP crossover tracks real
+    occupancy. Without it (older callers) the batched token count stands
+    in as a crude context proxy, as before."""
 
     cost_model: object            # repro.sim.costmodel.CostModel
     sp: int
     tp: int
 
-    def use_base(self, n_tokens: int, n_prefill_tokens: int = 0) -> bool:
+    def use_base(self, n_tokens: int, n_prefill_tokens: int = 0,
+                 ctx_tokens: int = 0, n_rows: int = 0,
+                 ctx_max: int = 0) -> bool:
         from repro.sim.costmodel import Strategy
         n_decode = max(n_tokens - n_prefill_tokens, 0)
         n = self.sp * self.tp
-        ctx = max(n_tokens, 1)
+        ctx = max(ctx_tokens // n_rows if n_rows else n_tokens, 1)
+        # reconstruct a ctx_lens profile that preserves BOTH the sum (what
+        # work-proportional pricing integrates) and the max (what gather
+        # pricing's pow2 launch bucket derives from): a uniform mean-fill
+        # would underprice the gather side of an A/B by pow2(mean) vs
+        # pow2(max) on exactly the skewed batches being compared.
+        if n_rows and ctx_max:
+            rest = max(n_rows - 1, 1)
+            ctx_lens = [ctx_max] + [(ctx_tokens - ctx_max) // rest] * (n_rows - 1)
+        elif n_rows:
+            ctx_lens = [ctx_tokens // n_rows] * n_rows
+        else:
+            ctx_lens = None
         t_base = self.cost_model.iteration_time(
-            n_prefill_tokens, n_decode, ctx, Strategy("sp", n))
+            n_prefill_tokens, n_decode, ctx, Strategy("sp", n),
+            ctx_lens=ctx_lens)
         t_shift = self.cost_model.iteration_time(
-            n_prefill_tokens, n_decode, ctx, Strategy("tp", n))
+            n_prefill_tokens, n_decode, ctx, Strategy("tp", n),
+            ctx_lens=ctx_lens)
         return t_base <= t_shift

@@ -65,6 +65,7 @@ bucketed so each (config, shape) pair compiles once — the JAX analogue of
 the paper's per-shape CUDA-graph capture."""
 from __future__ import annotations
 
+import inspect
 import time
 from dataclasses import dataclass
 from typing import List, Optional
@@ -73,7 +74,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import PagedKVCache, PrefixIndex, blocks_for_tokens
+from repro.cache import (PagedKVCache, PrefixIndex, blocks_for_tokens,
+                         pow2_bucket as _pow2)
 from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
 from repro.models.model import Model
 from .request import Request
@@ -82,14 +84,6 @@ from .request import Request
 # step_log). Totals live in counters (step_count, config_counts,
 # total_step_time) so long-running engines don't grow without bound.
 TRACE_WINDOW = 1024
-
-
-def _pow2(n: int) -> int:
-    """Smallest power of two >= n (shape-bucketing for compiled programs)."""
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
 
 
 @dataclass
@@ -120,6 +114,13 @@ class EngineConfig:
     #                                  warm prefills shape-differently from
     #                                  cold ones, so A/B comparisons should
     #                                  enable it on both sides)
+    # kernels --------------------------------------------------------------
+    kernel: Optional[object] = None  # repro.kernels.KernelConfig selecting
+    #                                  the paged-attention backend (None =
+    #                                  dispatch default: Pallas on TPU, its
+    #                                  bit-exact jnp mirror elsewhere;
+    #                                  "gather" keeps the retired
+    #                                  materialized-gather oracle for A/B)
 
 
 class ShiftEngine:
@@ -134,6 +135,23 @@ class ShiftEngine:
         self.p_shift = params_shift
         self.cfg = cfg
         self.policy = policy or ThresholdPolicy(cfg.threshold)
+        # detect ONCE which of the per-iteration context facts
+        # (ctx_tokens/n_rows/ctx_max) the policy's use_base accepts —
+        # legacy 2-arg policies get none, partial signatures get exactly
+        # what they declare. A per-call try/except TypeError would
+        # swallow TypeErrors raised INSIDE a modern policy and silently
+        # degrade it to the context-blind path.
+        _facts = ("ctx_tokens", "n_rows", "ctx_max")
+        try:
+            params = inspect.signature(self.policy.use_base).parameters
+            if any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()):
+                self._policy_ctx_kwargs = _facts
+            else:
+                self._policy_ctx_kwargs = tuple(k for k in _facts
+                                                if k in params)
+        except (TypeError, ValueError):      # builtins/callables w/o sig
+            self._policy_ctx_kwargs = ()
         self.now = now
 
         self.dp = max(model_base.lay.dp, 1)
@@ -221,25 +239,29 @@ class ShiftEngine:
         self.step_log: List[dict] = []   # per-step batch composition
 
         pg = self.paged
+        kc = cfg.kernel
         if self.mixed:
             # ONE unified program per config replaces the 2×2
             # prefill/decode table: prefill chunks and decode rows share a
             # forward pass, so the policy prices the real iteration.
             self._forward = {
-                "base": jax.jit(model_base.forward_fn(paged=True),
+                "base": jax.jit(model_base.forward_fn(paged=True, kernel=kc),
                                 donate_argnums=(1,)),
-                "shift": jax.jit(model_shift.forward_fn(paged=True),
+                "shift": jax.jit(model_shift.forward_fn(paged=True,
+                                                        kernel=kc),
                                  donate_argnums=(1,))}
         else:
             self._prefill = {
-                "base": jax.jit(model_base.prefill_fn(paged=pg),
+                "base": jax.jit(model_base.prefill_fn(paged=pg, kernel=kc),
                                 donate_argnums=(1,)),
-                "shift": jax.jit(model_shift.prefill_fn(paged=pg),
+                "shift": jax.jit(model_shift.prefill_fn(paged=pg, kernel=kc),
                                  donate_argnums=(1,))}
             self._decode = {
-                "base": jax.jit(model_base.decode_fn(True, paged=pg),
+                "base": jax.jit(model_base.decode_fn(True, paged=pg,
+                                                     kernel=kc),
                                 donate_argnums=(1,)),
-                "shift": jax.jit(model_shift.decode_fn(True, paged=pg),
+                "shift": jax.jit(model_shift.decode_fn(True, paged=pg,
+                                                       kernel=kc),
                                  donate_argnums=(1,))}
 
     # ---------------------------------------------------------------- admin
@@ -537,8 +559,21 @@ class ShiftEngine:
         return bt
 
     # ---------------------------------------------------------------- steps
-    def _choose(self, n_tokens: int, n_prefill: int) -> str:
-        use_base = self.policy.use_base(n_tokens, n_prefill)
+    def _choose(self, n_tokens: int, n_prefill: int,
+                ctx_tokens: int = 0, n_rows: int = 0,
+                ctx_max: int = 0) -> str:
+        """Pick the config for this iteration. ``ctx_tokens`` is the sum of
+        the batch rows' ACTUAL context lengths — what the
+        work-proportional kernel reads — and ``ctx_max`` the largest row
+        (the pow2 launch bucket derives from it), so a cost-model policy
+        prices the real KV traffic instead of assuming S_max. Policies
+        with the older two-arg signature still work (they just don't see
+        the context)."""
+        facts = {"ctx_tokens": ctx_tokens, "n_rows": n_rows,
+                 "ctx_max": ctx_max}
+        use_base = self.policy.use_base(
+            n_tokens, n_prefill,
+            **{k: facts[k] for k in self._policy_ctx_kwargs})
         name = "base" if use_base else "shift"
         self.config_counts[name] += 1
         self.config_trace.append(name)
@@ -546,10 +581,15 @@ class ShiftEngine:
             del self.config_trace[:len(self.config_trace) - self.trace_window]
         return name
 
-    def _log_step(self, n_prefill: int, n_decode: int, n_ready: int):
+    def _log_step(self, n_prefill: int, n_decode: int, n_ready: int,
+                  attn_ctx: int = 0):
+        # attn_ctx_tokens = sum of the actual per-row context lengths this
+        # forward attended — the work-proportionality witness: a trace
+        # alone can verify iteration cost tracks occupancy, not s_max
         entry = {"prefill_tokens": n_prefill,
                  "decode_tokens": n_decode,
-                 "ready_decodes": n_ready}
+                 "ready_decodes": n_ready,
+                 "attn_ctx_tokens": attn_ctx}
         if self.paged_disabled_reason is not None:
             # the dense fallback must be visible in the step log, not just
             # at construction: dp-sharded deployments silently lost paging
@@ -620,7 +660,10 @@ class ShiftEngine:
             self._log_step(0, 0, n_ready)
             return False
 
-        mode = self._choose(n_prefill_tok + n_decode, n_prefill_tok)
+        attn_ctx = sum(off + ql for _, off, ql, _ in rows)
+        mode = self._choose(n_prefill_tok + n_decode, n_prefill_tok,
+                            attn_ctx, len(rows),
+                            max(off + ql for _, off, ql, _ in rows))
         model = self.base if mode == "base" else self.shift
         params = self.p_base if mode == "base" else self.p_shift
         # compact to active rows; bucket every axis so each (config, shape)
@@ -678,7 +721,7 @@ class ShiftEngine:
             self._commit_prefix(r)         # before a finish frees the slot
             if produces:
                 self._finish_token(r, int(nxt[i]), t)
-        self._log_step(n_prefill_tok, n_decode, n_ready)
+        self._log_step(n_prefill_tok, n_decode, n_ready, attn_ctx)
         return True
 
     # --------------------------------------------------- serialized stepping
@@ -690,8 +733,13 @@ class ShiftEngine:
         if not todo:
             return False
         toks = np.zeros((self.cfg.max_slots, C), np.int32)
-        offs = np.full((self.cfg.max_slots,), max(self.cfg.s_max - C, 0),
-                       np.int32)                      # dummy rows -> scratch tail
+        # dummy rows: dense cache -> scratch tail (their writes must not
+        # land on live offsets); paged -> offset 0 (their scatter routes to
+        # the null block regardless, and a zero context keeps the
+        # work-proportional kernel from looping s_max/bs null blocks)
+        offs = np.full((self.cfg.max_slots,),
+                       0 if self.paged else max(self.cfg.s_max - C, 0),
+                       np.int32)
         rows = []
         # MLA latent caches assume a uniform offset across the chunk batch
         uniform = self.mcfg.mla is not None
@@ -718,7 +766,21 @@ class ShiftEngine:
         if not rows:
             return False
         n_tok = sum(n for _, n in rows)
-        mode = self._choose(n_tok, n_tok)
+        # what the attention path actually reads this launch: the paged
+        # kernel attends ctx = offset + C for EVERY batch row (the chunk
+        # buffer is q_lens == C wide, padding columns included, and the
+        # max_slots - len(rows) dummy rows attend a C-long null context) —
+        # logging only the real tokens would understate the occupancy
+        # witness and the policy's pricing. The dense fallback makes no
+        # work-proportionality claim; its log keeps the real-token sum.
+        if self.paged:
+            attn_ctx = sum(r.prefilled + C for r, _ in rows) \
+                + (self.cfg.max_slots - len(rows)) * C
+            ctx_max = max(r.prefilled + C for r, _ in rows)
+        else:
+            attn_ctx = sum(r.prefilled + n for r, n in rows)
+            ctx_max = max(r.prefilled + n for r, n in rows)
+        mode = self._choose(n_tok, n_tok, attn_ctx, len(rows), ctx_max)
         params = self.p_base if mode == "base" else self.p_shift
         extras = self._extras(self.cfg.max_slots)
         args = [jnp.asarray(toks), jnp.asarray(offs)]
@@ -734,7 +796,8 @@ class ShiftEngine:
             self._commit_prefix(r)
         self._log_step(n_tok, 0,
                        sum(1 for r in self.active
-                           if self._prefill_done(r) and not r.done))
+                           if self._prefill_done(r) and not r.done),
+                       attn_ctx)
         return True
 
     def _prefill_done(self, r) -> bool:
@@ -756,7 +819,12 @@ class ShiftEngine:
             ready = kept
         if not ready:
             return False
-        mode = self._choose(len(ready), 0)
+        # inactive slots in the always-max_slots decode batch each read one
+        # null-block position (ctx = lens + 1 = 1) on the paged kernel path
+        attn_ctx = sum(r.pos + 1 for r in ready) \
+            + (self.cfg.max_slots - len(ready) if self.paged else 0)
+        mode = self._choose(len(ready), 0, attn_ctx, len(ready),
+                            max(r.pos + 1 for r in ready))
         params = self.p_base if mode == "base" else self.p_shift
         toks = np.zeros((self.cfg.max_slots,), np.int32)
         lens = np.zeros((self.cfg.max_slots,), np.int32)
@@ -775,7 +843,7 @@ class ShiftEngine:
             r.prefilled = r.pos + 1        # this step wrote position r.pos
             self._commit_prefix(r)
             self._finish_token(r, int(nxt[r.slot]), t)
-        self._log_step(0, len(ready), n_ready)
+        self._log_step(0, len(ready), n_ready, attn_ctx)
         return True
 
     def _extras(self, batch: int):

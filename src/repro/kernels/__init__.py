@@ -1,4 +1,6 @@
 from .ops import (flash_attention, decode_attention, paged_decode_attention,
-                  paged_ragged_attention, ssd_chunk, rmsnorm)
+                  paged_ragged_attention, paged_ragged_attend, ssd_chunk,
+                  rmsnorm, KernelConfig)
 __all__ = ["flash_attention", "decode_attention", "paged_decode_attention",
-           "paged_ragged_attention", "ssd_chunk", "rmsnorm"]
+           "paged_ragged_attention", "paged_ragged_attend", "ssd_chunk",
+           "rmsnorm", "KernelConfig"]

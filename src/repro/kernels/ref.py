@@ -33,38 +33,54 @@ def decode_attention_ref(q, k, v, lens):
     return out.reshape(B, Hkv, g, D)
 
 
+def _paged_gather(pool, block_tables):
+    """Assemble the logical contiguous view [B, nmax*bs, slots, Dh] of each
+    sequence's blocks. The block table is in logical order, so gathered kv
+    position ``p`` is global position ``p`` (null-block tail entries carry
+    garbage and are masked by kv_len).
+
+    This materialized gather is the REFERENCE path only — the model and
+    engine stream KV through the block table work-proportionally via the
+    ragged Pallas kernel / its jnp mirror. Out-of-bounds table ids clamp
+    explicitly (``mode="clip"``) instead of relying on jnp's
+    version-dependent OOB-gather default: a clipped read lands on the last
+    physical block, which is deterministic garbage already masked by
+    ``kv_len`` — never an undefined fill value."""
+    B, nmax = block_tables.shape
+    bs = pool.shape[1]
+    g = jnp.take(pool, block_tables, axis=0,
+                 mode="clip")                  # [B, nmax, bs, slots, Dh]
+    return g.reshape(B, nmax * bs, pool.shape[2], pool.shape[3])
+
+
 def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lens):
     """Oracle for the paged decode kernel: gather each sequence's blocks in
     logical order into a contiguous [B, Hkv, nmax*bs, D] view, then run the
     contiguous decode oracle. q: [B, Hkv, g, D]; k_pool/v_pool:
     [num_blocks, bs, Hkv, D]; block_tables: [B, nmax]; lens: [B]."""
-    B = q.shape[0]
-    bs = k_pool.shape[1]
-    nmax = block_tables.shape[1]
-    kg = k_pool[block_tables]                       # [B, nmax, bs, Hkv, D]
-    vg = v_pool[block_tables]
-    k = kg.reshape(B, nmax * bs, *k_pool.shape[2:]).transpose(0, 2, 1, 3)
-    v = vg.reshape(B, nmax * bs, *v_pool.shape[2:]).transpose(0, 2, 1, 3)
+    k = _paged_gather(k_pool, block_tables).transpose(0, 2, 1, 3)
+    v = _paged_gather(v_pool, block_tables).transpose(0, 2, 1, 3)
     return decode_attention_ref(q, k, v, lens)
 
 
 def paged_ragged_attention_ref(q, k_pool, v_pool, block_tables, q_lens,
-                               ctx_lens):
+                               ctx_lens, *, window=0, soft_cap=0.0):
     """Oracle for the ragged paged kernel. q: [B, Hkv, g, C, D] — C ragged
     query columns per sequence, column c of row b sits at global position
     ``ctx_lens[b] - q_lens[b] + c``; k_pool/v_pool: [num_blocks, bs, Hkv, D];
-    block_tables: [B, nmax]; q_lens/ctx_lens: [B]. Returns
-    [B, Hkv, g, C, D]; columns >= q_lens[b] carry padding positions and are
-    don't-care (but match the kernel's masking exactly)."""
+    block_tables: [B, nmax]; q_lens/ctx_lens: [B]; window/soft_cap as in
+    the kernel. Returns [B, Hkv, g, C, D]; columns >= q_lens[b] carry
+    padding positions and are don't-care (but match the kernel's masking
+    exactly)."""
     B, Hkv, g, C, D = q.shape
     bs = k_pool.shape[1]
     nmax = block_tables.shape[1]
-    kg = k_pool[block_tables].reshape(B, nmax * bs, Hkv, D)
-    vg = v_pool[block_tables].reshape(B, nmax * bs, Hkv, D)
+    kg = _paged_gather(k_pool, block_tables)
+    vg = _paged_gather(v_pool, block_tables)
     qb = q.transpose(0, 3, 1, 2, 4).reshape(B, C, Hkv * g, D)
     q_pos = ctx_lens[:, None] - q_lens[:, None] + jnp.arange(C)[None, :]
     out = _attend(qb, kg, vg, q_pos, jnp.arange(nmax * bs), causal=True,
-                  kv_len=ctx_lens)
+                  window=window, kv_len=ctx_lens, soft_cap=soft_cap)
     # empty rows (ctx == 0): fully-masked softmax degenerates to a mean of
     # the null block; the kernel defines them as zeros instead
     out = jnp.where((ctx_lens > 0)[:, None, None, None], out, 0.0)

@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 from repro.parallel import HeadPlan, Layout, plan_heads, psum_if, joint_axis_index
 from repro.core.ulysses import (
     ulysses_scatter_heads, ulysses_gather_heads, expand_kv_for_send)
+from repro.kernels import ops as K
 from .attention_math import attend, attend_partial, finish_partial
 from .layers import dense_init, rmsnorm, apply_rope
 
@@ -300,22 +301,24 @@ def attn_decode(p, x, cache, lens, cfg, lay: Layout, *, window: int = 0,
 # ---------------------------------------------------------------------------
 # paged forward (block-table indirection; layouts as in paged_cache_init)
 # ---------------------------------------------------------------------------
-def _paged_gather(pool, block_tables):
-    """Assemble the logical contiguous view [B, nmax*bs, slots, Dh] of each
-    sequence's blocks. The block table is in logical order, so gathered kv
-    position ``p`` is global position ``p`` (null-block tail entries carry
-    garbage and are masked by kv_len)."""
-    B, nmax = block_tables.shape
-    bs = pool.shape[1]
-    g = pool[block_tables]                     # [B, nmax, bs, slots, Dh]
-    return g.reshape(B, nmax * bs, pool.shape[2], pool.shape[3])
+# The paged paths stream KV through the block table with the
+# work-proportional ragged kernel (``kernels.ops.paged_ragged_attend``) —
+# per-rank local heads are group-aligned by the planner, so the per-shard
+# call inside shard_map sees [B, C, Hq_loc, Dh] queries against the local
+# [num_blocks, bs, Hkv_loc, Dh] pool slice. The old materialized gather
+# (O(B·nmax·bs) per layer regardless of occupancy) survives only as the
+# reference oracle in ``kernels.ref`` (KernelConfig(attn_backend="gather")).
 
 
-def paged_attn_prefill(p, x, cache, offsets, block_tables, cfg, lay: Layout):
-    """Chunked prefill against the paged pool. x: [B, S_loc, d]; offsets:
-    [B] chunk start positions; block_tables: [B, nmax] (rows not in this
-    chunk batch must be all-null so their scatter lands in the null
-    block). Returns (out [B, S_loc, d], cache)."""
+def paged_attn_mixed(p, x, cache, offsets, q_lens, block_tables, cfg,
+                     lay: Layout, kcfg=None):
+    """Ragged mixed prefill+decode against the paged pool. x: [B, S_loc, d]
+    where each row carries ``q_lens[b]`` fresh tokens starting at cache
+    position ``offsets[b]`` (decode rows have q_len == 1, prefill rows up
+    to the chunk width, padding rows 0). Columns past ``q_lens`` scatter
+    into the null block and their outputs are garbage-but-finite (the
+    caller discards them). ``kcfg``: KernelConfig selecting the attention
+    backend. Returns (out [B, S_loc, d], cache)."""
     plan = get_plan(cfg, lay)
     q, k, v = _project_exchange(p, x, cfg, lay, plan)
     B, S = q.shape[:2]
@@ -325,26 +328,44 @@ def paged_attn_prefill(p, x, cache, offsets, block_tables, cfg, lay: Layout):
     kc, vc = cache["k"], cache["v"]
     bs = kc.shape[1]
     nmax = block_tables.shape[1]
-    # padding columns run past the table when the chunk overhangs s_max
-    # (s_max % chunk != 0). What an out-of-bounds gather returns is a JAX
-    # version/mode detail (fill vs clip — clip would collide the scatter
-    # with live KV), so route those positions to the null block explicitly.
+    # ragged scatter: only the first q_lens[b] columns are real tokens; the
+    # rest (and any chunk overhang past the table when s_max % chunk != 0)
+    # are routed to the null block EXPLICITLY — never through jnp's
+    # version-dependent out-of-bounds gather default (clip would collide
+    # the scatter with live KV).
+    valid = (jnp.arange(S)[None, :] < q_lens[:, None]) & (pos // bs < nmax)
     blk = jnp.take_along_axis(block_tables,
                               jnp.minimum(pos // bs, nmax - 1), axis=1)
-    blk = jnp.where(pos // bs < nmax, blk, 0)                   # [B, S]
+    blk = jnp.where(valid, blk, 0)                              # [B, S]
     kc = kc.at[blk, pos % bs].set(k)
     vc = vc.at[blk, pos % bs].set(v)
-    out = attend(q, _paged_gather(kc, block_tables),
-                 _paged_gather(vc, block_tables), pos,
-                 jnp.arange(block_tables.shape[1] * bs), causal=True,
-                 kv_len=offsets + S, soft_cap=cfg.logits_soft_cap)
+    out = K.paged_ragged_attend(q, kc, vc, block_tables, q_lens,
+                                offsets + q_lens,
+                                soft_cap=cfg.logits_soft_cap, kcfg=kcfg)
     return _finish(p, out, plan, lay), {"k": kc, "v": vc}
 
 
-def paged_attn_decode(p, x, cache, lens, block_tables, cfg, lay: Layout):
-    """One-token decode against the paged pool. x: [B_loc, d]; lens: [B]
-    write positions; block_tables: [B, nmax] (all-null rows for inactive
-    slots scatter into the null block). Returns (out [B_loc, d], cache)."""
+def paged_attn_prefill(p, x, cache, offsets, block_tables, cfg, lay: Layout,
+                       kcfg=None):
+    """Chunked prefill against the paged pool — the degenerate mixed call
+    with ``q_lens == S`` for every row: all S columns are written (rows
+    not in this chunk batch must be all-null so their scatter lands in the
+    null block; the zero-padding past a short chunk is causally masked and
+    overwritten by the next chunk, exactly as the serialized engine
+    expects). x: [B, S_loc, d]; offsets: [B] chunk start positions.
+    Returns (out [B, S_loc, d], cache)."""
+    S = x.shape[1] * max(lay.sp, 1)            # full chunk width after a2a
+    q_lens = jnp.full(offsets.shape, S, jnp.int32)
+    return paged_attn_mixed(p, x, cache, offsets, q_lens, block_tables, cfg,
+                            lay, kcfg=kcfg)
+
+
+def paged_attn_decode(p, x, cache, lens, block_tables, cfg, lay: Layout,
+                      kcfg=None):
+    """One-token decode against the paged pool — the C == 1 kernel call.
+    x: [B_loc, d]; lens: [B] write positions; block_tables: [B, nmax]
+    (all-null rows for inactive slots scatter into the null block).
+    Returns (out [B_loc, d], cache)."""
     plan = get_plan(cfg, lay)
     xs = x[None]                                               # batch-as-seq
     q, k, v = _project_exchange(p, xs, cfg, lay, plan)
@@ -360,46 +381,12 @@ def paged_attn_decode(p, x, cache, lens, block_tables, cfg, lay: Layout):
     blk = block_tables[jnp.arange(B), lens // bs]              # [B]
     kc = kc.at[blk, lens % bs].set(k[:, 0])
     vc = vc.at[blk, lens % bs].set(v[:, 0])
-    acc, l, mm = attend_partial(
-        q, _paged_gather(kc, block_tables), _paged_gather(vc, block_tables),
-        pos, jnp.arange(block_tables.shape[1] * bs), causal=True,
-        kv_len=lens + 1, soft_cap=cfg.logits_soft_cap)
-    out = finish_partial(acc, l, mm).astype(q.dtype)
+    out = K.paged_ragged_attend(q, kc, vc, block_tables,
+                                jnp.ones_like(lens), lens + 1,
+                                soft_cap=cfg.logits_soft_cap, kcfg=kcfg)
     out = out.transpose(1, 0, 2, 3)                            # [1,B,q_pr,dh]
     out = _finish(p, out, plan, lay)                           # [1,B_loc,d]
     return out[0], {"k": kc, "v": vc}
-
-
-def paged_attn_mixed(p, x, cache, offsets, q_lens, block_tables, cfg,
-                     lay: Layout):
-    """Ragged mixed prefill+decode against the paged pool. x: [B, S_loc, d]
-    where each row carries ``q_lens[b]`` fresh tokens starting at cache
-    position ``offsets[b]`` (decode rows have q_len == 1, prefill rows up
-    to the chunk width, padding rows 0). Columns past ``q_lens`` scatter
-    into the null block and their outputs are garbage-but-finite (the
-    caller discards them). Returns (out [B, S_loc, d], cache)."""
-    plan = get_plan(cfg, lay)
-    q, k, v = _project_exchange(p, x, cfg, lay, plan)
-    B, S = q.shape[:2]
-    pos = offsets[:, None] + jnp.arange(S)[None, :]            # [B, S] global
-    q, k = _qk_post(p, q, k, pos, cfg, True)
-
-    kc, vc = cache["k"], cache["v"]
-    bs = kc.shape[1]
-    nmax = block_tables.shape[1]
-    # ragged scatter: only the first q_lens[b] columns are real tokens; the
-    # rest (and any chunk overhang past the table) land in the null block
-    valid = (jnp.arange(S)[None, :] < q_lens[:, None]) & (pos // bs < nmax)
-    blk = jnp.take_along_axis(block_tables,
-                              jnp.minimum(pos // bs, nmax - 1), axis=1)
-    blk = jnp.where(valid, blk, 0)                              # [B, S]
-    kc = kc.at[blk, pos % bs].set(k)
-    vc = vc.at[blk, pos % bs].set(v)
-    out = attend(q, _paged_gather(kc, block_tables),
-                 _paged_gather(vc, block_tables), pos,
-                 jnp.arange(nmax * bs), causal=True,
-                 kv_len=offsets + q_lens, soft_cap=cfg.logits_soft_cap)
-    return _finish(p, out, plan, lay), {"k": kc, "v": vc}
 
 
 # ---------------------------------------------------------------------------

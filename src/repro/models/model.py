@@ -28,6 +28,11 @@ class Model:
     lay: Layout
     mesh: Optional[Mesh] = None
     dtype: object = jnp.bfloat16
+    # paged-attention backend (repro.kernels.KernelConfig); None = the
+    # dispatch default (Pallas on TPU, its bit-exact jnp mirror elsewhere).
+    # Step-fn factories accept a per-call override (the engine threads
+    # EngineConfig.kernel through it).
+    kernel: Optional[object] = None
 
     @property
     def pod_scale(self) -> bool:
@@ -98,11 +103,13 @@ class Model:
         tok_b = tuple(lay.dp_axes) + tuple(lay.sp_axes)  # decode batch axes
         return dp, seq, (tok_b or None)
 
-    def prefill_fn(self, paged: bool = False):
+    def prefill_fn(self, paged: bool = False, kernel=None):
         """With ``paged=True`` the returned fn takes an extra
         ``block_tables`` [B, nmax] arg after ``offsets`` and the cache arg
-        is the paged block pool (same sharded bytes in base and shift)."""
+        is the paged block pool (same sharded bytes in base and shift).
+        ``kernel`` overrides the model's paged-attention KernelConfig."""
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        kcfg = kernel or self.kernel
         dp, seq, _ = self._io_specs()
         pspec = self.param_specs()
         cspec = self.paged_cache_specs() if paged else self.cache_specs()
@@ -124,14 +131,16 @@ class Model:
             ef = rest[-1] if cfg.encoder_layers else None
             logits, cache = T.prefill_body(params, cache, tokens, offsets,
                                            cfg, lay, pod, fe, ef,
-                                           block_tables=bt)
+                                           block_tables=bt, kcfg=kcfg)
             return logits, cache
 
         out = (P(dp, lay.tp_axes or None), cspec)
         return self._wrap(body, tuple(args + extras), out)
 
-    def decode_fn(self, sample: bool = True, paged: bool = False):
+    def decode_fn(self, sample: bool = True, paged: bool = False,
+                  kernel=None):
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        kcfg = kernel or self.kernel
         dp, _, tok_b = self._io_specs()
         pspec = self.param_specs()
         cspec = self.paged_cache_specs() if paged else self.cache_specs()
@@ -139,7 +148,8 @@ class Model:
         def body(params, cache, tokens, lens, *rest):
             bt = rest[0] if paged else None
             logits, cache = T.decode_body(params, cache, tokens, lens, cfg,
-                                          lay, pod, block_tables=bt)
+                                          lay, pod, block_tables=bt,
+                                          kcfg=kcfg)
             if sample:
                 return T.greedy_body(logits, lay), cache
             return logits, cache
@@ -150,7 +160,8 @@ class Model:
         out_tok = P(dp) if sample else P(tok_b, lay.tp_axes or None)
         return self._wrap(body, tuple(in_specs), (out_tok, cspec))
 
-    def forward_fn(self, paged: bool = True, sample: bool = True):
+    def forward_fn(self, paged: bool = True, sample: bool = True,
+                   kernel=None):
         """Unified mixed-batch step: chunked-prefill rows (q_len up to the
         chunk width) and decode rows (q_len == 1) in ONE forward pass over
         the shared paged pool. For the paged engine this replaces the
@@ -162,6 +173,7 @@ class Model:
         if not paged:
             raise ValueError("the mixed forward requires the paged KV cache")
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
+        kcfg = kernel or self.kernel
         dp, seq, _ = self._io_specs()
         pspec = self.param_specs()
         cspec = self.paged_cache_specs()
@@ -175,7 +187,8 @@ class Model:
         def body(params, cache, tokens, q_lens, offsets, bt, *rest):
             fe = rest[0] if cfg.frontend == "vision_stub" else None
             return T.mixed_body(params, cache, tokens, q_lens, offsets, cfg,
-                                lay, pod, fe, block_tables=bt, sample=sample)
+                                lay, pod, fe, block_tables=bt, sample=sample,
+                                kcfg=kcfg)
 
         out_tok = P(dp) if sample else P(dp, lay.tp_axes or None)
         return self._wrap(body, tuple(args + extras), (out_tok, cspec))

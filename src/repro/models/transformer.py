@@ -296,13 +296,14 @@ def _positions_prefill(tokens, offsets, lay):
 
 def prefill_body(params, cache, tokens, offsets, cfg, lay: Layout,
                  pod_scale=False, frontend_embeds=None, enc_frames=None,
-                 block_tables=None):
+                 block_tables=None, kcfg=None):
     """tokens: [B, S_loc]; offsets: [B]. Returns (last_logits_loc [B, v_loc],
-    cache). With ``block_tables`` [B, nmax] the cache is the paged pool."""
+    cache). With ``block_tables`` [B, nmax] the cache is the paged pool
+    and ``kcfg`` (KernelConfig) selects the paged-attention backend."""
     pos = _positions_prefill(tokens, offsets, lay)
     x = _embed_tokens(params, tokens, pos, cfg, lay, frontend_embeds)
     ctx = {"offsets": offsets, "init_cross": True,
-           "block_tables": block_tables}
+           "block_tables": block_tables, "kcfg": kcfg}
     if cfg.encoder_layers:
         ctx["enc_out"] = _run_encoder(params, enc_frames, cfg, lay)
     x, cache, _ = _run_blocks_prefill(params, cache, x, ctx, cfg, lay,
@@ -320,7 +321,7 @@ def prefill_body(params, cache, tokens, offsets, cfg, lay: Layout,
 
 def mixed_body(params, cache, tokens, q_lens, offsets, cfg, lay: Layout,
                pod_scale=False, frontend_embeds=None, block_tables=None,
-               sample=True):
+               sample=True, kcfg=None):
     """Unified mixed prefill+decode step against the paged pool.
 
     tokens: [B, S_loc] — row b carries ``q_lens[b]`` fresh tokens written
@@ -332,7 +333,8 @@ def mixed_body(params, cache, tokens, q_lens, offsets, cfg, lay: Layout,
     engine ignores."""
     pos = _positions_prefill(tokens, offsets, lay)
     x = _embed_tokens(params, tokens, pos, cfg, lay, frontend_embeds)
-    ctx = {"offsets": offsets, "q_lens": q_lens, "block_tables": block_tables}
+    ctx = {"offsets": offsets, "q_lens": q_lens, "block_tables": block_tables,
+           "kcfg": kcfg}
     x, cache, _ = _run_blocks_prefill(params, cache, x, ctx, cfg, lay,
                                       pod_scale, train=False)
     x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
@@ -355,7 +357,7 @@ def mixed_body(params, cache, tokens, q_lens, offsets, cfg, lay: Layout,
 
 
 def decode_body(params, cache, tokens, lens, cfg, lay: Layout, pod_scale=False,
-                block_tables=None):
+                block_tables=None, kcfg=None):
     """tokens: [B_loc] (batch sharded over dp×sp); lens: [B_row] global
     per-sequence lengths within this dp row. Returns (logits [B_loc, v_loc],
     cache). With ``block_tables`` [B, nmax] the cache is the paged pool."""
@@ -365,7 +367,7 @@ def decode_body(params, cache, tokens, lens, cfg, lay: Layout, pod_scale=False,
         B_loc = tokens.shape[0]
         pos_loc = jax.lax.dynamic_slice(lens, (r * B_loc,), (B_loc,)) if lay.sp > 1 else lens
         x = x + _sin_pos(pos_loc, cfg.d_model).astype(x.dtype)
-    ctx = {"lens": lens, "block_tables": block_tables}
+    ctx = {"lens": lens, "block_tables": block_tables, "kcfg": kcfg}
     x, cache = _run_blocks_decode(params, cache, x, ctx, cfg, lay, pod_scale)
     x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
     logits = (tied_lmhead_apply(params["embed"], x, lay) if cfg.tie_embeddings

@@ -43,24 +43,30 @@ def activation_estimate(cfg, lay, shape, micro: int = 4) -> int:
 
 
 def hbm_traffic(cfg, lay, shape, params_dev_bytes: int, cache_dev_bytes: int,
-                micro: int = 4) -> float:
+                micro: int = 4, kv_occupancy: float = 1.0) -> float:
     """Per-device HBM bytes moved in one step.
 
     decode : weights once + cache read + activations (small)
     prefill: weights once + cache write + one kv read sweep + ~8 activation
              passes per layer
     train  : fwd+bwd ~ 3x weight reads (fwd, dgrad, wgrad) x microbatches
-             + remat recompute + optimizer state r/w."""
+             + remat recompute + optimizer state r/w.
+
+    ``kv_occupancy`` scales the cache read/write terms by the fraction of
+    the cache actually resident: the work-proportional paged kernel streams
+    only each sequence's occupied blocks (sum of actual context lengths /
+    batch·s_max), where the dense cells and the retired gather path paid
+    the full rectangle (occupancy 1.0, the default)."""
     d = cfg.d_model
     dp, sp = max(lay.dp, 1), max(lay.sp, 1)
     if shape.kind == "decode":
         tok = max(shape.global_batch // (dp * sp), 1)
         act = 16 * cfg.num_layers * tok * d * 2
-        return params_dev_bytes + cache_dev_bytes + act
+        return params_dev_bytes + kv_occupancy * cache_dev_bytes + act
     tok = (shape.global_batch // dp) * (shape.seq_len // sp)
     act = 16 * cfg.num_layers * tok * d * 2
     if shape.kind == "prefill":
-        return params_dev_bytes + 2 * cache_dev_bytes + act
+        return params_dev_bytes + 2 * kv_occupancy * cache_dev_bytes + act
     # train
     m = max(micro, 1)
     return (3 * m + 1) * params_dev_bytes + 2.5 * act * m

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.cache import pow2_bucket as _pow2
 from repro.roofline.terms import Hardware, V5E
 
 
@@ -32,6 +33,14 @@ class CostModel:
     mfu: float = 0.6                  # achievable fraction of peak FLOP/s
     bw_eff: float = 0.8               # achievable fraction of HBM bandwidth
     ici_eff: float = 0.7
+    # attention pricing. True (the shipped engine): the ragged paged kernel
+    # streams each row's ACTUAL context, so attention compute + KV reads
+    # scale with the batch's summed occupancy. False prices the retired
+    # materialized-gather path for A/B: every row pays the pow2-bucketed
+    # MAX context (the engine's sliced table width), and the gather's
+    # materialize-then-attend doubles the KV bytes moved.
+    attn_work_prop: bool = True
+    GATHER_COPY_FACTOR = 2.0          # gather writes + re-reads the padded view
 
     # ------------------------------------------------------------ primitives
     def _flops(self, n_tokens: int, ctx: int) -> float:
@@ -94,8 +103,36 @@ class CostModel:
     # ------------------------------------------------------------ iterations
     COLL_LATENCY = 5e-6               # per-collective launch/hop latency
 
+    def attn_ctx_eff(self, ctx: int, ctx_lens=None) -> float:
+        """Effective per-row context the attention path touches, given the
+        ACTUAL per-row context lengths of the iteration (``ctx_lens``).
+
+        Work-proportional (the ragged kernel): a row costs its own context
+        — the effective mean is ``sum(ctx_lens) / rows``. Gather pricing:
+        every row is materialized (and its scores computed) to the
+        pow2-bucketed MAX context — the engine sliced the table batch to
+        one shared bucket — the O(B·S_max) curve the kernel retires.
+        Without ``ctx_lens`` the caller's mean ``ctx`` stands in (and
+        gather pricing buckets it). This is a CONTEXT LENGTH: it scales
+        attention FLOPs and KV reads alike; the gather's extra
+        write+re-read of the materialized view is bytes only and is
+        applied separately (``_attn_copy_factor``)."""
+        if ctx_lens:
+            rows = len(ctx_lens)
+            if self.attn_work_prop:
+                return sum(ctx_lens) / rows
+            return float(_pow2(max(ctx_lens)))
+        return float(ctx) if self.attn_work_prop else float(_pow2(int(ctx)))
+
+    @property
+    def _attn_copy_factor(self) -> float:
+        """HBM-bytes multiplier for the gather's materialize-then-attend
+        (the padded view is written and re-read); 1.0 on the kernel path.
+        Applies to memory traffic only — never to FLOPs."""
+        return 1.0 if self.attn_work_prop else self.GATHER_COPY_FACTOR
+
     def iteration_time(self, n_prefill: int, n_decode: int, ctx: int,
-                       strat: Strategy) -> float:
+                       strat: Strategy, *, ctx_lens=None) -> float:
         """One engine iteration with n_prefill chunk tokens + n_decode
         decode tokens against average context ctx. A call with both terms
         nonzero prices a *mixed* batch (the engine's fused
@@ -103,6 +140,12 @@ class CostModel:
         combined batch and the collectives run once, which is exactly the
         advantage the mixed schedule has over running the same tokens as
         two serialized iterations.
+
+        ``ctx_lens`` (optional) are the batch rows' ACTUAL context
+        lengths; with them the attention terms price what the
+        work-proportional kernel really touches (see ``attn_ctx_eff``) —
+        the sum of occupancies, not rows × S_max. ``ctx`` remains the
+        coarse fallback for callers that only know a mean.
 
         The strategy asymmetries follow the paper (Tables 1-2):
           tp — weights sharded n ways; all-reduce on the critical path
@@ -122,7 +165,8 @@ class CostModel:
         else:                                     # tp
             tok_shard, w_shard = n, n
 
-        f = self._flops(n_prefill, ctx) + self._flops(n_decode, ctx)
+        ctx_eff = self.attn_ctx_eff(ctx, ctx_lens)
+        f = self._flops(n_prefill, ctx_eff) + self._flops(n_decode, ctx_eff)
         t_c = f / tok_shard / (self.hw.peak_flops * self.mfu)
         per_dev_tokens = max(tokens / tok_shard, 1)
         util = min(1.0, per_dev_tokens / 128.0) ** 0.25
@@ -131,8 +175,8 @@ class CostModel:
         # (invariant layout) in both tp and sp -> /n
         kv_shard = 1 if strat.kind == "dp" else n
         w = self._weight_bytes() / w_shard
-        kv_read = self._kv_bytes_per_tok() * ctx / kv_shard \
-            * (n_decode + 0.5 * (1 if n_prefill else 0))
+        kv_read = self._kv_bytes_per_tok() * ctx_eff * self._attn_copy_factor \
+            / kv_shard * (n_decode + 0.5 * (1 if n_prefill else 0))
         t_m = (w + kv_read) / (self.hw.hbm_bw * self.bw_eff)
 
         x = self._comm_bytes(tokens, strat)
@@ -143,8 +187,20 @@ class CostModel:
         # overlapped) — the paper's TP throughput penalty
         return max(t_c / util, t_m) + t_x + self.overhead_s
 
-    def best_config(self, n_prefill: int, n_decode: int, ctx: int, n: int):
+    def attn_hbm_bytes(self, ctx_lens) -> float:
+        """Modeled KV bytes one forward pass reads for the given per-row
+        contexts under the configured attention pricing — the deterministic
+        number the ``attn.work_prop_*`` benchmarks gate on."""
+        if not ctx_lens:
+            return 0.0
+        per_row = self.attn_ctx_eff(0, ctx_lens) * self._attn_copy_factor
+        return self._kv_bytes_per_tok() * per_row * len(ctx_lens)
+
+    def best_config(self, n_prefill: int, n_decode: int, ctx: int, n: int,
+                    ctx_lens=None):
         """Shift decision = argmin over {sp, tp} (AdaptivePolicy)."""
-        t_sp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("sp", n))
-        t_tp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("tp", n))
+        t_sp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("sp", n),
+                                   ctx_lens=ctx_lens)
+        t_tp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("tp", n),
+                                   ctx_lens=ctx_lens)
         return ("sp", t_sp) if t_sp <= t_tp else ("tp", t_tp)

@@ -200,17 +200,22 @@ class ServeSim:
         self.iterations += 1
         if n_ready and not n_decode:
             self.starved_steps += 1
+        # the ACTUAL per-row contexts of this iteration — the
+        # work-proportional kernel prices these, not s_max or a bucket
         ctxs = [r.prefilled + r.decoded for r in rep.active] or [1]
         ctx = int(np.mean(ctxs))
 
         if self.strategy == "shift":
-            _, dt = self.cost.best_config(n_prefill, n_decode, ctx, self.n)
+            _, dt = self.cost.best_config(n_prefill, n_decode, ctx, self.n,
+                                          ctx_lens=ctxs)
         elif self.strategy == "dp":
             dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
-                                          Strategy("dp", self.n))
+                                          Strategy("dp", self.n),
+                                          ctx_lens=ctxs)
         else:
             dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
-                                          Strategy(self.strategy, self.n))
+                                          Strategy(self.strategy, self.n),
+                                          ctx_lens=ctxs)
         rep.t += dt
         self.trace_tokens.append((rep.t, n_prefill + n_decode))
         for r in deco:

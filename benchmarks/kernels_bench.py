@@ -325,6 +325,52 @@ def _dp_paged_smoke(rec, emit):
     rec("dp.paged_preemptions", eng.preemptions, "iters")
 
 
+def _obs_bench(rec, smoke):
+    """Observability cost on the live engine: the same workload stepped
+    with the full instrumentation (metrics registry + lifecycle events +
+    step records) and with ``EngineConfig(obs=False)``'s inert ``NullObs``.
+    ``obs.overhead_ratio`` is the median-step wall ratio (instrumented /
+    uninstrumented — wall-derived, so it gates at the relaxed speedup
+    noise factor); ``obs.events_per_request`` counts emitted lifecycle
+    events per request on the fixed workload — deterministic, so any
+    schema/emission change shows up as an exact delta against the
+    baseline."""
+    from repro.configs import get_config
+    from repro.core.policy import ThresholdPolicy
+    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    n_req = 4
+    n_new = 4 if smoke else 8
+    prompts = [list(range(1, 12 + 3 * i)) for i in range(n_req)]
+
+    def run(obs_on):
+        ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                            prefix_cache=True, obs=obs_on)
+        eng = ShiftEngine(m, m, params, params, ecfg,
+                          policy=ThresholdPolicy(4))
+        for i, p in enumerate(prompts):
+            eng.add_request(Request(i, p, max_new_tokens=n_new))
+        eng.step()                          # warm-up: compile first shape
+        ts = []
+        while eng.active or eng.queue:
+            t0 = time.perf_counter()
+            eng.step()
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2] if ts else 0.0, eng
+
+    t_off, _ = run(False)                   # NullObs first: shares jit cache
+    t_on, eng = run(True)
+    rec("obs.overhead_ratio", (t_on / t_off) if t_off > 0 else 1.0, "x")
+    rec("obs.events_per_request",
+        len(eng.obs.events.events) / n_req, "x")
+    rec("obs.step_records", len(eng.step_log), "iters")
+
+
 def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     entries = []
 
@@ -339,6 +385,7 @@ def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     _mixed_vs_serialized(rec, smoke)
     _prefix_reuse(rec, smoke)
     _dp_paged_smoke(rec, emit)
+    _obs_bench(rec, smoke)
     if out:
         with open(out, "w") as f:
             json.dump({"smoke": smoke, "entries": entries}, f, indent=1)

@@ -59,6 +59,12 @@ class PrefixIndex:
         self.misses = 0               # match() calls that reused nothing
         self.tokens_saved = 0         # prefill tokens covered by matches
         self.evictions = 0            # entries reclaimed under pressure
+        # optional observer callback(n_blocks_freed), invoked after each
+        # evict() that reclaimed anything — eviction happens deep inside
+        # allocation (PagedKVCache._alloc under memory pressure), so a
+        # callback is the only way the engine's observability layer can
+        # see it as an event rather than a sampled counter delta
+        self.on_evict = None
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -225,6 +231,8 @@ class PrefixIndex:
             self.allocator.decref(e.block)             # refcount 1 -> freed
             self.evictions += 1
             freed += 1
+        if freed and self.on_evict is not None:
+            self.on_evict(freed)
         return freed
 
     # ------------------------------------------------------------- queries

@@ -78,12 +78,17 @@ from repro.cache import (PagedKVCache, PrefixIndex, blocks_for_tokens,
                          pow2_bucket as _pow2)
 from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
 from repro.models.model import Model
+from repro.obs import Observability, NullObs
 from .request import Request
 
-# Rolling-window length for per-step diagnostics (config_trace, step_times,
-# step_log). Totals live in counters (step_count, config_counts,
-# total_step_time) so long-running engines don't grow without bound.
+# Rolling-window length for the per-step audit records (the source the
+# step_log/step_times/config_trace views derive from). Totals live in the
+# metrics registry (steps_total, step_seconds histogram, ...) so
+# long-running engines don't grow without bound.
 TRACE_WINDOW = 1024
+
+_EMPTY_STEP = {"prefill_tokens": 0, "decode_tokens": 0, "ready_decodes": 0,
+               "attn_ctx_tokens": 0}
 
 
 @dataclass
@@ -121,6 +126,13 @@ class EngineConfig:
     #                                  bit-exact jnp mirror elsewhere;
     #                                  "gather" keeps the retired
     #                                  materialized-gather oracle for A/B)
+    # observability --------------------------------------------------------
+    obs: bool = True                 # metrics registry + lifecycle events +
+    #                                  per-step audit records (repro.obs).
+    #                                  False swaps in a no-op NullObs — the
+    #                                  uninstrumented side of the
+    #                                  obs.overhead_ratio CI bench; the
+    #                                  engine schedules identically.
 
 
 class ShiftEngine:
@@ -230,13 +242,19 @@ class ShiftEngine:
         self.queue: List[Request] = []
         self.step_count = 0
         self.preemptions = 0
-        # rolling diagnostics + monotone totals
-        self.trace_window = TRACE_WINDOW
-        self.config_trace: List[str] = []
-        self.config_counts = {"base": 0, "shift": 0}
-        self.step_times: List[float] = []
-        self.total_step_time = 0.0
-        self.step_log: List[dict] = []   # per-step batch composition
+        # ONE observability surface (repro.obs): metrics registry +
+        # lifecycle event log + the rolling per-step audit records that the
+        # legacy step_log/step_times/config_trace views derive from. Each
+        # record carries the monotone step index and its duration, so the
+        # views can never desynchronize under window trimming again.
+        self.obs = (Observability("engine", window=TRACE_WINDOW, now=now)
+                    if cfg.obs else NullObs(now=now))
+        if self.prefix_rows is not None:
+            self._attach_prefix_observers()
+        # composition + shift-audit facts of the step in flight, stashed by
+        # _log_step/_choose and folded into one record in step()
+        self._step_stats: Optional[dict] = None
+        self._step_audit: Optional[dict] = None
 
         pg = self.paged
         kc = cfg.kernel
@@ -264,6 +282,58 @@ class ShiftEngine:
                                                        kernel=kc),
                                  donate_argnums=(1,))}
 
+    # ---------------------------------------------------- observability
+    def _attach_prefix_observers(self):
+        """Point every row index's eviction callback at the event log
+        (re-run after restore — from_state builds fresh indexes)."""
+        for r, idx in enumerate(self.prefix_rows):
+            idx.on_evict = self._make_evict_observer(r)
+
+    def _make_evict_observer(self, row: int):
+        def observer(n_blocks: int):
+            self.obs.inc("prefix_evictions_total", n_blocks)
+            self.obs.emit("prefix_evict", step=self.step_count,
+                          blocks=n_blocks, row=row)
+        return observer
+
+    # Legacy views, all derived from the one rolling store of per-step
+    # audit records (each record carries its own monotone step index and
+    # duration, so entries of any two views always join on "step") and the
+    # metrics registry. No parallel bookkeeping to drift.
+    @property
+    def step_log(self) -> List[dict]:
+        return list(self.obs.step_records)
+
+    @property
+    def step_times(self) -> List[float]:
+        return [r["dur_s"] for r in self.obs.step_records]
+
+    @property
+    def config_trace(self) -> List[str]:
+        return [r["config"] for r in self.obs.step_records
+                if r["config"] is not None]
+
+    @property
+    def config_counts(self) -> dict:
+        reg = self.obs.registry
+        return {"base": int(reg.counter_value("steps_total", config="base")),
+                "shift": int(reg.counter_value("steps_total",
+                                               config="shift"))}
+
+    @property
+    def total_step_time(self) -> float:
+        return self.obs.registry.histogram_sum("step_seconds")
+
+    @property
+    def trace_window(self) -> int:
+        return self.obs.window
+
+    @trace_window.setter
+    def trace_window(self, window: int):
+        self.obs.window = window
+        if len(self.obs.step_records) > window:
+            del self.obs.step_records[:len(self.obs.step_records) - window]
+
     # ---------------------------------------------------------------- admin
     def add_request(self, req: Request):
         worst = len(req.prompt) + req.max_new_tokens
@@ -276,6 +346,11 @@ class ShiftEngine:
                 f"{blocks_for_tokens(worst, self.cfg.block_size)} blocks, "
                 f"each dp row's pool has {self.kv.num_blocks_per_row - 1}")
         self.queue.append(req)
+        self.obs.inc("requests_arrived_total")
+        self.obs.emit("queued", step=self.step_count, rid=req.rid,
+                      prompt_tokens=len(req.prompt),
+                      max_new_tokens=req.max_new_tokens,
+                      arrival=req.arrival)
 
     # ----------------------------------------------------------- dp routing
     def _route(self, req: Request):
@@ -305,6 +380,8 @@ class ShiftEngine:
             return (pend[r] - free, r)
 
         req.row = min(range(self.dp), key=score)
+        self.obs.emit("routed", step=self.step_count, rid=req.rid,
+                      row=req.row)
 
     def _register_inflight(self, req: Request, row: int, n_matched: int):
         """Publish the chain hash of every full prompt block this
@@ -380,6 +457,7 @@ class ShiftEngine:
                 req.slot = slot
                 self.slot_req[slot] = req
                 self.lens[slot] = req.prefilled
+                self._on_admit(req)
             return
         for req in self.queue:
             if req.slot is None:
@@ -414,14 +492,36 @@ class ShiftEngine:
                 self.slot_req[slot] = req
                 if idx is not None:
                     idx.record(len(matched))
+                    self.obs.inc("prefix_hits_total" if matched
+                                 else "prefix_misses_total")
                     if matched:
                         idx.bump(req.all_tokens(), len(matched))
                         self.kv.assign_prefix(slot, matched)
                         req.prefilled = len(matched) * self.cfg.block_size
                         req.cached_tokens = req.prefilled
+                        self.obs.inc("prefix_tokens_saved_total",
+                                     req.prefilled)
+                        self.obs.emit("prefix_hit", step=self.step_count,
+                                      rid=req.rid, row=row,
+                                      blocks=len(matched),
+                                      tokens=req.prefilled)
                     self._register_inflight(req, row, len(matched))
                 self.kv.ensure(slot, req.total_tokens + 1)
                 self.lens[slot] = req.prefilled
+                self._on_admit(req)
+
+    def _on_admit(self, req: Request):
+        """Record one (re)admission: span event + queue-time histogram.
+        Re-admissions after preemption count again — queue time under
+        memory pressure is part of what the paper's E2E numbers see."""
+        self.obs.inc("requests_admitted_total")
+        ts = self.now()
+        queue_s = max(ts - req.arrival, 0.0)
+        self.obs.observe("queue_seconds", queue_s)
+        self.obs.emit("admitted", step=self.step_count, ts=ts, rid=req.rid,
+                      row=req.row, slot=req.slot, queue_s=queue_s,
+                      cached_tokens=req.cached_tokens,
+                      preemptions=req.num_preemptions)
 
     @property
     def active(self) -> List[Request]:
@@ -453,6 +553,7 @@ class ShiftEngine:
         Recompute-style: its prompt+generated re-prefills on re-admission
         (into the same dp row — ``row`` is sticky)."""
         self._unregister_inflight(victim)
+        row, slot = self.kv.row_of(victim.slot), victim.slot
         self.kv.free_seq(victim.slot)
         self.slot_req[victim.slot] = None
         self.lens[victim.slot] = 0
@@ -462,6 +563,10 @@ class ShiftEngine:
         victim.pc_blocks, victim.pc_parent = 0, None   # recommit from root
         victim.num_preemptions += 1
         self.preemptions += 1
+        self.obs.inc("requests_preempted_total")
+        self.obs.emit("preempted", step=self.step_count, rid=victim.rid,
+                      row=row, slot=slot,
+                      tokens_generated=len(victim.generated))
 
     def _reserve(self, req: Request, n_tokens: int, protect,
                  write_from: Optional[int] = None) -> bool:
@@ -515,6 +620,8 @@ class ShiftEngine:
         pairs = self._step_copies
         self._step_copies = []
         self.cow_copies += len(pairs)
+        self.obs.inc("cow_copies_total", len(pairs))
+        self.obs.emit("cow_flush", step=self.step_count, copies=len(pairs))
         n = _pow2(len(pairs))
         src = np.zeros((n,), np.int32)      # padding: null-block self-copy
         dst = np.zeros((n,), np.int32)
@@ -575,29 +682,27 @@ class ShiftEngine:
             n_tokens, n_prefill,
             **{k: facts[k] for k in self._policy_ctx_kwargs})
         name = "base" if use_base else "shift"
-        self.config_counts[name] += 1
-        self.config_trace.append(name)
-        if len(self.config_trace) > self.trace_window:
-            del self.config_trace[:len(self.config_trace) - self.trace_window]
+        # shift-decision audit: the chosen config AND exactly the facts the
+        # policy saw, folded into this step's record by step() — a base<->
+        # shift flip is explainable from the trace alone
+        self._step_audit = {"config": name, "n_tokens": n_tokens,
+                            "ctx_tokens": ctx_tokens, "n_rows": n_rows,
+                            "ctx_max": ctx_max,
+                            "threshold": getattr(self.policy, "threshold",
+                                                 None)}
         return name
 
     def _log_step(self, n_prefill: int, n_decode: int, n_ready: int,
                   attn_ctx: int = 0):
         # attn_ctx_tokens = sum of the actual per-row context lengths this
         # forward attended — the work-proportionality witness: a trace
-        # alone can verify iteration cost tracks occupancy, not s_max
-        entry = {"prefill_tokens": n_prefill,
-                 "decode_tokens": n_decode,
-                 "ready_decodes": n_ready,
-                 "attn_ctx_tokens": attn_ctx}
-        if self.paged_disabled_reason is not None:
-            # the dense fallback must be visible in the step log, not just
-            # at construction: dp-sharded deployments silently lost paging
-            # (and mixed batching + prefix caching with it) once already
-            entry["paged_disabled_reason"] = self.paged_disabled_reason
-        self.step_log.append(entry)
-        if len(self.step_log) > self.trace_window:
-            del self.step_log[:len(self.step_log) - self.trace_window]
+        # alone can verify iteration cost tracks occupancy, not s_max.
+        # Stashed here, folded into ONE schema-checked step record (with
+        # the monotone step index, duration, and shift audit) in step().
+        self._step_stats = {"prefill_tokens": n_prefill,
+                            "decode_tokens": n_decode,
+                            "ready_decodes": n_ready,
+                            "attn_ctx_tokens": attn_ctx}
 
     def _finish_token(self, r: Request, tok: int, t: float):
         """Append a sampled token and retire the request if it is done."""
@@ -607,6 +712,10 @@ class ShiftEngine:
         r.prefilled = r.pos
         if r.first_token_time is None:
             r.first_token_time = t
+            ttft = max(t - r.arrival, 0.0)
+            self.obs.observe("ttft_seconds", ttft)
+            self.obs.emit("first_token", step=self.step_count, ts=t,
+                          rid=r.rid, ttft_s=ttft)
         self.lens[r.slot] = r.pos
         if r.done or (self.cfg.eos_id >= 0
                       and r.generated[-1] == self.cfg.eos_id):
@@ -616,6 +725,20 @@ class ShiftEngine:
                 self.kv.free_seq(r.slot)
             self.slot_req[r.slot] = None
             self.queue = [q for q in self.queue if q.rid != r.rid]
+            n_out = len(r.generated)
+            e2e = max(t - r.arrival, 0.0)
+            tpot = ((t - r.first_token_time) / (n_out - 1)
+                    if n_out > 1 else None)
+            self.obs.inc("requests_finished_total")
+            self.obs.observe("e2e_seconds", e2e)
+            if tpot is not None:
+                self.obs.observe("tpot_seconds", tpot)
+            self.obs.emit("finish", step=self.step_count, ts=t, rid=r.rid,
+                          row=r.row, n_out=n_out, n_prompt=len(r.prompt),
+                          ttft_s=max(r.first_token_time - r.arrival, 0.0),
+                          tpot_s=tpot, e2e_s=e2e,
+                          cached_tokens=r.cached_tokens,
+                          preemptions=r.num_preemptions)
 
     # -------------------------------------------------------- mixed stepping
     def _run_mixed(self) -> bool:
@@ -656,6 +779,8 @@ class ShiftEngine:
             rows.append((r, off, end - off, end == r.total_tokens))
             protect.add(r)
             n_prefill_tok += end - off
+            self.obs.emit("prefill_chunk", step=self.step_count, rid=r.rid,
+                          off=off, tokens=end - off)
         if not rows:
             self._log_step(0, 0, n_ready)
             return False
@@ -763,6 +888,8 @@ class ShiftEngine:
             offs[r.slot] = off
             rows.append((r, len(chunk)))
             base_off = off
+            self.obs.emit("prefill_chunk", step=self.step_count, rid=r.rid,
+                          off=off, tokens=len(chunk))
         if not rows:
             return False
         n_tok = sum(n for _, n in rows)
@@ -859,6 +986,8 @@ class ShiftEngine:
     def step(self) -> bool:
         """One engine iteration. Returns False when idle."""
         t0 = self.now()
+        self._step_stats = None
+        self._step_audit = None
         self._admit()
         if self.mixed:
             # fused prefill+decode batch: no iteration-granularity
@@ -868,12 +997,26 @@ class ShiftEngine:
             # prefill-priority with chunking; decode otherwise (chunked
             # prefill interleaves at iteration granularity)
             progressed = self._run_prefill() or self._run_decode()
-        self.step_count += 1
         dt = self.now() - t0
-        self.total_step_time += dt
-        self.step_times.append(dt)
-        if len(self.step_times) > self.trace_window:
-            del self.step_times[:len(self.step_times) - self.trace_window]
+        # ONE audit record per iteration: monotone step index + duration +
+        # batch composition + the shift-decision audit, all in one entry
+        # (config is None for steps that launched nothing)
+        rec = {"step": self.step_count, "t_start": t0, "dur_s": dt,
+               "config": None, **(self._step_stats or _EMPTY_STEP)}
+        if self._step_audit is not None:
+            rec.update(self._step_audit)
+        if self.paged_disabled_reason is not None:
+            # the dense fallback must be visible in the step log, not just
+            # at construction: dp-sharded deployments silently lost paging
+            # (and mixed batching + prefix caching with it) once already
+            rec["paged_disabled_reason"] = self.paged_disabled_reason
+        self.obs.record_step(rec)
+        self.obs.set_gauge("queue_depth",
+                           sum(1 for q in self.queue if q.slot is None))
+        self.obs.set_gauge("active_requests", len(self.active))
+        if self.paged:
+            self.obs.set_gauge("free_blocks", self.kv.num_free_blocks)
+        self.step_count += 1
         return progressed
 
     def run_until_idle(self, max_steps: int = 10000):
@@ -885,10 +1028,16 @@ class ShiftEngine:
 
     # ------------------------------------------------------- fault tolerance
     def snapshot(self):
-        """Engine state for checkpoint/restart (weights are static)."""
+        """Engine state for checkpoint/restart (weights are static).
+        Observability state rides along: counters stay monotone and
+        in-flight request spans resume across a restore (the snapshot
+        event itself is emitted first, so it is part of the capture)."""
+        self.obs.emit("snapshot", step=self.step_count)
         snap = {
             "cache": jax.tree.map(np.asarray, self.cache),
             "lens": self.lens.copy(),
+            "step_count": self.step_count,
+            "obs": self.obs.state_dict(),
             "requests": [
                 {"rid": r.rid, "prompt": list(r.prompt), "slot": r.slot,
                  "row": r.row,
@@ -896,7 +1045,8 @@ class ShiftEngine:
                  "max_new_tokens": r.max_new_tokens, "arrival": r.arrival,
                  "first_token_time": r.first_token_time,
                  "finish_time": r.finish_time, "last_used": r.last_used,
-                 "cached_tokens": r.cached_tokens}
+                 "cached_tokens": r.cached_tokens,
+                 "num_preemptions": r.num_preemptions}
                 for r in self.queue + [x for x in self.slot_req
                                        if x is not None and x not in self.queue]],
         }
@@ -916,6 +1066,13 @@ class ShiftEngine:
         shared-span prefill right after a restart)."""
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
         self.lens = snap["lens"].copy()
+        # observability resumes where the snapshot left off: counters stay
+        # monotone, event spans of in-flight requests keep their history,
+        # and the step index continues instead of restarting at 0 (older
+        # snapshots without these keys restore with fresh zeroed state)
+        self.step_count = snap.get("step_count", 0)
+        if snap.get("obs") is not None and self.obs.enabled:
+            self.obs.load_state(snap["obs"])
         if self.paged:
             assert "kv" in snap, "paged engine restoring a dense snapshot"
             self.kv = PagedKVCache.from_state(snap["kv"])
@@ -930,6 +1087,7 @@ class ShiftEngine:
                     PrefixIndex.from_state(s, self.kv.allocators[r])
                     for r, s in enumerate(snap["prefix"])]
                 self.kv.prefix_indices = list(self.prefix_rows)
+                self._attach_prefix_observers()
             else:
                 # symmetric guard: the snapshot's allocator refcounts carry
                 # one pin per index entry — restoring without rebuilding
@@ -952,7 +1110,9 @@ class ShiftEngine:
             r.finish_time = rd.get("finish_time")
             r.last_used = rd.get("last_used", 0)
             r.cached_tokens = rd.get("cached_tokens", 0)
+            r.num_preemptions = rd.get("num_preemptions", 0)
             if r.slot is not None:
                 self.slot_req[r.slot] = r
             self.queue.append(r)
+        self.obs.emit("restore", step=self.step_count)
         return self

@@ -7,7 +7,11 @@ end-to-end on a reduced model: ``PYTHONPATH=src python -m repro.launch.serve
 from __future__ import annotations
 
 import argparse
+import os
 import time
+
+# must land before jax initializes so a CPU demo can run --dp > 1
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +22,7 @@ from repro.core.policy import (DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy,
 from repro.engine import ShiftEngine, EngineConfig, Request
 from repro.models import build_model
 from repro.models.model import Model
+from repro.obs import build_report, format_report, write_chrome_trace
 from repro.parallel import Layout
 from repro.sim.costmodel import CostModel
 
@@ -84,6 +89,13 @@ def main():
                     help="data-parallel rows: ONE engine pages per-row "
                          "block pools over a dp×1×1 mesh (CPU demo needs "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="write the observability dump as JSON to PATH and "
+                         "the Prometheus text exposition next to it "
+                         "(PATH with a .prom extension)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write a Chrome trace-event file (load in "
+                         "chrome://tracing or ui.perfetto.dev) to PATH")
     args = ap.parse_args()
 
     eng = build_engine(args.arch, adaptive=args.adaptive,
@@ -128,6 +140,20 @@ def main():
         # the dense fallback is loud: say WHY paging is off (also recorded
         # in prefix_stats / step_log)
         print(f"dense cache fallback: {eng.paged_disabled_reason}")
+
+    dump = eng.obs.dump()
+    print(format_report(build_report(dump)))
+    if args.metrics_out:
+        eng.obs.write_json(args.metrics_out)
+        prom = os.path.splitext(args.metrics_out)[0] + ".prom"
+        eng.obs.write_prometheus(prom)
+        print(f"metrics written: {args.metrics_out} (JSON), {prom} "
+              "(Prometheus text)")
+    if args.trace_out:
+        write_chrome_trace(args.trace_out, dump)
+        print(f"chrome trace written: {args.trace_out} "
+              f"({len(dump['events'])} events, "
+              f"{len(dump['steps'])} steps)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Serving observability: metrics registry, request-lifecycle tracing,
+and latency/throughput reporting shared by the live engine and the
+simulator.
+
+* ``repro.obs.schema`` — the ONE metric/event vocabulary (names, labels,
+  histogram boundaries, step-record fields). Both emitters are
+  schema-strict; a name outside the schema raises at the call site.
+* ``repro.obs.metrics`` — dependency-free ``MetricsRegistry`` (monotone
+  counters, gauges, fixed-boundary histograms) with Prometheus-text and
+  JSON exporters.
+* ``repro.obs.events`` — bounded structured event log: every request span
+  point carries the monotone step index and a wall-clock timestamp.
+* ``repro.obs.observer`` — ``Observability``, the facade an emitter holds
+  (registry + events + rolling per-step audit records); ``NullObs`` is the
+  disabled twin for overhead A/Bs.
+* ``repro.obs.trace`` — Chrome trace-event (Perfetto-loadable) export of
+  the step timeline segmented by config and dp row.
+* ``repro.obs.report`` — TTFT/TPOT/queue/E2E percentiles and the
+  latency-vs-throughput tables matching the paper's evaluation, from a
+  dump of either emitter.
+"""
+from . import schema
+from .events import EventLog
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .observer import Observability, NullObs
+from .report import build_report, format_report, latency_throughput_table
+from .trace import chrome_trace, write_chrome_trace
+
+__all__ = ["schema", "EventLog", "Counter", "Gauge", "Histogram",
+           "MetricsRegistry", "Observability", "NullObs", "build_report",
+           "format_report", "latency_throughput_table", "chrome_trace",
+           "write_chrome_trace"]

@@ -24,7 +24,14 @@ from typing import List, Optional
 import numpy as np
 
 from repro.cache import blocks_for_tokens
+from repro.obs import Observability
 from .costmodel import CostModel, Strategy
+
+# ``best_config`` names its winner in roofline terms ("sp" | "tp"); the
+# engine's compiled configs call the same two points "base" (SP,TP) and
+# "shift" (pure TP). Dumps from both emitters use the engine vocabulary so
+# reports and traces line up.
+_SHIFT_CONFIG = {"sp": "base", "tp": "shift"}
 
 
 @dataclass
@@ -68,6 +75,7 @@ class ReplicaState:
     queue: List[SimRequest] = field(default_factory=list)
     t: float = 0.0
     busy_tokens: float = 0.0
+    idx: int = 0                      # replica index (dp row analogue)
     # prefix_id -> resident shared KV blocks (counted once, like the
     # engine's index-pinned blocks); populated when a seeding request
     # finishes prefilling the shared span
@@ -93,19 +101,19 @@ class ServeSim:
         # the index pins) instead of per request. Unreferenced resident
         # prefixes are evicted when admission runs out of blocks.
         self.prefix_cache = prefix_cache
-        self.prefill_tokens_saved = 0
-        self.shared_blocks_peak = 0
-        self.prefix_evictions = 0
         # mixed=True (default, matching ShiftEngine's paged path): prefill
         # chunks and decode tokens share one iteration, costed as a single
         # pass by the roofline model. mixed=False replays the serialized
         # prefill-OR-decode engine: an iteration that takes prefill tokens
         # makes no decode progress (the TPOT interference being measured).
         self.mixed = mixed
-        self.iterations = 0
-        self.starved_steps = 0    # ready decodes present but no decode ran
         n_rep = n_chips if strategy == "dp" else 1
-        self.reps = [ReplicaState() for _ in range(n_rep)]
+        self.reps = [ReplicaState(idx=i) for i in range(n_rep)]
+        # the same observability surface the live engine drives: one metric
+        # schema, the same step-record and event shapes. Timestamps are the
+        # sim's virtual clock (``rep.t``), passed explicitly at every emit.
+        self.obs = Observability("sim", now=lambda: 0.0)
+        self.step_count = 0       # monotone across replicas (run in turn)
         if kv_capacity_tokens is None:
             hbm = self.cost.hw.hbm_bytes
             shard = 1 if strategy == "dp" else n_chips
@@ -119,6 +127,30 @@ class ServeSim:
         self.kv_cap_blocks = max(kv_capacity_tokens // kv_block_size, 1)
         self.kv_cap = self.kv_cap_blocks * kv_block_size
         self.trace_tokens: List = []   # (t, tokens_processed) for throughput
+
+    # Legacy counter views, derived from the registry (single source of
+    # truth — the sim no longer maintains parallel ad-hoc attributes).
+    @property
+    def iterations(self) -> int:
+        return int(self.obs.registry.counter_total("steps_total"))
+
+    @property
+    def starved_steps(self) -> int:
+        return int(self.obs.registry.counter_total(
+            "decode_starved_steps_total"))
+
+    @property
+    def prefill_tokens_saved(self) -> int:
+        return int(self.obs.registry.counter_total(
+            "prefix_tokens_saved_total"))
+
+    @property
+    def prefix_evictions(self) -> int:
+        return int(self.obs.registry.counter_total("prefix_evictions_total"))
+
+    @property
+    def shared_blocks_peak(self) -> int:
+        return int(self.obs.registry.gauge_value("shared_blocks_peak"))
 
     def _used_blocks(self, rep: ReplicaState) -> int:
         """Blocks committed on a replica: per-request private blocks plus
@@ -154,17 +186,32 @@ class ServeSim:
                     if kv_used + need <= self.kv_cap_blocks:
                         break
                     if pid not in in_use and pid != q.prefix_id:
-                        kv_used -= rep.resident.pop(pid)
-                        self.prefix_evictions += 1
+                        freed = rep.resident.pop(pid)
+                        kv_used -= freed
+                        self.obs.inc("prefix_evictions_total")
+                        self.obs.emit("prefix_evict", step=self.step_count,
+                                      ts=rep.t, blocks=freed, row=rep.idx)
                 if kv_used + need > self.kv_cap_blocks:
                     continue
             rep.active.append(q)
             rep.queue.remove(q)
             q.start = rep.t
+            queue_s = max(rep.t - q.arrival, 0.0)
+            self.obs.inc("requests_admitted_total")
+            self.obs.observe("queue_seconds", queue_s)
             if matched:
                 q.prefilled = matched * self.block_size
                 q.shared_blocks = matched
-                self.prefill_tokens_saved += q.prefilled
+                self.obs.inc("prefix_hits_total")
+                self.obs.inc("prefix_tokens_saved_total", q.prefilled)
+                self.obs.emit("prefix_hit", step=self.step_count, ts=rep.t,
+                              rid=q.rid, row=rep.idx, blocks=matched,
+                              tokens=q.prefilled)
+            elif self.prefix_cache:
+                self.obs.inc("prefix_misses_total")
+            self.obs.emit("admitted", step=self.step_count, ts=rep.t,
+                          rid=q.rid, row=rep.idx, queue_s=queue_s,
+                          cached_tokens=q.prefilled)
             kv_used += need
         if not rep.active:
             return 0.0
@@ -189,42 +236,69 @@ class ServeSim:
                         and r.prefilled >= mb * self.block_size):
                     rep.resident[r.prefix_id] = mb
                     r.shared_blocks = mb
-            self.shared_blocks_peak = max(self.shared_blocks_peak,
-                                          sum(rep.resident.values()))
+            self.obs.set_gauge_max("shared_blocks_peak",
+                                   sum(rep.resident.values()))
         if not self.mixed and n_prefill:
             deco = []                  # serialized: prefill-priority step
         else:
             deco = [r for r in rep.active if r.prefilled >= r.n_in
                     and r.decoded < r.n_out]
         n_decode = len(deco)
-        self.iterations += 1
-        if n_ready and not n_decode:
-            self.starved_steps += 1
         # the ACTUAL per-row contexts of this iteration — the
         # work-proportional kernel prices these, not s_max or a bucket
         ctxs = [r.prefilled + r.decoded for r in rep.active] or [1]
         ctx = int(np.mean(ctxs))
 
         if self.strategy == "shift":
-            _, dt = self.cost.best_config(n_prefill, n_decode, ctx, self.n,
-                                          ctx_lens=ctxs)
+            winner, dt = self.cost.best_config(n_prefill, n_decode, ctx,
+                                               self.n, ctx_lens=ctxs)
+            cfgname = _SHIFT_CONFIG[winner]
         elif self.strategy == "dp":
             dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
                                           Strategy("dp", self.n),
                                           ctx_lens=ctxs)
+            cfgname = "dp"
         else:
             dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
                                           Strategy(self.strategy, self.n),
                                           ctx_lens=ctxs)
+            cfgname = self.strategy
+        t0 = rep.t
         rep.t += dt
         self.trace_tokens.append((rep.t, n_prefill + n_decode))
+        self.obs.record_step({
+            "step": self.step_count, "t_start": t0, "dur_s": dt,
+            "config": cfgname, "prefill_tokens": n_prefill,
+            "decode_tokens": n_decode, "ready_decodes": n_ready,
+            "attn_ctx_tokens": int(sum(ctxs)) if rep.active else 0,
+            "n_tokens": n_prefill + n_decode, "ctx_tokens": int(sum(ctxs)),
+            "replica": rep.idx})
+        self.step_count += 1
         for r in deco:
             r.decoded += 1
             if r.decoded == 1:
                 r.first_token = rep.t
+                ttft = r.first_token - r.arrival
+                self.obs.observe("ttft_seconds", ttft)
+                self.obs.emit("first_token", step=self.step_count, ts=rep.t,
+                              rid=r.rid, ttft_s=ttft)
             if r.decoded >= r.n_out:
                 r.finish = rep.t
+                e2e = r.finish - r.arrival
+                tpot = r.tpot if r.n_out > 1 else None
+                self.obs.inc("requests_finished_total")
+                self.obs.observe("e2e_seconds", e2e)
+                if tpot is not None:
+                    self.obs.observe("tpot_seconds", tpot)
+                self.obs.emit(
+                    "finish", step=self.step_count, ts=rep.t, rid=r.rid,
+                    row=rep.idx, n_out=r.decoded, n_prompt=r.n_in,
+                    ttft_s=r.first_token - r.arrival, tpot_s=tpot,
+                    e2e_s=e2e, cached_tokens=r.shared_blocks
+                    * self.block_size)
         rep.active = [r for r in rep.active if r.finish < 0]
+        self.obs.set_gauge("queue_depth", len(rep.queue))
+        self.obs.set_gauge("active_requests", len(rep.active))
         return dt
 
     def _route(self, reqs: List[SimRequest]) -> List[List[SimRequest]]:
@@ -253,6 +327,8 @@ class ServeSim:
                        key=lambda i: (load[i] + demand(i), i))
             assign[best].append(r)
             load[best] += demand(best)
+            self.obs.emit("routed", step=self.step_count, ts=r.arrival,
+                          rid=r.rid, row=best)
             if self.prefix_cache and r.prefix_id >= 0:
                 seen[best].add(r.prefix_id)
         return assign
@@ -265,7 +341,13 @@ class ServeSim:
             while pending or rep.active or rep.queue:
                 # move arrived requests into the queue
                 while pending and pending[0].arrival <= rep.t:
-                    rep.queue.append(pending.pop(0))
+                    q = pending.pop(0)
+                    rep.queue.append(q)
+                    self.obs.inc("requests_arrived_total")
+                    self.obs.emit("queued", step=self.step_count,
+                                  ts=q.arrival, rid=q.rid,
+                                  prompt_tokens=q.n_in,
+                                  max_new_tokens=q.n_out, arrival=q.arrival)
                 if not rep.active and not rep.queue:
                     if pending:
                         rep.t = max(rep.t, pending[0].arrival)

@@ -1,0 +1,342 @@
+"""Observability: schema-strict metrics registry + exporters, the
+one-source-of-truth step records (the step_times/step_log desync bugfix),
+engine/sim schema conformance, deterministic reports, snapshot/restore of
+observability state, and Chrome-trace validity."""
+import itertools
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.core.policy import ThresholdPolicy
+from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.models import build_model
+from repro.obs import (schema, MetricsRegistry, Observability,
+                       build_report, chrome_trace)
+from repro.obs.events import EventLog
+from repro.obs.report import percentile
+
+
+# --------------------------------------------------------------- registry
+def test_counter_is_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("requests_arrived_total")
+    c.inc()
+    c.inc(2.0)
+    assert c.value == 3.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+def test_registry_is_schema_strict():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("made_up_total")
+    with pytest.raises(ValueError):
+        reg.counter("requests_arrived_total", config="base")  # no labels
+    with pytest.raises(ValueError):
+        reg.counter("steps_total")                # missing config label
+    with pytest.raises(ValueError):
+        reg.counter("steps_total", config="bogus")
+    with pytest.raises(ValueError):
+        reg.gauge("made_up_depth")
+    with pytest.raises(ValueError):
+        reg.histogram("made_up_seconds")
+
+
+def test_histogram_buckets_and_prometheus():
+    reg = MetricsRegistry()
+    h = reg.histogram("ttft_seconds")
+    for v in (0.0001, 0.003, 0.003, 0.7, 500.0):
+        h.observe(v)
+    assert h.count == 5 and h.sum == pytest.approx(500.7062)
+    assert h.buckets[-1] == 1                     # 500s > last bound
+    reg.counter("steps_total", config="base").inc(3)
+    reg.gauge("queue_depth").set(2)
+    text = reg.to_prometheus()
+    assert "# TYPE repro_ttft_seconds histogram" in text
+    assert "# TYPE repro_steps_total counter" in text
+    assert 'repro_steps_total{config="base"} 3' in text
+    assert "repro_queue_depth 2" in text
+    assert 'repro_ttft_seconds_bucket{le="+Inf"} 5' in text
+    assert "repro_ttft_seconds_count 5" in text
+    # buckets are cumulative: each le line is >= the previous
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in text.splitlines()
+              if ln.startswith("repro_ttft_seconds_bucket")]
+    assert counts == sorted(counts)
+
+
+def test_gauge_set_max():
+    reg = MetricsRegistry()
+    g = reg.gauge("shared_blocks_peak")
+    g.set_max(4)
+    g.set_max(2)
+    assert g.value == 4.0
+
+
+def test_registry_state_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("steps_total", config="shift").inc(7)
+    reg.histogram("step_seconds").observe(0.02)
+    reg.gauge("free_blocks").set(11)
+    reg2 = MetricsRegistry()
+    reg2.load_state(reg.state_dict())
+    assert reg2.snapshot() == reg.snapshot()
+    assert reg2.to_prometheus() == reg.to_prometheus()
+
+
+def test_event_log_schema_and_cap():
+    log = EventLog(cap=4)
+    with pytest.raises(ValueError):
+        log.emit("made_up_kind", step=0, ts=0.0)
+    for i in range(6):
+        log.emit("queued", step=i, ts=float(i), rid=i)
+    assert len(log.events) == 4 and log.dropped == 2
+    assert log.events[0]["step"] == 2             # oldest dropped
+    assert [e["seq"] for e in log.events] == [2, 3, 4, 5]
+
+
+def test_percentile_linear_interpolation():
+    import numpy as np
+    xs = [5.0, 1.0, 4.0, 2.0, 3.0]
+    for p in (0, 25, 50, 90, 99, 100):
+        assert percentile(xs, p) == pytest.approx(np.percentile(xs, p))
+    assert percentile([], 50) != percentile([], 50)          # NaN
+    assert percentile([7.0], 99) == 7.0
+
+
+# ------------------------------------------------------- engine integration
+@pytest.fixture(scope="module")
+def mp():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _fake_clock():
+    c = itertools.count()
+    return lambda: next(c) * 1e-3
+
+
+def _run_engine(mp, n_req=3, n_new=5, **kw):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    eng = ShiftEngine(m, m, params, params, ecfg,
+                      policy=ThresholdPolicy(4), now=_fake_clock())
+    for i in range(n_req):
+        eng.add_request(Request(i, list(range(1, 12 + 3 * i)),
+                                max_new_tokens=n_new))
+    eng.run_until_idle()
+    return eng
+
+
+def test_step_records_carry_index_and_duration(mp):
+    """THE bugfix: step index + duration live INSIDE each step record, so
+    the rolling window can never desynchronize step_times from step_log."""
+    eng = _run_engine(mp, n_req=4, n_new=8)
+    total_before = eng.total_step_time
+    eng.trace_window = 4                          # trim retroactively
+    assert len(eng.step_log) == 4
+    steps = [r["step"] for r in eng.step_log]
+    assert steps == sorted(steps) and steps[-1] == eng.step_count - 1
+    # the views index-align because they come from the same records
+    assert eng.step_times == [r["dur_s"] for r in eng.step_log]
+    assert all("dur_s" in r and "step" in r for r in eng.step_log)
+    # totals are histogram-backed, not window-backed: trimming loses nothing
+    assert eng.total_step_time == total_before
+    assert eng.total_step_time >= sum(eng.step_times)
+
+
+def test_engine_dump_is_deterministic(mp):
+    """Two same-seed runs with the injected fake clock produce bitwise
+    identical dumps and reports (the acceptance criterion)."""
+    d1 = _run_engine(mp, prefix_cache=True).obs.dump()
+    d2 = _run_engine(mp, prefix_cache=True).obs.dump()
+    assert json.dumps(d1, sort_keys=True) == json.dumps(d2, sort_keys=True)
+    r1, r2 = build_report(d1), build_report(d2)
+    assert json.dumps(r1, sort_keys=True) == json.dumps(r2, sort_keys=True)
+    assert r1["requests"]["finished"] == 3
+    assert json.dumps(chrome_trace(d1)) == json.dumps(chrome_trace(d2))
+
+
+def test_engine_lifecycle_events(mp):
+    eng = _run_engine(mp, n_req=2, prefix_cache=True)
+    ev = eng.obs.events
+    for rid in (0, 1):
+        kinds = [e["kind"] for e in ev.for_request(rid)]
+        for k in ("queued", "routed", "admitted", "prefill_chunk",
+                  "first_token", "finish"):
+            assert k in kinds, (rid, k, kinds)
+        # span ordering follows the lifecycle
+        assert kinds.index("queued") < kinds.index("admitted") \
+            < kinds.index("first_token") < kinds.index("finish")
+    fin = ev.for_request(0)[-1]
+    assert fin["kind"] == "finish" and fin["n_out"] == 5
+    assert fin["ttft_s"] is not None and fin["e2e_s"] > fin["ttft_s"]
+
+
+def test_nullobs_engine_matches_instrumented(mp):
+    """obs=False must not change scheduling — only recording."""
+    e_on = _run_engine(mp, n_req=2)
+    e_off = _run_engine(mp, n_req=2, obs=False)
+    on = {r.rid: tuple(r.generated) for r in e_on.queue}
+    off = {r.rid: tuple(r.generated) for r in e_off.queue}
+    assert on == off and e_on.step_count == e_off.step_count
+    assert e_off.step_log == [] and e_off.obs.enabled is False
+    assert e_off.obs.state_dict() is None
+
+
+@pytest.mark.parametrize("mixed", [None, False])
+def test_snapshot_restore_carries_obs_state(mp, mixed):
+    """Counters stay monotone and in-flight request spans resume across a
+    restore, on both the mixed and the serialized scheduling paths."""
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                        prefix_cache=True, mixed=mixed)
+    eng = ShiftEngine(m, m, params, params, ecfg,
+                      policy=ThresholdPolicy(4), now=_fake_clock())
+    for i in range(3):
+        eng.add_request(Request(i, list(range(1, 14 + 2 * i)),
+                                max_new_tokens=6))
+    for _ in range(4):
+        eng.step()
+    arrived = eng.obs.registry.counter_total("requests_arrived_total")
+    steps_before = eng.obs.registry.counter_total("steps_total")
+    snap = eng.snapshot()
+
+    eng2 = ShiftEngine(m, m, params, params, ecfg,
+                       policy=ThresholdPolicy(4), now=_fake_clock())
+    eng2.restore(snap)
+    assert eng2.step_count == eng.step_count
+    eng2.run_until_idle()
+    reg = eng2.obs.registry
+    # monotone: arrivals came over in the snapshot, not re-counted
+    assert reg.counter_total("requests_arrived_total") == arrived == 3
+    assert reg.counter_total("steps_total") >= steps_before
+    assert reg.counter_total("requests_finished_total") == 3
+    # in-flight spans resume: pre-snapshot queued + post-restore finish
+    # live in ONE event log, joined by rid
+    ev = eng2.obs.events
+    for rid in range(3):
+        kinds = [e["kind"] for e in ev.for_request(rid)]
+        assert "queued" in kinds and "finish" in kinds
+    kinds_all = [e["kind"] for e in ev.events]
+    assert "snapshot" in kinds_all and "restore" in kinds_all
+    # step records keep one monotone index stream across the restore
+    steps = [r["step"] for r in eng2.step_log]
+    assert steps == sorted(steps) and len(set(steps)) == len(steps)
+
+
+def test_serialized_snapshot_after_restore_resumes_stream(mp):
+    """Serialized path end-to-end equivalence: restored engine finishes
+    the same token streams the uninterrupted engine produces."""
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, mixed=False)
+
+    def fresh():
+        eng = ShiftEngine(m, m, params, params, ecfg,
+                          policy=ThresholdPolicy(4), now=_fake_clock())
+        for i in range(2):
+            eng.add_request(Request(i, list(range(1, 16)), max_new_tokens=5))
+        return eng
+
+    ref = fresh()
+    ref.run_until_idle()
+    want = {r.rid: tuple(r.generated) for r in ref.queue}
+    eng = fresh()
+    for _ in range(3):
+        eng.step()
+    eng2 = ShiftEngine(m, m, params, params, ecfg,
+                       policy=ThresholdPolicy(4), now=_fake_clock())
+    eng2.restore(eng.snapshot())
+    eng2.run_until_idle()
+    got = {r.rid: tuple(r.generated) for r in eng2.queue}
+    assert got == want
+    assert eng2.obs.registry.counter_total("requests_finished_total") == 2
+
+
+# ------------------------------------------------------ schema conformance
+def _run_sim():
+    from repro.configs import get_config
+    from repro.roofline.terms import H200
+    from repro.sim.costmodel import CostModel
+    from repro.sim.simulator import ServeSim, SimRequest
+    sim = ServeSim(CostModel(get_config("qwen3-8b"), hw=H200), "shift",
+                   n_chips=8, prefix_cache=True)
+    reqs = [SimRequest(i, 0.05 * i, 256 + 64 * (i % 3), 16,
+                       prefix_id=0, prefix_len=128) for i in range(8)]
+    sim.run(reqs)
+    return sim
+
+
+def _assert_within_schema(obs):
+    names = obs.registry.emitted_names()
+    assert names["counters"] <= set(schema.COUNTERS), \
+        names["counters"] - set(schema.COUNTERS)
+    assert names["gauges"] <= set(schema.GAUGES)
+    assert names["histograms"] <= set(schema.HISTOGRAMS)
+    assert {e["kind"] for e in obs.events.events} <= set(schema.EVENTS)
+    for r in obs.step_records:
+        schema.check_step_record(r)
+    return names
+
+
+def test_engine_and_sim_share_one_schema(mp):
+    """The acceptance criterion: both emitters stay within the declared
+    vocabulary and share the core counter subset, so their dumps feed the
+    same report/trace consumers."""
+    eng = _run_engine(mp, prefix_cache=True)
+    sim = _run_sim()
+    n_eng = _assert_within_schema(eng.obs)
+    n_sim = _assert_within_schema(sim.obs)
+    core = set(schema.CORE_COUNTERS)
+    assert core <= n_eng["counters"], core - n_eng["counters"]
+    assert core <= n_sim["counters"], core - n_sim["counters"]
+    # the same report pipeline consumes both dumps
+    r_eng = build_report(eng.obs.dump())
+    r_sim = build_report(sim.obs.dump())
+    assert set(r_eng) == set(r_sim)
+    assert set(r_eng["latency"]) == set(r_sim["latency"])
+    assert r_sim["requests"]["finished"] == 8
+
+
+def test_sim_legacy_counters_are_registry_views():
+    sim = _run_sim()
+    reg = sim.obs.registry
+    assert sim.iterations == reg.counter_total("steps_total") > 0
+    assert sim.prefill_tokens_saved \
+        == reg.counter_total("prefix_tokens_saved_total") > 0
+    assert sim.starved_steps \
+        == reg.counter_total("decode_starved_steps_total")
+    assert sim.shared_blocks_peak \
+        == reg.gauge_value("shared_blocks_peak") > 0
+    # sim steps label with the engine's config vocabulary (base/shift)
+    cfgs = {r["config"] for r in sim.obs.step_records}
+    assert cfgs <= {"base", "shift"}
+
+
+# ------------------------------------------------------------ chrome trace
+def test_chrome_trace_is_valid(mp):
+    eng = _run_engine(mp, n_req=2, prefix_cache=True)
+    tr = chrome_trace(eng.obs.dump())
+    evs = tr["traceEvents"]
+    assert isinstance(evs, list) and evs
+    for e in evs:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] != "M":
+            assert e["ts"] >= 0                   # normalized to t0
+    # async request spans balance per id
+    opens = {}
+    for e in evs:
+        if e["ph"] == "b":
+            opens[e["id"]] = opens.get(e["id"], 0) + 1
+        elif e["ph"] == "e":
+            opens[e["id"]] -= 1
+    assert opens and all(v == 0 for v in opens.values())
+    # step records appear as complete events with their audit args
+    steps = [e for e in evs if e["ph"] == "X"]
+    assert steps and all("args" in e and "dur" in e for e in steps)
+    # json-serializable as-is (what write_chrome_trace emits)
+    json.dumps(tr)

@@ -1,0 +1,211 @@
+"""CI chaos smoke: seeded fault drills against the live engine.
+
+Each drill builds a reduced-model engine, injects a deterministic
+:class:`repro.ft.FaultPlan`, and asserts the fault-tolerance contract:
+
+- ``oom``    — scheduled allocator faults under a tight block budget:
+               every request reaches a typed terminal outcome and the
+               block ledger drains to exactly zero (no leaked blocks or
+               prefix pins);
+- ``poison`` — poisoned forward steps (NaN logits / raised launches):
+               completed requests' token streams are bit-identical to a
+               fault-free run (recompute-retry is deterministic);
+- ``crash``  — kill the engine mid-serve and recover from the retained
+               auto-snapshot ring: the delivered token streams are
+               exactly-once and bit-identical to an uninterrupted run;
+- ``storm``  — every seam at once from one seed: typed outcomes + zero
+               leak under compound pressure.
+
+Exit 0 when the contract holds, 1 with a per-assertion report otherwise;
+``--out`` writes a JSON artifact either way. Same seed -> same drill,
+bit-for-bit, so a CI failure replays locally with the printed command.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine.request import FinishReason
+from repro.ft import DeliveryLog, Fault, FaultPlan, random_plan
+from repro.models import build_model
+
+
+class _AlwaysBase:
+    def use_base(self, n, p=0):
+        return True
+
+
+def _models():
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _engine(mp, faults=None, **kw):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    return ShiftEngine(m, m, params, params, ecfg, policy=_AlwaysBase(),
+                       faults=faults)
+
+
+def _reqs(n=4, n_new=5):
+    return [Request(i, list(range(1, 10 + 2 * i)), max_new_tokens=n_new)
+            for i in range(n)]
+
+
+def _reference(mp, **kw):
+    eng = _engine(mp, **kw)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle()
+    return {r.rid: list(r.generated) for r in reqs}
+
+
+def _check(results, name, ok, detail=""):
+    results.append({"check": name, "ok": bool(ok), "detail": detail})
+    print(f"  {'ok ' if ok else 'FAIL'} {name}" + (f" — {detail}"
+                                                   if detail else ""))
+    return bool(ok)
+
+
+def _terminal_and_zero_leak(results, eng, reqs, plan=None):
+    # serve the workload THROUGH the fault window first, then drain: a
+    # drain on a cold engine would shed everything before a fault fires
+    eng.run_until_idle(max_steps=600)
+    eng.drain(max_steps=600)
+    _check(results, "all_requests_terminal",
+           all(r.finish_reason is not None for r in reqs),
+           str({r.rid: str(r.finish_reason) for r in reqs}))
+    acct = eng.block_accounting()
+    _check(results, "zero_block_leak",
+           acct == {"used": 0, "pinned": 0}, str(acct))
+    if plan is not None:
+        _check(results, "faults_fired", len(plan.fired) > 0,
+               f"{len(plan.fired)} injected")
+
+
+def drill_oom(mp, seed, results):
+    plan = random_plan(seed, 40, p_alloc=0.3)
+    eng = _engine(mp, faults=plan, num_blocks=24, prefix_cache=True)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    _terminal_and_zero_leak(results, eng, reqs, plan)
+
+
+def drill_poison(mp, seed, results):
+    ref = _reference(mp)
+    plan = random_plan(seed, 60, p_forward=0.25)
+    eng = _engine(mp, faults=plan)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=600)
+    done = {r.rid: list(r.generated) for r in reqs
+            if r.finish_reason is FinishReason.OK}
+    _check(results, "retried_streams_bit_identical",
+           all(done[rid] == ref[rid] for rid in done) and len(done) > 0,
+           f"{len(done)}/{len(reqs)} completed ok")
+    _check(results, "failed_steps_logged",
+           eng.obs.registry.counter_total("failed_steps_total") > 0)
+    _terminal_and_zero_leak(results, eng, reqs, plan)
+
+
+def drill_crash(mp, seed, results):
+    ref = _reference(mp)
+    # corrupt one scheduled snapshot too: recovery must fall back through
+    # the ring, not just trust the newest capture
+    plan = FaultPlan([Fault(4, "snapshot")])
+    eng = _engine(mp, faults=plan, auto_snapshot_every=2)
+    log = DeliveryLog()
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    live = {r.rid: r for r in reqs}
+    for _ in range(5):                    # snapshots at 2 (good) and 4 (bad)
+        eng.step()
+        log.poll(live.values())
+    assert any(r.generated for r in reqs) and not all(
+        r.done for r in reqs), "crash must land mid-generation"
+    ring = eng._snap_ring                 # the engine object "crashes" here
+    pre = {rid: len(log.delivered(rid)) for rid in live}
+    eng2 = _engine(mp, auto_snapshot_every=2)
+    eng2.recover(ring)
+    live2 = {r.rid: r for r in eng2.queue}
+    _check(results, "no_request_lost", set(live2) == set(live))
+    _check(results, "fell_back_past_corrupt_snapshot",
+           eng2.step_count == 2, f"recovered at step {eng2.step_count}")
+    replay_ok = True
+    try:
+        while eng2.queue or eng2.active:
+            eng2.step()
+            log.poll(live2.values())
+    except Exception as e:                # ReplayDivergence included
+        replay_ok = False
+        _check(results, "replay_clean", False, repr(e))
+    if replay_ok:
+        _check(results, "replay_clean", True)
+    _check(results, "streams_exactly_once_bit_identical",
+           all(log.delivered(rid) == ref[rid] for rid in live),
+           str({rid: f"{pre[rid]}+{len(ref[rid]) - pre[rid]}"
+                for rid in live}))
+    # the snapshot fault fired on the ORIGINAL engine's plan; the
+    # recovered engine's restored counters predate it by design
+    _check(results, "faults_fired", len(plan.fired) > 0,
+           f"{len(plan.fired)} injected")
+    _terminal_and_zero_leak(results, eng2, list(live2.values()))
+
+
+def drill_storm(mp, seed, results):
+    plan = random_plan(seed, 50, p_alloc=0.15, p_forward=0.15, p_route=0.1,
+                       p_snapshot=0.1)
+    eng = _engine(mp, faults=plan, num_blocks=32, prefix_cache=True,
+                  auto_snapshot_every=4, max_queue=3, quarantine_after=4)
+    reqs = _reqs(6)
+    for r in reqs:
+        eng.add_request(r)
+    _terminal_and_zero_leak(results, eng, reqs, plan)
+    _check(results, "snapshots_survived_storm",
+           len(eng._snap_ring) > 0 and eng.recover() is eng)
+
+
+DRILLS = {"oom": drill_oom, "poison": drill_poison, "crash": drill_crash,
+          "storm": drill_storm}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--drill", choices=sorted(DRILLS) + ["all"],
+                    default="all")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="", help="write JSON results to PATH")
+    args = ap.parse_args(argv)
+    mp = _models()
+    results = []
+    names = sorted(DRILLS) if args.drill == "all" else [args.drill]
+    for name in names:
+        print(f"chaos drill: {name} (seed {args.seed})")
+        DRILLS[name](mp, args.seed, results)
+    failed = [r for r in results if not r["ok"]]
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"seed": args.seed, "drills": names,
+                       "results": results, "ok": not failed}, f, indent=1)
+    print(f"chaos: {len(results) - len(failed)}/{len(results)} checks ok")
+    if failed:
+        print("replay locally with: PYTHONPATH=src python "
+              f"benchmarks/chaos_smoke.py --drill {args.drill} "
+              f"--seed {args.seed}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

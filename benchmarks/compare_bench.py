@@ -11,7 +11,13 @@ simulator outputs (``step.*``, ``prefix.*``: iteration counts, starvation,
 TPOT/TTFT in modeled seconds), the engine-logged attention occupancy and
 modeled gather/kernel HBM-bytes ratio (``attn.decode_ctx_tokens``,
 ``attn.gather_bytes_ratio``) and the kernel speedup ratios
-(``paged.speedup_*``, ``step.*_ratio``, ``prefix.*_ratio``). Raw wall-clock entries
+(``paged.speedup_*``, ``step.*_ratio``, ``prefix.*_ratio``), and the
+fault-tolerance contract bits — ``fault.recovery_replay_ok`` (1.0 iff
+crash-recovery streams are exactly-once bit-identical; any drop fails),
+``fault.storm_terminal_ratio`` (typed outcomes under a seeded storm) and
+``fault.storm_leaked_blocks`` (must stay 0; ``blocks`` gates low-is-good).
+``fault.overhead_ratio`` rides the same relaxed wall-ratio gate as
+``obs.overhead_ratio``. Raw wall-clock entries
 (``us_per_call``) are reported but NOT gated by default: shared CI runners
 jitter well past any useful threshold, and a flaky gate is worse than no
 gate (pass ``--strict`` to include them locally on a quiet machine).
@@ -32,7 +38,7 @@ import json
 import sys
 
 # units whose entries are deterministic (sim/ratio outputs): gated
-_GATED_UNITS = {"x", "iters", "ms", "s", "tokens"}
+_GATED_UNITS = {"x", "iters", "ms", "s", "tokens", "blocks"}
 # wall-clock units: noisy on shared runners, gated only with --strict
 _NOISY_UNITS = {"us_per_call"}
 

@@ -24,6 +24,13 @@ mode on CPU (TPU timings are the roofline estimates in EXPERIMENTS.md
 * dp=2 paged engine smoke — a real per-dp-row ShiftEngine (paged + mixed
   + prefix cache) on a 2×1×1 host mesh; gated on deterministic scheduling
   counters so a silent dense fallback under dp>1 fails CI.
+* fault tolerance (``fault.*``) — the crash-recovery drill outcome
+  (``fault.recovery_replay_ok``: 1.0 iff streams across a crash are
+  exactly-once and bit-identical — gated, a drop to 0 fails CI), the
+  terminal-outcome + zero-leak contract under a seeded storm, and the
+  wall overhead of the fault-tolerance bookkeeping on the fault-free
+  hot path (``fault.overhead_ratio``, relaxed gate like
+  ``obs.overhead_ratio``).
 
 Emits CSV rows (legacy, for benchmarks/run.py) and writes a
 machine-readable ``BENCH_kernels.json``:
@@ -371,6 +378,102 @@ def _obs_bench(rec, smoke):
     rec("obs.step_records", len(eng.step_log), "iters")
 
 
+def _fault_bench(rec, smoke):
+    """Fault-tolerance contract + cost. ``fault.recovery_replay_ok`` is
+    the crash-recovery drill boiled down to one gated bit: 1.0 iff the
+    token streams across an injected crash+recover are exactly-once and
+    bit-identical to an uninterrupted run. ``fault.storm_terminal_ratio``
+    / ``fault.storm_leaked_blocks`` assert the typed-outcome and
+    zero-leak contracts under a seeded fault storm. ``fault.overhead_-
+    ratio`` is the median-step wall ratio of an engine carrying the
+    fault-tolerance machinery (an attached — empty — FaultPlan, deadline
+    scanning, watchdog) over one without, on a fault-free workload."""
+    from repro.configs import get_config
+    from repro.core.policy import ThresholdPolicy
+    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.ft import DeliveryLog, FaultPlan, random_plan
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+    n_new = 4 if smoke else 8
+
+    def engine(faults=None, **kw):
+        ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+        return ShiftEngine(m, m, params, params, ecfg,
+                           policy=ThresholdPolicy(4), faults=faults)
+
+    def reqs():
+        return [Request(i, list(range(1, 11 + 2 * i)), max_new_tokens=n_new)
+                for i in range(4)]
+
+    # reference streams (uninterrupted)
+    eng = engine()
+    ref_reqs = reqs()
+    for r in ref_reqs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=400)
+    ref = {r.rid: list(r.generated) for r in ref_reqs}
+
+    # crash-recovery drill: crash mid-generation, recover, replay
+    eng = engine(auto_snapshot_every=2)
+    log = DeliveryLog()
+    rs = reqs()
+    for r in rs:
+        eng.add_request(r)
+    live = {r.rid: r for r in rs}
+    for _ in range(5):
+        eng.step()
+        log.poll(live.values())
+    eng2 = engine(auto_snapshot_every=2)
+    replay_ok = 0.0
+    try:
+        eng2.recover(eng._snap_ring)
+        live2 = {r.rid: r for r in eng2.queue}
+        while eng2.queue or eng2.active:
+            eng2.step()
+            log.poll(live2.values())
+        if all(log.delivered(rid) == ref[rid] for rid in live):
+            replay_ok = 1.0
+    except Exception:
+        replay_ok = 0.0                 # divergence/SnapshotError -> 0
+    rec("fault.recovery_replay_ok", replay_ok, "x")
+
+    # seeded storm: typed outcomes + zero leak
+    plan = random_plan(3, 40, p_alloc=0.15, p_forward=0.15, p_route=0.1)
+    eng = engine(faults=plan, num_blocks=32, prefix_cache=True)
+    rs = reqs()
+    for r in rs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=400)
+    eng.drain(max_steps=400)
+    acct = eng.block_accounting()
+    rec("fault.storm_terminal_ratio",
+        sum(1 for r in rs if r.finish_reason is not None) / len(rs), "x")
+    rec("fault.storm_leaked_blocks", acct["used"] + acct["pinned"],
+        "blocks")
+
+    # bookkeeping overhead on the fault-free hot path
+    def median_step(**kw):
+        e = engine(**kw)
+        for r in reqs():
+            e.add_request(r)
+        e.step()                        # warm-up: compile first shape
+        ts = []
+        while e.active or e.queue:
+            t0 = time.perf_counter()
+            e.step()
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2] if ts else 0.0
+
+    t_plain = median_step()
+    t_ft = median_step(faults=FaultPlan([]), deadline_s=1e9)
+    rec("fault.overhead_ratio",
+        (t_ft / t_plain) if t_plain > 0 else 1.0, "x")
+
+
 def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     entries = []
 
@@ -386,6 +489,7 @@ def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     _prefix_reuse(rec, smoke)
     _dp_paged_smoke(rec, emit)
     _obs_bench(rec, smoke)
+    _fault_bench(rec, smoke)
     if out:
         with open(out, "w") as f:
             json.dump({"smoke": smoke, "entries": entries}, f, indent=1)

@@ -77,9 +77,11 @@ import numpy as np
 from repro.cache import (PagedKVCache, PrefixIndex, blocks_for_tokens,
                          pow2_bucket as _pow2)
 from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
+from repro.ft.faults import FaultPlan, SnapshotError, corrupt_snapshot
+from repro.ft.watchdog import StragglerWatchdog
 from repro.models.model import Model
 from repro.obs import Observability, NullObs
-from .request import Request
+from .request import FinishReason, Request
 
 # Rolling-window length for the per-step audit records (the source the
 # step_log/step_times/config_trace views derive from). Totals live in the
@@ -133,13 +135,46 @@ class EngineConfig:
     #                                  uninstrumented side of the
     #                                  obs.overhead_ratio CI bench; the
     #                                  engine schedules identically.
+    # fault tolerance ------------------------------------------------------
+    max_queue: int = 0               # bound on UNADMITTED queued requests;
+    #                                  0 = unbounded (the pre-hardening
+    #                                  behavior). When full, shed_policy
+    #                                  decides who terminates with
+    #                                  FinishReason.SHED.
+    shed_policy: str = "reject-newest"  # "reject-newest": the arriving
+    #                                  request is shed; "evict-longest-
+    #                                  queued": the oldest unadmitted
+    #                                  request is shed to make room.
+    deadline_s: Optional[float] = None  # default per-request deadline,
+    #                                  seconds past arrival (engine clock);
+    #                                  Request.deadline overrides. None =
+    #                                  no default deadline.
+    quarantine_after: int = 3        # failed steps a request may be part
+    #                                  of before it terminates FAILED (the
+    #                                  fail-the-request-not-the-engine
+    #                                  bound)
+    retry_backoff: int = 2           # extra idle steps per accumulated
+    #                                  failure before a failed request may
+    #                                  be batched/admitted again
+    #                                  (step-counted backoff)
+    auto_snapshot_every: int = 0     # capture a recovery snapshot every N
+    #                                  steps (0 = off); the last
+    #                                  snapshot_keep live in _snap_ring —
+    #                                  the durable-checkpoint stand-in
+    #                                  recover() restores from
+    straggler_factor: float = 2.5    # watchdog: flag steps slower than
+    #                                  factor x the rolling median
+    snapshot_keep: int = 2
 
 
 class ShiftEngine:
     def __init__(self, model_base: Model, model_shift: Model,
                  params_base, params_shift, cfg: EngineConfig,
-                 policy=None, now=time.monotonic):
+                 policy=None, now=time.monotonic,
+                 faults: Optional[FaultPlan] = None):
         assert model_base.cfg is model_shift.cfg
+        if cfg.shed_policy not in ("reject-newest", "evict-longest-queued"):
+            raise ValueError(f"unknown shed_policy {cfg.shed_policy!r}")
         self.mcfg = model_base.cfg
         self.base = model_base
         self.shift = model_shift
@@ -242,6 +277,14 @@ class ShiftEngine:
         self.queue: List[Request] = []
         self.step_count = 0
         self.preemptions = 0
+        # fault tolerance: the (optional) deterministic fault schedule, the
+        # per-step straggler watchdog, the retained recovery snapshots, and
+        # the graceful-shutdown flag (draining stops fresh admissions)
+        self.faults = faults
+        self.watchdog = StragglerWatchdog(factor=cfg.straggler_factor)
+        self._snap_ring: List[dict] = []
+        self._alloc_fault_armed = False
+        self.draining = False
         # ONE observability surface (repro.obs): metrics registry +
         # lifecycle event log + the rolling per-step audit records that the
         # legacy step_log/step_times/config_trace views derive from. Each
@@ -345,12 +388,181 @@ class ShiftEngine:
                 f"request {req.rid} can never fit: needs "
                 f"{blocks_for_tokens(worst, self.cfg.block_size)} blocks, "
                 f"each dp row's pool has {self.kv.num_blocks_per_row - 1}")
+        if req.deadline is None and self.cfg.deadline_s is not None:
+            req.deadline = req.arrival + self.cfg.deadline_s
         self.queue.append(req)
         self.obs.inc("requests_arrived_total")
         self.obs.emit("queued", step=self.step_count, rid=req.rid,
                       prompt_tokens=len(req.prompt),
                       max_new_tokens=req.max_new_tokens,
                       arrival=req.arrival)
+        if self.draining:
+            # shutting down: accepted-but-terminal, never scheduled
+            self._retire(req, FinishReason.SHED)
+            return
+        self._enforce_queue_bound(req)
+
+    def _enforce_queue_bound(self, newest: Request):
+        """Bounded admission queue: when the number of UNADMITTED requests
+        exceeds ``max_queue``, the shed policy picks who terminates with
+        ``FinishReason.SHED`` instead of the queue growing without bound —
+        a traffic spike degrades into explicit rejections, not an
+        ever-longer tail of doomed waiters."""
+        if not self.cfg.max_queue:
+            return
+        waiting = [q for q in self.queue if q.slot is None]
+        while len(waiting) > self.cfg.max_queue:
+            if self.cfg.shed_policy == "reject-newest":
+                victim = newest
+            else:                      # evict-longest-queued
+                victim = min(waiting, key=lambda q: (q.arrival, q.rid))
+            self._retire(victim, FinishReason.SHED)
+            waiting.remove(victim)
+            if victim is newest:
+                break
+
+    # ------------------------------------------------------ typed outcomes
+    _REASON_EVENT = {FinishReason.TIMEOUT: "timeout",
+                     FinishReason.CANCELLED: "cancelled",
+                     FinishReason.SHED: "shed",
+                     FinishReason.FAILED: "quarantined"}
+    _REASON_COUNTER = {FinishReason.TIMEOUT: "requests_timeout_total",
+                       FinishReason.CANCELLED: "requests_cancelled_total",
+                       FinishReason.SHED: "requests_shed_total",
+                       FinishReason.FAILED: "requests_failed_total"}
+
+    def _release_slot(self, req: Request):
+        """Return ``req``'s slot and blocks to the engine without touching
+        its token state (shared by preemption and terminal retirement).
+        Leak-free by construction: in-flight prefix registrations are
+        dropped and block refcounts decremented through ``free_seq`` (index
+        pins survive — cached prefixes outlive the request)."""
+        self._unregister_inflight(req)
+        if self.paged:
+            self.kv.free_seq(req.slot)
+        self.slot_req[req.slot] = None
+        self.lens[req.slot] = 0
+        req.slot = None
+
+    def _retire(self, req: Request, reason: FinishReason,
+                t: Optional[float] = None):
+        """Terminate ``req`` with a non-OK typed outcome (OK goes through
+        ``_finish_token``). Every submitted request ends here or there —
+        the engine never drops a request without a FinishReason."""
+        assert reason is not FinishReason.OK
+        t = self.now() if t is None else t
+        if req.slot is not None:
+            self._release_slot(req)
+        self.queue = [q for q in self.queue if q.rid != req.rid]
+        req.finish_time = t
+        req.finish_reason = reason
+        self.obs.inc(self._REASON_COUNTER[reason])
+        self.obs.emit(self._REASON_EVENT[reason], step=self.step_count,
+                      ts=t, rid=req.rid, row=req.row,
+                      n_out=len(req.generated),
+                      fail_count=req.fail_count)
+
+    def cancel(self, rid: int) -> bool:
+        """Explicitly terminate a queued or running request. Frees its
+        blocks and prefix pins without leaks; returns False when ``rid``
+        is not live (already terminal or never submitted)."""
+        req = next((q for q in self.queue if q.rid == rid), None)
+        if req is None:
+            return False
+        self._retire(req, FinishReason.CANCELLED)
+        return True
+
+    def _expire_deadlines(self):
+        """Enforce per-request deadlines (checked every step): a request
+        whose deadline passed terminates TIMEOUT whether it is still
+        queued or mid-decode — a stuck or starved request can never hold
+        its slot and blocks forever."""
+        t = self.now()
+        for req in list(self.queue):
+            if req.deadline is not None and t > req.deadline:
+                self._retire(req, FinishReason.TIMEOUT, t=t)
+
+    # ------------------------------------------------------ fault injection
+    def _fault_fired(self, fault):
+        self.obs.inc("faults_injected_total", seam=fault.seam)
+        self.obs.emit("fault_injected", step=self.step_count,
+                      seam=fault.seam, fault_kind=fault.kind, row=fault.row)
+
+    def _arm_step_faults(self):
+        """Consult the fault plan once per step for the seams injected at
+        step granularity: an ``alloc`` fault makes the step's FIRST
+        ensure/COW attempt fail like a BlockOOM; a ``route`` fault fails
+        one dp row — its active requests are preempted back to the queue
+        (recompute) and enter step-counted retry backoff."""
+        self._alloc_fault_armed = False
+        if self.faults is None:
+            return
+        f = self.faults.at(self.step_count, "alloc")
+        if f is not None:
+            self._alloc_fault_armed = True
+            self._fault_fired(f)
+        f = self.faults.at(self.step_count, "route")
+        if f is not None:
+            self._fault_fired(f)
+            victims = [r for r in self.active
+                       if self.kv.row_of(r.slot) == f.row] if self.paged \
+                else list(self.active)
+            # recompute-retry only exists on the paged path (preemption is
+            # a paged-cache mechanism); the dense fallback backs off in
+            # place
+            self._fail_requests(victims, preempt=self.paged)
+
+    def _take_alloc_fault(self) -> bool:
+        """True exactly once per armed step — the injected OOM."""
+        if self._alloc_fault_armed:
+            self._alloc_fault_armed = False
+            return True
+        return False
+
+    def _fail_requests(self, reqs, preempt: bool = False):
+        """Charge each request one step failure. At ``quarantine_after``
+        accumulated failures the request terminates FAILED (fail the
+        request, not the engine); below it the request backs off
+        ``retry_backoff * fail_count`` steps (step-counted, deterministic)
+        before it may be batched or re-admitted, optionally losing its
+        slot (recompute-retry for a failed dp row)."""
+        for r in reqs:
+            r.fail_count += 1
+            if r.fail_count >= self.cfg.quarantine_after:
+                self._retire(r, FinishReason.FAILED)
+                continue
+            r.retry_at = self.step_count + 1 \
+                + self.cfg.retry_backoff * r.fail_count
+            if preempt and r.slot is not None:
+                self._preempt(r)
+            self.obs.inc("retries_total")
+            self.obs.emit("retry", step=self.step_count, rid=r.rid,
+                          fail_count=r.fail_count, retry_at=r.retry_at,
+                          recompute=preempt)
+
+    def _fail_step(self, reqs, n_ready: int, attn_ctx: int):
+        """Account one failed forward step: the batch's requests enter
+        retry/quarantine and the step record carries ``failed=True`` with
+        ZERO token progress (exactly-once accounting — failed launches
+        produce no tokens; ``attn_ctx`` stays nonzero for a poisoned-but-
+        executed launch, whose attention reads really happened)."""
+        self._step_fail_flag = True
+        self._fail_requests(reqs)
+        self._log_step(0, 0, n_ready, attn_ctx)
+
+    def _retryable(self, r: Request) -> bool:
+        """False while a previously failed request serves its backoff."""
+        return r.retry_at <= self.step_count
+
+    def _admissible(self, r: Request) -> bool:
+        """Queue-side gate: backoff applies to (re)admission too, and a
+        draining engine only re-admits requests that already held a slot
+        (preempted in-flight work finishes; fresh work is shed)."""
+        if not self._retryable(r):
+            return False
+        if self.draining and r.num_preemptions == 0 and not r.generated:
+            return False
+        return True
 
     # ----------------------------------------------------------- dp routing
     def _route(self, req: Request):
@@ -448,7 +660,7 @@ class ShiftEngine:
         by the writer's progress, so later arrivals may admit past it."""
         if not self.paged:
             for req in list(self.queue):
-                if req.slot is not None:
+                if req.slot is not None or not self._admissible(req):
                     continue
                 slot = next((s for s, owner in enumerate(self.slot_req)
                              if owner is None), None)
@@ -465,7 +677,8 @@ class ShiftEngine:
         spr = self.slots_per_row
         for row in range(self.dp):
             for req in list(self.queue):
-                if req.slot is not None or req.row != row:
+                if req.slot is not None or req.row != row \
+                        or not self._admissible(req):
                     continue
                 slot = next((s for s in range(row * spr, (row + 1) * spr)
                              if self.slot_req[s] is None), None)
@@ -506,7 +719,23 @@ class ShiftEngine:
                                       blocks=len(matched),
                                       tokens=req.prefilled)
                     self._register_inflight(req, row, len(matched))
-                self.kv.ensure(slot, req.total_tokens + 1)
+                if self._take_alloc_fault() \
+                        or not self.kv.ensure(slot, req.total_tokens + 1):
+                    # allocation failed past the can_allocate probe (an
+                    # injected OOM, or eviction reclaiming less than
+                    # estimated): admission must be atomic, so roll it
+                    # back — prefix refs taken by assign_prefix are
+                    # decremented by free_seq, the in-flight registration
+                    # is dropped, and the request stays queued (FCFS: the
+                    # row stops admitting this step)
+                    self._unregister_inflight(req)
+                    if self.kv.n_mapped[slot]:
+                        self.kv.free_seq(slot)
+                    self.slot_req[slot] = None
+                    req.slot = None
+                    req.prefilled = 0
+                    req.cached_tokens = 0
+                    break
                 self.lens[slot] = req.prefilled
                 self._on_admit(req)
 
@@ -582,7 +811,11 @@ class ShiftEngine:
         before the forward pass."""
         row = self.kv.row_of(req.slot)
         while True:
-            if self.kv.ensure(req.slot, n_tokens):
+            # an armed alloc fault fails this step's first ensure/COW
+            # attempt exactly like a BlockOOM would — the recovery path
+            # below (victim preemption, then retry) is the code under test
+            if not self._take_alloc_fault() \
+                    and self.kv.ensure(req.slot, n_tokens):
                 if write_from is None:
                     return True
                 ok, copies = self.kv.copy_on_write(req.slot, write_from,
@@ -720,6 +953,7 @@ class ShiftEngine:
         if r.done or (self.cfg.eos_id >= 0
                       and r.generated[-1] == self.cfg.eos_id):
             r.finish_time = t
+            r.finish_reason = FinishReason.OK
             if self.paged:
                 self._unregister_inflight(r)
                 self.kv.free_seq(r.slot)
@@ -751,7 +985,8 @@ class ShiftEngine:
         the same pass (fused prefill→first-token, one fewer iteration per
         request)."""
         C = self.cfg.prefill_chunk
-        ready = [r for r in self.active if self._prefill_done(r) and not r.done]
+        ready = [r for r in self.active if self._prefill_done(r)
+                 and not r.done and self._retryable(r)]
         n_ready = len(ready)
         rows = []                          # (req, off, q_len, produces)
         protect = set()
@@ -766,7 +1001,8 @@ class ShiftEngine:
         n_decode = len(rows)
         n_prefill_tok = 0
         for r in list(self.active):
-            if r.slot is None or r.done or self._prefill_done(r):
+            if r.slot is None or r.done or self._prefill_done(r) \
+                    or not self._retryable(r):
                 continue
             off = r.prefilled
             end = min(off + C, r.total_tokens)
@@ -835,9 +1071,24 @@ class ShiftEngine:
         self._apply_copies()               # COW copies land before the write
         args = [jnp.asarray(toks), jnp.asarray(qlen), jnp.asarray(offs),
                 jnp.asarray(bt)]
-        nxt, self.cache = self._forward[mode](params, self.cache, *args,
-                                              *self._extras(Rb))
-        nxt = np.asarray(nxt)
+        fault = (self.faults.at(self.step_count, "forward")
+                 if self.faults is not None else None)
+        if fault is not None:
+            self._fault_fired(fault)
+        if fault is None or fault.kind == "nan":
+            # "nan" models poisoned logits: the launch runs (and rewrites
+            # the same KV bytes a retry will), but its outputs are garbage
+            nxt, self.cache = self._forward[mode](params, self.cache, *args,
+                                                  *self._extras(Rb))
+            nxt = np.asarray(nxt)
+        if fault is not None:
+            # failed step: no token is applied, no progress is recorded —
+            # every batched request retries with backoff or quarantines.
+            # A retry recomputes the identical chunk (KV writes are
+            # position-idempotent), so streams stay bit-identical.
+            self._fail_step([e[0] for _, e in placed], n_ready,
+                            attn_ctx if fault.kind == "nan" else 0)
+            return True
         t = self.now()
         for i, (r, off, ql, produces) in placed:
             r.prefilled = off + ql
@@ -854,7 +1105,8 @@ class ShiftEngine:
         """One chunked-prefill iteration over slots that still need their
         (re)prompt — after a preemption, prompt+generated re-prefill here."""
         C = self.cfg.prefill_chunk
-        todo = [r for r in self.active if not self._prefill_done(r)]
+        todo = [r for r in self.active
+                if not self._prefill_done(r) and self._retryable(r)]
         if not todo:
             return False
         toks = np.zeros((self.cfg.max_slots, C), np.int32)
@@ -914,8 +1166,19 @@ class ShiftEngine:
         if self.paged:
             args.append(jnp.asarray(self._block_tables([r for r, _ in rows])))
             self._apply_copies()
-        _, self.cache = self._prefill[mode](params, self.cache, *args,
-                                            *extras)
+        fault = (self.faults.at(self.step_count, "forward")
+                 if self.faults is not None else None)
+        if fault is not None:
+            self._fault_fired(fault)
+        if fault is None or fault.kind == "nan":
+            _, self.cache = self._prefill[mode](params, self.cache, *args,
+                                                *extras)
+        if fault is not None:
+            self._fail_step([r for r, _ in rows],
+                            sum(1 for r in self.active
+                                if self._prefill_done(r) and not r.done),
+                            attn_ctx if fault.kind == "nan" else 0)
+            return True
         for r, n in rows:
             r.prefilled += n
             r.last_used = self.step_count
@@ -932,7 +1195,8 @@ class ShiftEngine:
 
     def _run_decode(self):
         ready = [r for r in self.active
-                 if self._prefill_done(r) and not r.done]
+                 if self._prefill_done(r) and not r.done
+                 and self._retryable(r)]
         n_ready = len(ready)
         if self.paged:
             kept = []
@@ -962,8 +1226,17 @@ class ShiftEngine:
         if self.paged:
             args.append(jnp.asarray(self._block_tables(ready)))
             self._apply_copies()
-        nxt, self.cache = self._decode[mode](params, self.cache, *args)
-        nxt = np.asarray(nxt)
+        fault = (self.faults.at(self.step_count, "forward")
+                 if self.faults is not None else None)
+        if fault is not None:
+            self._fault_fired(fault)
+        if fault is None or fault.kind == "nan":
+            nxt, self.cache = self._decode[mode](params, self.cache, *args)
+            nxt = np.asarray(nxt)
+        if fault is not None:
+            self._fail_step(list(ready), n_ready,
+                            attn_ctx if fault.kind == "nan" else 0)
+            return True
         t = self.now()
         for r in ready:
             r.last_used = self.step_count
@@ -988,6 +1261,13 @@ class ShiftEngine:
         t0 = self.now()
         self._step_stats = None
         self._step_audit = None
+        self._step_fail_flag = False
+        # fault-tolerance pre-pass: deadlines first (an expired request
+        # must not consume this step's batch space), then the step's
+        # scheduled faults (route faults preempt before admission refills
+        # the failed row's slots)
+        self._expire_deadlines()
+        self._arm_step_faults()
         self._admit()
         if self.mixed:
             # fused prefill+decode batch: no iteration-granularity
@@ -1005,18 +1285,28 @@ class ShiftEngine:
                "config": None, **(self._step_stats or _EMPTY_STEP)}
         if self._step_audit is not None:
             rec.update(self._step_audit)
+        if self._step_fail_flag:
+            rec["failed"] = True
+            self.obs.inc("failed_steps_total")
         if self.paged_disabled_reason is not None:
             # the dense fallback must be visible in the step log, not just
             # at construction: dp-sharded deployments silently lost paging
             # (and mixed batching + prefix caching with it) once already
             rec["paged_disabled_reason"] = self.paged_disabled_reason
         self.obs.record_step(rec)
+        if self.watchdog.observe(dt):
+            self.obs.inc("straggler_steps_total")
+            self.obs.emit("straggler", step=self.step_count, dur_s=dt,
+                          flagged=self.watchdog.flagged)
         self.obs.set_gauge("queue_depth",
                            sum(1 for q in self.queue if q.slot is None))
         self.obs.set_gauge("active_requests", len(self.active))
         if self.paged:
             self.obs.set_gauge("free_blocks", self.kv.num_free_blocks)
         self.step_count += 1
+        if self.cfg.auto_snapshot_every \
+                and self.step_count % self.cfg.auto_snapshot_every == 0:
+            self._auto_snapshot()
         return progressed
 
     def run_until_idle(self, max_steps: int = 10000):
@@ -1033,6 +1323,7 @@ class ShiftEngine:
         in-flight request spans resume across a restore (the snapshot
         event itself is emitted first, so it is part of the capture)."""
         self.obs.emit("snapshot", step=self.step_count)
+        self.obs.inc("snapshots_total")
         snap = {
             "cache": jax.tree.map(np.asarray, self.cache),
             "lens": self.lens.copy(),
@@ -1043,10 +1334,12 @@ class ShiftEngine:
                  "row": r.row,
                  "prefilled": r.prefilled, "generated": list(r.generated),
                  "max_new_tokens": r.max_new_tokens, "arrival": r.arrival,
+                 "deadline": r.deadline,
                  "first_token_time": r.first_token_time,
                  "finish_time": r.finish_time, "last_used": r.last_used,
                  "cached_tokens": r.cached_tokens,
-                 "num_preemptions": r.num_preemptions}
+                 "num_preemptions": r.num_preemptions,
+                 "fail_count": r.fail_count, "retry_at": r.retry_at}
                 for r in self.queue + [x for x in self.slot_req
                                        if x is not None and x not in self.queue]],
         }
@@ -1058,12 +1351,103 @@ class ShiftEngine:
                 # would leak
                 snap["prefix"] = [idx.state_dict()
                                   for idx in self.prefix_rows]
+        if self.faults is not None:
+            f = self.faults.at(self.step_count, "snapshot")
+            if f is not None:
+                # the snapshot seam corrupts the CAPTURE; detection happens
+                # at recovery time (validate_snapshot), forcing recover()
+                # to fall back to an older retained snapshot
+                self._fault_fired(f)
+                corrupt_snapshot(snap, self.step_count)
         return snap
 
+    def _auto_snapshot(self):
+        """Periodic checkpoint into the retained ring (the durable-storage
+        stand-in the crash-recovery drill restores from)."""
+        self._snap_ring.append(self.snapshot())
+        del self._snap_ring[:-self.cfg.snapshot_keep]
+
+    def validate_snapshot(self, snap) -> None:
+        """Raise :class:`SnapshotError` if ``snap`` cannot be restored by
+        THIS engine. Called by ``restore`` before any mutation, so a
+        truncated/corrupted checkpoint leaves the engine untouched."""
+        if not isinstance(snap, dict):
+            raise SnapshotError(f"snapshot is {type(snap).__name__}, "
+                                "not a dict")
+        for key in ("cache", "lens", "requests"):
+            if key not in snap:
+                raise SnapshotError(f"snapshot missing required key {key!r}")
+        lens = snap["lens"]
+        if getattr(lens, "shape", None) != (self.cfg.max_slots,):
+            raise SnapshotError(
+                f"snapshot lens shape {getattr(lens, 'shape', None)} != "
+                f"engine max_slots ({self.cfg.max_slots},)")
+        seen_slots = set()
+        for rd in snap["requests"]:
+            if not isinstance(rd, dict):
+                raise SnapshotError("request entry is not a dict")
+            for key in ("rid", "prompt", "slot", "prefilled", "generated",
+                        "max_new_tokens"):
+                if key not in rd:
+                    raise SnapshotError(
+                        f"request entry missing required key {key!r}")
+            slot = rd["slot"]
+            if slot is not None:
+                if not (0 <= slot < self.cfg.max_slots):
+                    raise SnapshotError(f"request slot {slot} out of range "
+                                        f"[0, {self.cfg.max_slots})")
+                if slot in seen_slots:
+                    raise SnapshotError(f"duplicate request slot {slot}")
+                seen_slots.add(slot)
+        if self.paged:
+            if "kv" not in snap:
+                raise SnapshotError("paged engine restoring a snapshot "
+                                    "without the paged-KV state")
+            if snap["kv"].get("dp", 1) != self.dp:   # pre-dp snapshots: dp=1
+                raise SnapshotError(
+                    f"snapshot has dp={snap['kv'].get('dp', 1)}, "
+                    f"engine has dp={self.dp}")
+            if self.prefix_rows is not None:
+                # the per-row allocator snapshots carry the indexes' pins —
+                # restoring one without the other leaks every pinned block
+                if "prefix" not in snap:
+                    raise SnapshotError(
+                        "prefix-caching engine restoring a snapshot without "
+                        "the indexes (their allocator pins would leak)")
+                if len(snap["prefix"]) != self.dp:
+                    raise SnapshotError(
+                        f"snapshot has {len(snap['prefix'])} prefix indexes, "
+                        f"engine has dp={self.dp}")
+            elif "prefix" in snap:
+                raise SnapshotError(
+                    "snapshot carries prefix indexes but this engine has "
+                    "prefix_cache=False (their allocator pins would leak)")
+
+    def recover(self, snapshots=None):
+        """Crash recovery: restore the newest snapshot that validates,
+        falling back through older retained ones (a scheduled snapshot
+        fault corrupts a capture; the ring absorbs it). Raises
+        :class:`SnapshotError` when nothing restorable remains."""
+        ring = self._snap_ring if snapshots is None else list(snapshots)
+        for snap in reversed(ring):
+            try:
+                self.validate_snapshot(snap)
+            except SnapshotError:
+                continue
+            self.restore(snap)
+            self.obs.inc("recoveries_total")
+            self.obs.emit("recovered", step=self.step_count,
+                          n_requests=len(self.queue))
+            return self
+        raise SnapshotError("no valid snapshot to recover from")
+
     def restore(self, snap):
-        """Rebuild engine state from ``snapshot()``. The in-flight prefill
-        registry is intentionally NOT restored (worst case: one duplicated
-        shared-span prefill right after a restart)."""
+        """Rebuild engine state from ``snapshot()``. Validates first and
+        raises :class:`SnapshotError` on a malformed/corrupted snapshot
+        WITHOUT touching engine state. The in-flight prefill registry is
+        intentionally NOT restored (worst case: one duplicated shared-span
+        prefill right after a restart)."""
+        self.validate_snapshot(snap)
         self.cache = jax.tree.map(jnp.asarray, snap["cache"])
         self.lens = snap["lens"].copy()
         # observability resumes where the snapshot left off: counters stay
@@ -1074,27 +1458,15 @@ class ShiftEngine:
         if snap.get("obs") is not None and self.obs.enabled:
             self.obs.load_state(snap["obs"])
         if self.paged:
-            assert "kv" in snap, "paged engine restoring a dense snapshot"
+            # presence/shape of kv+prefix already checked by
+            # validate_snapshot, so the mutation below cannot half-apply
             self.kv = PagedKVCache.from_state(snap["kv"])
-            assert self.kv.dp == self.dp, \
-                f"snapshot has dp={self.kv.dp}, engine has dp={self.dp}"
             if self.prefix_rows is not None:
-                assert "prefix" in snap, \
-                    "prefix-caching engine restoring a snapshot without " \
-                    "the indexes (their allocator pins would leak)"
-                assert len(snap["prefix"]) == self.dp
                 self.prefix_rows = [
                     PrefixIndex.from_state(s, self.kv.allocators[r])
                     for r, s in enumerate(snap["prefix"])]
                 self.kv.prefix_indices = list(self.prefix_rows)
                 self._attach_prefix_observers()
-            else:
-                # symmetric guard: the snapshot's allocator refcounts carry
-                # one pin per index entry — restoring without rebuilding
-                # the indexes would leak every pinned block unreachably
-                assert "prefix" not in snap, \
-                    "snapshot carries prefix indexes but this engine has " \
-                    "prefix_cache=False (their allocator pins would leak)"
             self._inflight = [dict() for _ in range(self.dp)]
             self._refresh_block_tables()   # from_state marks all rows dirty
         self.slot_req = [None] * self.cfg.max_slots
@@ -1106,13 +1478,48 @@ class ShiftEngine:
             r.row = rd.get("row")
             r.prefilled = rd["prefilled"]
             r.generated = list(rd["generated"])
+            r.deadline = rd.get("deadline")
             r.first_token_time = rd.get("first_token_time")
             r.finish_time = rd.get("finish_time")
             r.last_used = rd.get("last_used", 0)
             r.cached_tokens = rd.get("cached_tokens", 0)
             r.num_preemptions = rd.get("num_preemptions", 0)
+            r.fail_count = rd.get("fail_count", 0)
+            r.retry_at = rd.get("retry_at", 0)
             if r.slot is not None:
                 self.slot_req[r.slot] = r
             self.queue.append(r)
         self.obs.emit("restore", step=self.step_count)
         return self
+
+    def drain(self, max_steps: int = 10000, release_cache: bool = True):
+        """Graceful shutdown: finish in-flight decodes, shed requests that
+        never got a slot, accept nothing new. With ``release_cache`` the
+        prefix pins are dropped too, so afterwards the block accounting is
+        exactly zero (the chaos drills assert it)."""
+        self.draining = True
+        for r in [q for q in self.queue if q.slot is None
+                  and q.num_preemptions == 0 and not q.generated]:
+            self._retire(r, FinishReason.SHED)
+        for _ in range(max_steps):
+            if not self.step() and not self.queue:
+                break
+        # anything still queued after the step budget (quarantine-backoff
+        # stragglers, preempted requests that never re-fit) is shed — the
+        # terminal-outcome contract holds even on a bounded shutdown
+        for r in list(self.queue):
+            self._retire(r, FinishReason.SHED)
+        if release_cache and self.prefix_rows is not None:
+            for idx in self.prefix_rows:
+                idx.evict(len(idx))
+        return self
+
+    def block_accounting(self) -> dict:
+        """Paged-block ledger for leak checks: ``used`` counts per-sequence
+        mappings, ``pinned`` counts prefix-index pins. Both must be zero
+        after ``drain()`` — any remainder is a leaked block."""
+        if not self.paged:
+            return {"used": 0, "pinned": 0}
+        return {"used": self.kv.num_used_blocks,
+                "pinned": sum(len(idx.blocks())
+                              for idx in (self.prefix_rows or []))}

@@ -1,8 +1,23 @@
 """Request lifecycle for the serving engine."""
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass, field
 from typing import List, Optional
+
+
+class FinishReason(str, enum.Enum):
+    """Typed terminal outcome — every request the engine accepts ends in
+    exactly one of these (the fault-tolerance contract: no request is ever
+    silently dropped, even under injected faults or shutdown)."""
+    OK = "ok"                 # produced its final token
+    TIMEOUT = "timeout"       # deadline passed before completion
+    CANCELLED = "cancelled"   # explicit cancel(rid)
+    SHED = "shed"             # bounded-queue shed policy / shutdown drain
+    FAILED = "failed"         # quarantined: killed the step too many times
+
+    def __str__(self):        # str(FinishReason.OK) == "ok" in logs/events
+        return self.value
 
 
 @dataclass(eq=False)                  # identity equality — requests go in sets
@@ -11,6 +26,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     arrival: float = 0.0
+    deadline: Optional[float] = None  # absolute (engine-clock) time after
+    #                                   which the request times out; None =
+    #                                   engine default (cfg.deadline_s past
+    #                                   arrival) or no deadline
 
     # engine state -----------------------------------------------------------
     slot: Optional[int] = None
@@ -37,8 +56,15 @@ class Request:
     generated: List[int] = field(default_factory=list)
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    finish_reason: Optional[FinishReason] = None
     last_used: int = 0                # engine step that last batched this
     num_preemptions: int = 0
+    # fault-tolerance state: how many failed steps this request was part
+    # of (quarantine fires when it reaches the engine's limit), and the
+    # step index before which it must not be batched/admitted again
+    # (step-counted retry backoff).
+    fail_count: int = 0
+    retry_at: int = 0
 
     def all_tokens(self) -> List[int]:
         """Prompt plus generated — after a preemption the whole thing is the

@@ -1,4 +1,10 @@
 from .watchdog import StragglerWatchdog
 from .elastic import reshard_params, rebuild_layout
+from .faults import (Fault, FaultPlan, InjectedFault, SnapshotError,
+                     corrupt_snapshot, random_plan)
+from .recovery import DeliveryLog, ReplayDivergence
 
-__all__ = ["StragglerWatchdog", "reshard_params", "rebuild_layout"]
+__all__ = ["StragglerWatchdog", "reshard_params", "rebuild_layout",
+           "Fault", "FaultPlan", "InjectedFault", "SnapshotError",
+           "corrupt_snapshot", "random_plan",
+           "DeliveryLog", "ReplayDivergence"]

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import time
 
 # must land before jax initializes so a CPU demo can run --dp > 1
@@ -20,6 +21,7 @@ from repro.configs import get_config
 from repro.core.policy import (DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy,
                                AdaptivePolicy)
 from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.ft import random_plan
 from repro.models import build_model
 from repro.models.model import Model
 from repro.obs import build_report, format_report, write_chrome_trace
@@ -31,7 +33,9 @@ def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
                  slots=8, s_max=256, chunk=64,
                  threshold=DEFAULT_SHIFT_THRESHOLD, adaptive=False,
                  paged=None, block_size=16, num_blocks=0, prefix_cache=False,
-                 dp=1, dtype=jnp.float32):
+                 dp=1, dtype=jnp.float32, deadline_s=None, max_queue=0,
+                 shed_policy="reject-newest", auto_snapshot_every=0,
+                 faults=None):
     """One ShiftEngine over an optional (data, sp, tp) mesh. With dp > 1
     (and no explicit mesh) a dp×1×1 test mesh is built: the engine pages
     per dp row — each row owns a private block pool and prefix index, and
@@ -63,8 +67,11 @@ def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
     ecfg = EngineConfig(max_slots=slots, s_max=s_max, prefill_chunk=chunk,
                         threshold=threshold, paged=paged,
                         block_size=block_size, num_blocks=num_blocks,
-                        prefix_cache=prefix_cache)
-    return ShiftEngine(base, shift, p_base, p_shift, ecfg, policy=policy)
+                        prefix_cache=prefix_cache, deadline_s=deadline_s,
+                        max_queue=max_queue, shed_policy=shed_policy,
+                        auto_snapshot_every=auto_snapshot_every)
+    return ShiftEngine(base, shift, p_base, p_shift, ecfg, policy=policy,
+                       faults=faults)
 
 
 def main():
@@ -96,25 +103,77 @@ def main():
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write a Chrome trace-event file (load in "
                          "chrome://tracing or ui.perfetto.dev) to PATH")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds past arrival); "
+                         "expired requests finish with reason=timeout")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound on requests waiting for a slot; 0 = "
+                         "unbounded. Overflow is shed per --shed-policy")
+    ap.add_argument("--shed-policy", default="reject-newest",
+                    choices=["reject-newest", "evict-longest-queued"])
+    ap.add_argument("--auto-snapshot-every", type=int, default=0,
+                    help="checkpoint engine state every N steps into the "
+                         "retained snapshot ring (crash recovery)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="inject a seeded deterministic fault storm "
+                         "(see repro.ft.random_plan)")
+    ap.add_argument("--fault-steps", type=int, default=64,
+                    help="steps covered by the seeded fault storm")
+    ap.add_argument("--p-fault", type=float, default=0.05,
+                    help="per-step per-seam fault probability for the "
+                         "seeded storm (alloc/forward/route seams)")
     args = ap.parse_args()
 
+    faults = None
+    if args.fault_seed is not None:
+        faults = random_plan(args.fault_seed, args.fault_steps,
+                             p_alloc=args.p_fault, p_forward=args.p_fault,
+                             p_route=args.p_fault, dp=args.dp)
+        print(f"fault plan: seed={args.fault_seed} "
+              f"{len(faults)} faults over {args.fault_steps} steps")
     eng = build_engine(args.arch, adaptive=args.adaptive,
                        block_size=args.block_size,
                        num_blocks=args.num_blocks,
                        prefix_cache=args.prefix_cache,
-                       dp=args.dp)
+                       dp=args.dp, deadline_s=args.deadline_s,
+                       max_queue=args.max_queue,
+                       shed_policy=args.shed_policy,
+                       auto_snapshot_every=args.auto_snapshot_every,
+                       faults=faults)
     system = list(range(1000, 1000 + args.shared_prefix))
     reqs = [Request(i, system + list(range(1, 20 + 3 * i)),
                     max_new_tokens=args.max_new, arrival=time.monotonic())
             for i in range(args.requests)]
     for r in reqs:
         eng.add_request(r)
+
+    # graceful shutdown: SIGTERM (and Ctrl-C) drains in-flight decodes and
+    # sheds the queue, so every request still reaches a typed terminal
+    # outcome and the metrics/trace artifacts are flushed below
+    def _sigterm(signum, frame):
+        raise KeyboardInterrupt
+    try:
+        signal.signal(signal.SIGTERM, _sigterm)
+    except ValueError:
+        pass                          # not on the main thread (tests)
+
     t0 = time.monotonic()
-    eng.run_until_idle()
+    interrupted = False
+    try:
+        eng.run_until_idle()
+    except KeyboardInterrupt:
+        interrupted = True
+        print("\ninterrupt: draining in-flight requests, shedding queue...")
+        eng.drain()
     dt = time.monotonic() - t0
+    if interrupted:
+        acct = eng.block_accounting()
+        print(f"drained: used={acct['used']} pinned={acct['pinned']} "
+              "blocks after shutdown")
     for r in reqs:
         ttft = (r.first_token_time - r.arrival) if r.first_token_time else -1
-        print(f"req {r.rid}: {len(r.generated)} tokens, ttft={ttft*1e3:.0f}ms, "
+        print(f"req {r.rid}: {len(r.generated)} tokens, "
+              f"reason={r.finish_reason}, ttft={ttft*1e3:.0f}ms, "
               f"out={r.generated[:8]}...")
     n_tok = sum(len(r.generated) for r in reqs)
     # totals, not config_trace.count(): the trace is a rolling window

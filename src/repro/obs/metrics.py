@@ -92,6 +92,8 @@ class MetricsRegistry:
                 f"{tuple(sorted(labels))}")
         if "config" in labels and labels["config"] not in schema.CONFIGS:
             raise ValueError(f"unknown config label {labels['config']!r}")
+        if "seam" in labels and labels["seam"] not in schema.SEAMS:
+            raise ValueError(f"unknown seam label {labels['seam']!r}")
 
     def counter(self, name: str, **labels) -> Counter:
         key = (name, _label_key(labels))

@@ -59,7 +59,33 @@ COUNTERS = {
         ("Cached prefix blocks reclaimed under memory pressure", ()),
     "cow_copies_total":
         ("Copy-on-write physical block copies applied", ()),
+    # ------------------------------------------------- fault tolerance
+    "requests_timeout_total":
+        ("Requests terminated because their deadline passed", ()),
+    "requests_cancelled_total":
+        ("Requests terminated by an explicit cancel()", ()),
+    "requests_shed_total":
+        ("Requests rejected or evicted by the bounded admission queue", ()),
+    "requests_failed_total":
+        ("Requests quarantined after repeatedly killing the step", ()),
+    "faults_injected_total":
+        ("Deterministic faults fired from a FaultPlan, by seam", ("seam",)),
+    "retries_total":
+        ("Recompute/backoff retries scheduled after a failed step", ()),
+    "failed_steps_total":
+        ("Engine iterations that failed (poisoned or raised forward)", ()),
+    "straggler_steps_total":
+        ("Iterations the StragglerWatchdog flagged as abnormally slow", ()),
+    "snapshots_total":
+        ("Engine state snapshots captured (auto or explicit)", ()),
+    "recoveries_total":
+        ("Successful recover() restores from a retained snapshot", ()),
 }
+
+# ``seam`` label values: the named injection points of repro.ft.faults —
+# allocator OOM on ensure/COW, poisoned forward step, dp-row routing
+# failure, snapshot corruption, and the harness-level crash drill.
+SEAMS = ("alloc", "forward", "route", "snapshot", "crash")
 
 # ----------------------------------------------------------------- gauges
 GAUGES = {
@@ -103,6 +129,15 @@ EVENTS = (
     "finish",        # final token sampled (attrs carry the span summary)
     "snapshot",      # engine state captured
     "restore",       # engine state restored
+    # ------------------------------------------------- fault tolerance
+    "timeout",       # request terminated: deadline passed
+    "cancelled",     # request terminated: explicit cancel()
+    "shed",          # request terminated: bounded-queue shed policy
+    "fault_injected",  # a FaultPlan fault fired (attrs carry seam/kind)
+    "retry",         # request scheduled for recompute/backoff retry
+    "quarantined",   # request terminated: killed the step too many times
+    "recovered",     # engine state recovered from a retained snapshot
+    "straggler",     # watchdog flagged this step as abnormally slow
 )
 
 # ------------------------------------------------------ step audit record
@@ -116,7 +151,7 @@ EVENTS = (
 STEP_REQUIRED = ("step", "t_start", "dur_s", "config", "prefill_tokens",
                  "decode_tokens", "ready_decodes", "attn_ctx_tokens")
 STEP_OPTIONAL = ("n_tokens", "ctx_tokens", "ctx_max", "n_rows", "threshold",
-                 "paged_disabled_reason", "replica")
+                 "paged_disabled_reason", "replica", "failed")
 
 # counters both the engine and the simulator must emit (the shared core of
 # the schema; either may additionally emit any other declared metric)

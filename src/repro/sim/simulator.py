@@ -24,6 +24,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.cache import blocks_for_tokens
+from repro.ft.faults import FaultPlan
 from repro.obs import Observability
 from .costmodel import CostModel, Strategy
 
@@ -50,9 +51,14 @@ class SimRequest:
     start: float = -1.0
     first_token: float = -1.0
     finish: float = -1.0
+    finish_reason: str = ""           # engine FinishReason vocabulary:
+    #                                   ok|timeout|cancelled|shed|failed
     prefilled: int = 0
     decoded: int = 0
     shared_blocks: int = 0            # KV blocks this request maps shared
+    # fault-tolerance state, mirroring the engine's recompute-retry
+    fail_count: int = 0
+    retry_at: int = 0
 
     @property
     def ttft(self):
@@ -87,13 +93,30 @@ class ServeSim:
                  max_concurrent: int = 64, prefill_chunk: int = 2048,
                  kv_capacity_tokens: Optional[int] = None,
                  kv_block_size: int = 16, mixed: bool = True,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 deadline_s: Optional[float] = None, max_queue: int = 0,
+                 shed_policy: str = "reject-newest",
+                 quarantine_after: int = 3, retry_backoff: int = 2):
         self.cost = cost
         self.strategy = strategy
         self.n = n_chips
         self.chunk = prefill_chunk
         self.max_conc = max_concurrent
         self.block_size = kv_block_size
+        # fault-tolerance knobs, same vocabulary (and defaults) as the
+        # engine's EngineConfig: a FaultPlan keyed by the sim's global step
+        # index, per-request deadlines, a bounded queue with a shed policy,
+        # and recompute-retry with quarantine. A (plan, trace) pair can be
+        # replayed against engine and sim for a like-for-like fault A/B.
+        if shed_policy not in ("reject-newest", "evict-longest-queued"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r}")
+        self.faults = faults
+        self.deadline_s = deadline_s
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.quarantine_after = quarantine_after
+        self.retry_backoff = retry_backoff
         # prefix_cache=True models the engine's hash-indexed prefix reuse:
         # requests annotated with (prefix_id, prefix_len) skip the shared
         # span's prefill after a seeding request has written it, and the
@@ -167,11 +190,94 @@ class ServeSim:
             return 0
         return min(r.prefix_len, r.n_in - 1) // self.block_size
 
+    _REASON_COUNTER = {"timeout": "requests_timeout_total",
+                       "cancelled": "requests_cancelled_total",
+                       "shed": "requests_shed_total",
+                       "failed": "requests_failed_total"}
+    _REASON_EVENT = {"timeout": "timeout", "cancelled": "cancelled",
+                     "shed": "shed", "failed": "quarantined"}
+
+    def _terminal(self, r: SimRequest, reason: str, rep: ReplicaState):
+        """Retire ``r`` with a non-OK terminal outcome (same counter/event
+        vocabulary as the engine)."""
+        r.finish = rep.t
+        r.finish_reason = reason
+        self.obs.inc(self._REASON_COUNTER[reason])
+        self.obs.emit(self._REASON_EVENT[reason], step=self.step_count,
+                      ts=rep.t, rid=r.rid, row=rep.idx, n_out=r.decoded,
+                      fail_count=r.fail_count)
+
+    def _fault_fired(self, fault, rep: ReplicaState):
+        self.obs.inc("faults_injected_total", seam=fault.seam)
+        self.obs.emit("fault_injected", step=self.step_count, ts=rep.t,
+                      seam=fault.seam, fault_kind=fault.kind, row=fault.row)
+
+    def _fail(self, r: SimRequest, rep: ReplicaState, requeue: bool = False):
+        """Recompute-retry a request that was part of a failed step:
+        cumulative fail count, quarantine at the limit, step-counted
+        backoff otherwise; ``requeue`` additionally preempts it back to the
+        queue with its prefill discarded (the route-fault path)."""
+        r.fail_count += 1
+        if r.fail_count >= self.quarantine_after:
+            if r in rep.active:
+                rep.active.remove(r)
+            if r in rep.queue:
+                rep.queue.remove(r)
+            self._terminal(r, "failed", rep)
+            return
+        r.retry_at = self.step_count + 1 + self.retry_backoff * r.fail_count
+        self.obs.inc("retries_total")
+        self.obs.emit("retry", step=self.step_count, ts=rep.t, rid=r.rid,
+                      fail_count=r.fail_count, retry_at=r.retry_at)
+        if requeue and r in rep.active:
+            rep.active.remove(r)
+            r.prefilled = 0
+            r.shared_blocks = 0
+            rep.queue.append(r)
+
+    def _expire_deadlines(self, rep: ReplicaState):
+        if self.deadline_s is None:
+            return
+        for pool in (rep.active, rep.queue):
+            for r in [x for x in pool
+                      if rep.t > x.arrival + self.deadline_s]:
+                pool.remove(r)
+                self._terminal(r, "timeout", rep)
+
+    def _enforce_queue_bound(self, rep: ReplicaState):
+        while self.max_queue and len(rep.queue) > self.max_queue:
+            if self.shed_policy == "reject-newest":
+                victim = rep.queue.pop()
+            else:                          # evict-longest-queued
+                victim = min(rep.queue, key=lambda x: x.arrival)
+                rep.queue.remove(victim)
+            self._terminal(victim, "shed", rep)
+
     def _iteration(self, rep: ReplicaState):
         """Run one engine iteration on a replica; returns elapsed time."""
+        self._expire_deadlines(rep)
+        fault_alloc = fault_fwd = fault_route = None
+        if self.faults is not None:
+            fault_alloc = self.faults.at(self.step_count, "alloc")
+            fault_fwd = self.faults.at(self.step_count, "forward")
+            f = self.faults.at(self.step_count, "route")
+            if f is not None and f.row == rep.idx:
+                fault_route = f
+        if fault_route is not None:
+            # the replica "fails" for this step: every active request is
+            # preempted back to the queue for recompute-retry
+            self._fault_fired(fault_route, rep)
+            for r in list(rep.active):
+                self._fail(r, rep, requeue=True)
+        if fault_alloc is not None:
+            # the step's allocation attempt behaves as an OOM: no
+            # admission this iteration
+            self._fault_fired(fault_alloc, rep)
         # admit (block-granular, like the engine's admission control)
         kv_used = self._used_blocks(rep)
-        for q in list(rep.queue):
+        for q in [] if fault_alloc is not None else list(rep.queue):
+            if q.retry_at > self.step_count:
+                continue
             matched = (self._matched_blocks(q)
                        if q.prefix_id in rep.resident else 0)
             need = blocks_for_tokens(q.n_in + 1, self.block_size) - matched
@@ -214,18 +320,28 @@ class ServeSim:
                           cached_tokens=q.prefilled)
             kv_used += need
         if not rep.active:
+            if any(q.retry_at > self.step_count for q in rep.queue):
+                # everything queued is inside a retry-backoff window: idle
+                # tick instead of reporting an (apparently) drained replica
+                rep.t += 1e-4
+                self.step_count += 1
+                return 1e-4
             return 0.0
-        # chunked prefill + decode batch composition
-        n_ready = sum(1 for r in rep.active
+        # chunked prefill + decode batch composition (requests inside a
+        # retry-backoff window are not batched)
+        batchable = [r for r in rep.active if r.retry_at <= self.step_count]
+        n_ready = sum(1 for r in batchable
                       if r.prefilled >= r.n_in and r.decoded < r.n_out)
         n_prefill = 0
-        for r in rep.active:
+        takes = []                    # (req, tokens) — reverted on a fault
+        for r in batchable:
             if r.prefilled < r.n_in:
                 take = min(self.chunk - n_prefill, r.n_in - r.prefilled)
                 if take <= 0:
                     break
                 r.prefilled += take
                 n_prefill += take
+                takes.append((r, take))
         if self.prefix_cache:
             # a request that has prefilled past its shared span seeds the
             # prefix for later arrivals; its own blocks become the shared
@@ -241,9 +357,16 @@ class ServeSim:
         if not self.mixed and n_prefill:
             deco = []                  # serialized: prefill-priority step
         else:
-            deco = [r for r in rep.active if r.prefilled >= r.n_in
+            deco = [r for r in batchable if r.prefilled >= r.n_in
                     and r.decoded < r.n_out]
         n_decode = len(deco)
+        if n_prefill == 0 and n_decode == 0:
+            # every active request is inside its retry-backoff window:
+            # idle tick so the virtual clock and step index advance past
+            # the window instead of deadlocking the run loop
+            rep.t += 1e-4
+            self.step_count += 1
+            return 1e-4
         # the ACTUAL per-row contexts of this iteration — the
         # work-proportional kernel prices these, not s_max or a bucket
         ctxs = [r.prefilled + r.decoded for r in rep.active] or [1]
@@ -265,6 +388,26 @@ class ServeSim:
             cfgname = self.strategy
         t0 = rep.t
         rep.t += dt
+        if fault_fwd is not None:
+            # poisoned forward: the iteration's time is spent (the launch
+            # ran or failed — either way the step is lost) but it yields
+            # no tokens; every batched request enters recompute-retry
+            self._fault_fired(fault_fwd, rep)
+            for r, take in takes:
+                r.prefilled -= take
+            self.obs.record_step({
+                "step": self.step_count, "t_start": t0, "dur_s": dt,
+                "config": cfgname, "prefill_tokens": 0, "decode_tokens": 0,
+                "ready_decodes": n_ready, "failed": True,
+                "attn_ctx_tokens": 0, "n_tokens": 0, "ctx_tokens": 0,
+                "replica": rep.idx})
+            self.obs.inc("failed_steps_total")
+            self.step_count += 1
+            batched = [x for x, _ in takes]
+            batched += [r for r in deco if r not in batched]
+            for r in batched:
+                self._fail(r, rep)
+            return dt
         self.trace_tokens.append((rep.t, n_prefill + n_decode))
         self.obs.record_step({
             "step": self.step_count, "t_start": t0, "dur_s": dt,
@@ -284,6 +427,7 @@ class ServeSim:
                               rid=r.rid, ttft_s=ttft)
             if r.decoded >= r.n_out:
                 r.finish = rep.t
+                r.finish_reason = "ok"
                 e2e = r.finish - r.arrival
                 tpot = r.tpot if r.n_out > 1 else None
                 self.obs.inc("requests_finished_total")
@@ -348,6 +492,7 @@ class ServeSim:
                                   ts=q.arrival, rid=q.rid,
                                   prompt_tokens=q.n_in,
                                   max_new_tokens=q.n_out, arrival=q.arrival)
+                    self._enforce_queue_bound(rep)
                 if not rep.active and not rep.queue:
                     if pending:
                         rep.t = max(rep.t, pending[0].arrival)
@@ -376,7 +521,12 @@ def simulate(cfg, trace, strategy: str, hw=None, n_chips: int = 8,
         pid, plen = (int(tr[3]), int(tr[4])) if len(tr) > 3 else (-1, 0)
         reqs.append(SimRequest(i, t, ni, no, prefix_id=pid, prefix_len=plen))
     reqs = sim.run(reqs)
-    done = [r for r in reqs if r.finish >= 0]
+    done = [r for r in reqs if r.finish >= 0
+            and r.finish_reason in ("", "ok")]
+    outcomes = {}
+    for r in reqs:
+        key = r.finish_reason or ("ok" if r.finish >= 0 else "unfinished")
+        outcomes[key] = outcomes.get(key, 0) + 1
     ttfts = [r.ttft for r in done if r.first_token >= 0]
     tpots = [r.tpot for r in done if r.n_out > 1]
     comps = [r.completion for r in done]
@@ -393,6 +543,7 @@ def simulate(cfg, trace, strategy: str, hw=None, n_chips: int = 8,
     makespan = max((r.finish for r in done), default=1e-9)
     return {
         "strategy": strategy, "n_done": len(done),
+        "outcomes": outcomes,
         "iterations": sim.iterations,
         "starved_steps": sim.starved_steps,
         "prefill_tokens_saved": sim.prefill_tokens_saved,

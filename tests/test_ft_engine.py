@@ -1,0 +1,247 @@
+"""Engine fault-tolerance drills: typed terminal outcomes for every
+request, deterministic fault injection at the engine's seams, recompute-
+retry with quarantine, graceful drain with zero-leak block accounting, and
+the straggler watchdog wiring."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine.request import FinishReason
+from repro.ft import Fault, FaultPlan, StragglerWatchdog
+from repro.models import build_model
+
+
+class Always:
+    def __init__(self, b):
+        self.b = b
+
+    def use_base(self, n, p=0):
+        return self.b
+
+
+@pytest.fixture(scope="module")
+def mp():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _engine(mp, faults=None, now=None, **kw):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    kws = {"now": now} if now is not None else {}
+    return ShiftEngine(m, m, params, params, ecfg, policy=Always(True),
+                       faults=faults, **kws)
+
+
+def _reqs(n=2, n_new=4, start=1):
+    return [Request(i, list(range(start, start + 9 + i)),
+                    max_new_tokens=n_new) for i in range(n)]
+
+
+def _run(eng, reqs, max_steps=400):
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle(max_steps=max_steps)
+    return {r.rid: tuple(r.generated) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# typed terminal outcomes
+# ---------------------------------------------------------------------------
+def test_ok_requests_get_finish_reason(mp):
+    eng = _engine(mp)
+    reqs = _reqs()
+    _run(eng, reqs)
+    assert all(r.finish_reason is FinishReason.OK for r in reqs)
+    assert all(r.finish_time is not None for r in reqs)
+
+
+def test_deadline_expires_to_timeout(mp):
+    clock = {"t": 0.0}
+    eng = _engine(mp, now=lambda: clock["t"], deadline_s=10.0)
+    slow = Request(0, list(range(1, 10)), max_new_tokens=4, arrival=0.0)
+    eng.add_request(slow)
+    assert slow.deadline == 10.0        # engine default applied
+    eng.step()
+    clock["t"] = 11.0                   # past the deadline mid-flight
+    eng.run_until_idle()
+    assert slow.finish_reason is FinishReason.TIMEOUT
+    assert eng.obs.registry.counter_total("requests_timeout_total") == 1
+    assert slow.slot is None            # blocks freed on retirement
+
+
+def test_cancel_frees_slot_and_blocks(mp):
+    eng = _engine(mp)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    eng.step()                          # admit + start prefilling
+    assert eng.cancel(reqs[0].rid)
+    assert reqs[0].finish_reason is FinishReason.CANCELLED
+    assert not eng.cancel(reqs[0].rid)  # already terminal
+    assert not eng.cancel(999)          # never submitted
+    eng.run_until_idle()
+    assert reqs[1].finish_reason is FinishReason.OK
+    eng.drain()
+    acct = eng.block_accounting()
+    assert acct["used"] == 0 and acct["pinned"] == 0
+
+
+@pytest.mark.parametrize("policy,shed_rids", [
+    ("reject-newest", {2, 3, 4}),       # later arrivals bounce off the bound
+    ("evict-longest-queued", {1, 2, 3}),  # oldest waiters are evicted
+])
+def test_bounded_queue_shed_policy(mp, policy, shed_rids):
+    # max_slots=1 so exactly one request is admitted and the rest contend
+    # for the single queue seat (max_queue=1)
+    m, params = mp
+    ecfg = EngineConfig(max_slots=1, s_max=64, prefill_chunk=8,
+                        max_queue=1, shed_policy=policy)
+    eng = ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
+    reqs = _reqs(5)
+    eng.add_request(reqs[0])
+    eng.step()                          # rid 0 admitted (slot taken)
+    for r in reqs[1:]:
+        eng.add_request(r)              # queue bound of 1 -> 3 shed
+    shed = {r.rid for r in reqs if r.finish_reason is FinishReason.SHED}
+    assert shed == shed_rids
+    eng.run_until_idle()
+    survivors = {r.rid for r in reqs
+                 if r.finish_reason is FinishReason.OK}
+    assert survivors == {0, 1, 2, 3, 4} - shed_rids
+    assert all(r.finish_reason is not None for r in reqs)
+
+
+def test_unknown_shed_policy_rejected(mp):
+    with pytest.raises(ValueError, match="shed_policy"):
+        _engine(mp, shed_policy="coin-flip")
+
+
+# ---------------------------------------------------------------------------
+# seeded fault injection at the engine seams
+# ---------------------------------------------------------------------------
+def test_alloc_fault_is_survived_bit_identically(mp):
+    ref = _run(_engine(mp, num_blocks=32), _reqs())
+    plan = FaultPlan([Fault(0, "alloc"), Fault(2, "alloc")])
+    eng = _engine(mp, faults=plan, num_blocks=32)
+    got = _run(eng, _reqs())
+    assert got == ref
+    assert len(plan.fired) >= 2
+    assert eng.obs.registry.counter_total("faults_injected_total") == 2
+
+
+@pytest.mark.parametrize("kind", ["nan", "raise"])
+def test_forward_fault_retries_bit_identically(mp, kind):
+    ref = _run(_engine(mp), _reqs())
+    # step 1 fails -> backoff until step 4; step 5's forward fails again
+    # (a fault scheduled INSIDE the backoff window would never fire: no
+    # forward launches while every request is backing off)
+    plan = FaultPlan([Fault(1, "forward", kind=kind),
+                      Fault(5, "forward", kind=kind)])
+    eng = _engine(mp, faults=plan)
+    reqs = _reqs()
+    got = _run(eng, reqs)
+    assert got == ref                   # recompute-retry is deterministic
+    assert all(r.finish_reason is FinishReason.OK for r in reqs)
+    assert eng.obs.registry.counter_total("failed_steps_total") == 2
+    assert eng.obs.registry.counter_total("retries_total") > 0
+    failed = [rec for rec in eng.step_log if rec.get("failed")]
+    assert len(failed) == 2             # failed steps are marked in the log
+    assert all(rec["decode_tokens"] == 0 and rec["prefill_tokens"] == 0
+               for rec in failed)       # a failed step yields no tokens
+
+
+def test_route_fault_preempts_row_bit_identically(mp):
+    ref = _run(_engine(mp), _reqs())
+    plan = FaultPlan([Fault(2, "route", row=0)])
+    eng = _engine(mp, faults=plan)
+    reqs = _reqs()
+    got = _run(eng, reqs)
+    assert got == ref
+    assert eng.preemptions > 0          # the row's requests were recomputed
+    assert all(r.finish_reason is FinishReason.OK for r in reqs)
+
+
+def test_relentless_forward_faults_quarantine(mp):
+    plan = FaultPlan([Fault(s, "forward", kind="raise")
+                      for s in range(400)])
+    eng = _engine(mp, faults=plan, quarantine_after=3)
+    reqs = _reqs(1)
+    _run(eng, reqs)
+    assert reqs[0].finish_reason is FinishReason.FAILED
+    assert reqs[0].fail_count == 3
+    assert eng.obs.registry.counter_total("requests_failed_total") == 1
+    assert not eng.queue                # terminal, not stuck
+
+
+def test_fault_storm_all_requests_terminal(mp):
+    """Under a seeded storm across every seam, every request still reaches
+    a typed terminal outcome and the block ledger drains to zero."""
+    from repro.ft import random_plan
+    plan = random_plan(11, 40, p_alloc=0.15, p_forward=0.15, p_route=0.1)
+    eng = _engine(mp, faults=plan, num_blocks=32, prefix_cache=True)
+    reqs = _reqs(4)
+    for r in reqs:
+        eng.add_request(r)
+    eng.drain(max_steps=400)
+    assert all(r.finish_reason is not None for r in reqs)
+    acct = eng.block_accounting()
+    assert acct == {"used": 0, "pinned": 0}
+
+
+# ---------------------------------------------------------------------------
+# graceful drain
+# ---------------------------------------------------------------------------
+def test_drain_finishes_inflight_and_sheds_queued(mp):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=1, s_max=64, prefill_chunk=8)
+    eng = ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
+    reqs = _reqs(3)
+    for r in reqs:
+        eng.add_request(r)
+    eng.step()                          # rid 0 admitted, 1-2 still queued
+    assert reqs[0].slot is not None
+    eng.drain()
+    assert reqs[0].finish_reason is FinishReason.OK   # in-flight completes
+    assert {r.finish_reason for r in reqs[1:]} == {FinishReason.SHED}
+    assert eng.block_accounting() == {"used": 0, "pinned": 0}
+    # requests arriving after shutdown are shed immediately
+    late = Request(9, list(range(1, 8)), max_new_tokens=2)
+    eng.add_request(late)
+    assert late.finish_reason is FinishReason.SHED
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog
+# ---------------------------------------------------------------------------
+def test_watchdog_flags_outlier_steps():
+    wd = StragglerWatchdog(window=8, factor=2.0)
+    assert not any(wd.observe(1.0) for _ in range(4))
+    assert wd.observe(5.0)              # > 2x rolling median
+    assert not wd.observe(1.0)
+    assert wd.flagged == 1
+
+
+def test_watchdog_wired_into_step_loop(mp):
+    clock = {"t": 0.0, "dt": 1.0}
+
+    def now():
+        clock["t"] += clock["dt"] / 2   # two calls per step -> dt total
+        return clock["t"]
+
+    eng = _engine(mp, now=now, straggler_factor=2.0)
+    assert eng.watchdog.factor == 2.0   # config knob reaches the watchdog
+    reqs = _reqs(1, n_new=8)
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(4):
+        eng.step()
+    clock["dt"] = 50.0                  # one pathologically slow step
+    eng.step()
+    clock["dt"] = 1.0
+    eng.run_until_idle()
+    assert eng.obs.registry.counter_total("straggler_steps_total") >= 1
+    assert any(e["kind"] == "straggler" for e in eng.obs.events.events)

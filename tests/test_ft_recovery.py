@@ -1,0 +1,197 @@
+"""Crash-recovery drills: periodic auto-snapshots, typed snapshot
+validation (malformed checkpoints cannot half-apply), recovery fallback
+through the retained ring, and exactly-once bit-identical token delivery
+across an injected crash."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine.request import FinishReason
+from repro.ft import (DeliveryLog, Fault, FaultPlan, SnapshotError,
+                      corrupt_snapshot)
+from repro.models import build_model
+
+
+class Always:
+    def __init__(self, b):
+        self.b = b
+
+    def use_base(self, n, p=0):
+        return self.b
+
+
+@pytest.fixture(scope="module")
+def mp():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _engine(mp, **kw):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    return ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
+
+
+def _reqs(n=2, n_new=6):
+    return [Request(i, list(range(1, 10 + i)), max_new_tokens=n_new)
+            for i in range(n)]
+
+
+def _reference_streams(mp):
+    eng = _engine(mp)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    eng.run_until_idle()
+    assert all(r.finish_reason is FinishReason.OK for r in reqs)
+    return {r.rid: list(r.generated) for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# the drill: crash mid-serve, recover, streams are exactly-once identical
+# ---------------------------------------------------------------------------
+def test_crash_recovery_streams_exactly_once_bit_identical(mp):
+    ref = _reference_streams(mp)
+
+    eng = _engine(mp, auto_snapshot_every=3)
+    log = DeliveryLog()                 # the frontend: owns delivery cursors
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    live = {r.rid: r for r in reqs}
+    for _ in range(7):                  # snapshots at steps 3 and 6 ...
+        eng.step()
+        log.poll(live.values())         # stream tokens as they appear
+    assert len(eng._snap_ring) == 2
+    pre_crash = {rid: log.delivered(rid) for rid in live}
+    assert any(pre_crash.values())      # tokens WERE delivered pre-crash
+
+    # crash: the engine object is gone; only the snapshot ring (durable
+    # storage stand-in) and the delivery log (frontend) survive
+    ring = eng._snap_ring
+    eng2 = _engine(mp, auto_snapshot_every=3)
+    eng2.recover(ring)
+    assert eng2.obs.registry.counter_total("recoveries_total") == 1
+    live2 = {r.rid: r for r in eng2.queue}
+    assert set(live2) == set(live)      # no request lost in the crash
+    # replay: tokens regenerated after the snapshot must match what was
+    # already streamed (DeliveryLog raises ReplayDivergence otherwise)
+    # and clients receive each token exactly once
+    while eng2.queue or eng2.active:
+        eng2.step()
+        log.poll(live2.values())
+    for rid, r in live2.items():
+        assert r.finish_reason is FinishReason.OK
+        assert log.delivered(rid) == ref[rid]          # bit-identical
+        assert list(r.generated) == ref[rid]
+
+
+def test_recovery_falls_back_past_corrupted_snapshot(mp):
+    ref = _reference_streams(mp)
+    # the snapshot captured at step 6 is corrupted in place by the fault;
+    # the retained ring still holds the good step-3 capture
+    plan = FaultPlan([Fault(6, "snapshot")])
+    eng = _engine(mp, auto_snapshot_every=3)
+    eng.faults = plan
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(7):
+        eng.step()
+    assert eng._snap_ring[-1].get("corrupted")
+    assert plan.fired
+
+    eng2 = _engine(mp)
+    eng2.recover(eng._snap_ring)
+    assert eng2.step_count == 3         # fell back to the older capture
+    live = {r.rid: r for r in eng2.queue}
+    eng2.run_until_idle()
+    assert {rid: list(r.generated) for rid, r in live.items()} == ref
+
+
+def test_recover_with_nothing_valid_raises(mp):
+    eng = _engine(mp)
+    with pytest.raises(SnapshotError, match="no valid snapshot"):
+        eng.recover([])
+    with pytest.raises(SnapshotError, match="no valid snapshot"):
+        eng.recover([{"not": "a snapshot"}, 42])
+
+
+# ---------------------------------------------------------------------------
+# typed snapshot validation: malformed restores cannot half-apply
+# ---------------------------------------------------------------------------
+def _fingerprint(eng):
+    return (eng.step_count, eng.lens.copy().tolist(),
+            [r.rid for r in eng.queue],
+            [None if r is None else r.rid for r in eng.slot_req])
+
+
+@pytest.mark.parametrize("mangle", [
+    lambda s: "not a dict",
+    lambda s: {k: v for k, v in s.items() if k != "cache"},
+    lambda s: {k: v for k, v in s.items() if k != "lens"},
+    lambda s: {k: v for k, v in s.items() if k != "requests"},
+    lambda s: corrupt_snapshot(dict(s), 0),
+    lambda s: {**s, "requests": [{"rid": 0}]},            # truncated entry
+    lambda s: {**s, "requests": s["requests"]
+               + [{**s["requests"][0], "slot": 999}]},    # slot out of range
+])
+def test_restore_rejects_malformed_snapshot_unmodified(mp, mangle):
+    eng = _engine(mp)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(3):
+        eng.step()
+    snap = eng.snapshot()
+    before = _fingerprint(eng)
+    with pytest.raises(SnapshotError):
+        eng.restore(mangle(snap))
+    assert _fingerprint(eng) == before  # engine untouched by the failure
+    # and it still finishes the run correctly afterwards
+    eng.run_until_idle()
+    assert all(r.finish_reason is FinishReason.OK for r in reqs)
+
+
+def test_restore_rejects_duplicate_slots(mp):
+    eng = _engine(mp)
+    reqs = _reqs()
+    for r in reqs:
+        eng.add_request(r)
+    eng.step()
+    snap = eng.snapshot()
+    admitted = [rd for rd in snap["requests"] if rd["slot"] is not None]
+    assert len(admitted) >= 2
+    admitted[1]["slot"] = admitted[0]["slot"]
+    with pytest.raises(SnapshotError, match="duplicate"):
+        eng.restore(snap)
+
+
+def test_restore_rejects_dp_mismatch(mp):
+    eng = _engine(mp)
+    snap = eng.snapshot()
+    snap["kv"] = dict(snap["kv"], dp=2)
+    with pytest.raises(SnapshotError, match="dp"):
+        eng.restore(snap)
+
+
+def test_snapshot_roundtrips_ft_request_state(mp):
+    import time
+    eng = _engine(mp, deadline_s=500.0)
+    reqs = _reqs()
+    for r in reqs:
+        # the engine clock is time.monotonic; an arrival of 0.0 would put
+        # the deadline (arrival + 500s) firmly in the past
+        r.arrival = time.monotonic()
+        eng.add_request(r)
+    eng.step()
+    reqs[0].fail_count = 2
+    reqs[0].retry_at = 9
+    eng2 = _engine(mp)
+    eng2.restore(eng.snapshot())
+    got = {r.rid: r for r in eng2.queue}
+    assert got[0].fail_count == 2 and got[0].retry_at == 9
+    assert got[0].deadline == reqs[0].deadline is not None

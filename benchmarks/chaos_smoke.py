@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import (ShiftEngine, EngineConfig, FaultConfig,
+                          PrefixConfig, Request)
 from repro.engine.request import FinishReason
 from repro.ft import DeliveryLog, Fault, FaultPlan, random_plan
 from repro.models import build_model
@@ -47,9 +48,12 @@ def _models():
     return m, m.init_params(jax.random.key(0))
 
 
-def _engine(mp, faults=None, **kw):
+def _engine(mp, faults=None, num_blocks=0, prefix_cache=False, **fault_kw):
     m, params = mp
-    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                        num_blocks=num_blocks,
+                        prefix=PrefixConfig(enabled=prefix_cache),
+                        fault=FaultConfig(**fault_kw))
     return ShiftEngine(m, m, params, params, ecfg, policy=_AlwaysBase(),
                        faults=faults)
 
@@ -85,7 +89,7 @@ def _terminal_and_zero_leak(results, eng, reqs, plan=None):
            str({r.rid: str(r.finish_reason) for r in reqs}))
     acct = eng.block_accounting()
     _check(results, "zero_block_leak",
-           acct == {"used": 0, "pinned": 0}, str(acct))
+           acct.used == 0 and acct.pinned == 0, str(acct.as_dict()))
     if plan is not None:
         _check(results, "faults_fired", len(plan.fired) > 0,
                f"{len(plan.fired)} injected")
@@ -134,7 +138,7 @@ def drill_crash(mp, seed, results):
         log.poll(live.values())
     assert any(r.generated for r in reqs) and not all(
         r.done for r in reqs), "crash must land mid-generation"
-    ring = eng._snap_ring                 # the engine object "crashes" here
+    ring = eng.retained_snapshots()       # the engine object "crashes" here
     pre = {rid: len(log.delivered(rid)) for rid in live}
     eng2 = _engine(mp, auto_snapshot_every=2)
     eng2.recover(ring)
@@ -173,7 +177,7 @@ def drill_storm(mp, seed, results):
         eng.add_request(r)
     _terminal_and_zero_leak(results, eng, reqs, plan)
     _check(results, "snapshots_survived_storm",
-           len(eng._snap_ring) > 0 and eng.recover() is eng)
+           len(eng.retained_snapshots()) > 0 and eng.recover() is eng)
 
 
 DRILLS = {"oom": drill_oom, "poison": drill_poison, "crash": drill_crash,

@@ -189,7 +189,7 @@ def _work_prop_attn(rec, emit, smoke):
         for r in reqs:
             eng.add_request(r)
         while not eng.active \
-                or not all(eng._prefill_done(r) for r in eng.active):
+                or not all(r.prefilled >= r.pos for r in eng.active):
             eng.step()                      # swallow the prompts
         eng.step()                          # warm-up: compile decode shape
         ts = []
@@ -303,7 +303,8 @@ def _dp_paged_smoke(rec, emit):
         return
     from repro.configs import get_config
     from repro.core.policy import ThresholdPolicy
-    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.engine import (ShiftEngine, EngineConfig, PrefixConfig,
+                              Request)
     from repro.launch.mesh import make_test_mesh
     from repro.models.model import Model
     from repro.parallel import Layout
@@ -316,7 +317,7 @@ def _dp_paged_smoke(rec, emit):
     pb = mb.init_params(jax.random.key(0))
     ps = ms.init_params(jax.random.key(0))
     ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
-                        block_size=8, prefix_cache=True)
+                        block_size=8, prefix=PrefixConfig(enabled=True))
     eng = ShiftEngine(mb, ms, pb, ps, ecfg, policy=ThresholdPolicy(4))
     assert eng.paged and eng.dp == 2, eng.paged_disabled_reason
     shared = list(range(1, 17))                # 2 full blocks per row
@@ -344,7 +345,8 @@ def _obs_bench(rec, smoke):
     baseline."""
     from repro.configs import get_config
     from repro.core.policy import ThresholdPolicy
-    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.engine import (ShiftEngine, EngineConfig, ObsConfig,
+                              PrefixConfig, Request)
     from repro.models import build_model
 
     cfg = get_config("qwen3-8b").reduced()
@@ -356,7 +358,8 @@ def _obs_bench(rec, smoke):
 
     def run(obs_on):
         ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
-                            prefix_cache=True, obs=obs_on)
+                            prefix=PrefixConfig(enabled=True),
+                            obs=ObsConfig(enabled=obs_on))
         eng = ShiftEngine(m, m, params, params, ecfg,
                           policy=ThresholdPolicy(4))
         for i, p in enumerate(prompts):
@@ -390,7 +393,8 @@ def _fault_bench(rec, smoke):
     scanning, watchdog) over one without, on a fault-free workload."""
     from repro.configs import get_config
     from repro.core.policy import ThresholdPolicy
-    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.engine import (ShiftEngine, EngineConfig, FaultConfig,
+                              PrefixConfig, Request)
     from repro.ft import DeliveryLog, FaultPlan, random_plan
     from repro.models import build_model
 
@@ -417,7 +421,7 @@ def _fault_bench(rec, smoke):
     ref = {r.rid: list(r.generated) for r in ref_reqs}
 
     # crash-recovery drill: crash mid-generation, recover, replay
-    eng = engine(auto_snapshot_every=2)
+    eng = engine(fault=FaultConfig(auto_snapshot_every=2))
     log = DeliveryLog()
     rs = reqs()
     for r in rs:
@@ -426,10 +430,10 @@ def _fault_bench(rec, smoke):
     for _ in range(5):
         eng.step()
         log.poll(live.values())
-    eng2 = engine(auto_snapshot_every=2)
+    eng2 = engine(fault=FaultConfig(auto_snapshot_every=2))
     replay_ok = 0.0
     try:
-        eng2.recover(eng._snap_ring)
+        eng2.recover(eng.retained_snapshots())
         live2 = {r.rid: r for r in eng2.queue}
         while eng2.queue or eng2.active:
             eng2.step()
@@ -442,7 +446,8 @@ def _fault_bench(rec, smoke):
 
     # seeded storm: typed outcomes + zero leak
     plan = random_plan(3, 40, p_alloc=0.15, p_forward=0.15, p_route=0.1)
-    eng = engine(faults=plan, num_blocks=32, prefix_cache=True)
+    eng = engine(faults=plan, num_blocks=32,
+                 prefix=PrefixConfig(enabled=True))
     rs = reqs()
     for r in rs:
         eng.add_request(r)
@@ -469,9 +474,86 @@ def _fault_bench(rec, smoke):
         return ts[len(ts) // 2] if ts else 0.0
 
     t_plain = median_step()
-    t_ft = median_step(faults=FaultPlan([]), deadline_s=1e9)
+    t_ft = median_step(faults=FaultPlan([]),
+                       fault=FaultConfig(deadline_s=1e9))
     rec("fault.overhead_ratio",
         (t_ft / t_plain) if t_plain > 0 else 1.0, "x")
+
+
+def _cluster_bench(rec, emit, smoke):
+    """Cluster serving contract, boiled down to three gated numbers on a
+    real 2-replica Router over reduced engines (single device, shared
+    weights — all scheduling outputs, deterministic integers):
+
+    * ``cluster.affinity_prefill_tokens_saved`` — prefill tokens the
+      prefix-affinity router saves cluster-wide on a shared-prefix burst
+      (the whole point of affinity: the shared span prefills ONCE across
+      the cluster, not once per replica).
+    * ``cluster.migrations`` — live migrations completed by the drill.
+    * ``cluster.migration_replay_ok`` — 1.0 iff >= 1 migration happened
+      AND the migrated request's delivered stream is exactly-once and
+      bit-identical to an unmigrated single-engine run (DeliveryLog
+      replay check included). Hard-gated at 1.0."""
+    from repro.cluster import Router
+    from repro.configs import get_config
+    from repro.core.policy import ThresholdPolicy
+    from repro.engine import (ShiftEngine, EngineConfig, PrefixConfig,
+                              Request)
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-8b").reduced()
+    m = build_model(cfg, dtype=jnp.float32)
+    params = m.init_params(jax.random.key(0))
+
+    def engine():
+        ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                            threshold=4, block_size=8,
+                            prefix=PrefixConfig(enabled=True))
+        return ShiftEngine(m, m, params, params, ecfg,
+                           policy=ThresholdPolicy(4))
+
+    n_new = 4 if smoke else 8
+    # affinity A/B: 6 requests sharing a 24-token (3-block) prefix across
+    # 2 replicas — affinity keeps them on one replica, so 5 of 6 reuse it
+    shared = list(range(1, 25))
+    router = Router([engine(), engine()], routing="affinity",
+                    rebalance_every=0)
+    for i in range(6):
+        router.submit(Request(i, shared + [100 + 3 * i, 101 + 3 * i],
+                              max_new_tokens=n_new))
+    router.run_until_idle()
+    rec("cluster.affinity_prefill_tokens_saved",
+        router.counter_total("prefix_tokens_saved_total"), "tokens")
+
+    # migration drill: decode a request mid-stream, move it to the other
+    # replica, finish there; the delivered stream must match a bare
+    # single-engine run bit-for-bit (exactly-once across the move)
+    prompt = list(range(1, 17))
+    ref_eng = engine()
+    ref = Request(0, prompt, max_new_tokens=n_new + 4)
+    ref_eng.add_request(ref)
+    ref_eng.run_until_idle(max_steps=400)
+
+    drill = Router([engine(), engine()], routing="least-loaded",
+                   rebalance_every=0)
+    drill.submit(Request(0, prompt, max_new_tokens=n_new + 4))
+    replay_ok = 0.0
+    try:
+        for _ in range(200):
+            drill.step()
+            drill.poll()
+            if len(drill.stream(0)) >= 2:
+                break
+        src = drill.owner(0)
+        drill.migrate(0, 1 - src)
+        drill.run_until_idle()
+        if drill.migrations >= 1 \
+                and drill.delivered(0) == list(ref.generated):
+            replay_ok = 1.0
+    except Exception:
+        replay_ok = 0.0                 # ReplayDivergence/abort -> 0
+    rec("cluster.migrations", drill.migrations, "iters")
+    rec("cluster.migration_replay_ok", replay_ok, "x")
 
 
 def main(emit=print, smoke=False, out="BENCH_kernels.json"):
@@ -490,6 +572,7 @@ def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     _dp_paged_smoke(rec, emit)
     _obs_bench(rec, smoke)
     _fault_bench(rec, smoke)
+    _cluster_bench(rec, emit, smoke)
     if out:
         with open(out, "w") as f:
             json.dump({"smoke": smoke, "entries": entries}, f, indent=1)

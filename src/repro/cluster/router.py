@@ -1,0 +1,280 @@
+"""``Router``: N ``ShiftEngine`` replicas behind one typed serving API.
+
+The Router owns the replicas and implements the same
+:class:`repro.engine.api.ServingClient` protocol an engine does, so a
+caller cannot tell one replica from eight (N=1 is a drop-in wrapper and
+is tested bit-identical to a bare engine). Everything goes through the
+engine *facade* — ``submit``/``cancel``/``step``/``stream``/``stats``
+plus the migration surface — never through engine private state.
+
+Routing policies (``routing=``):
+
+* ``"affinity"`` (default) — probe each replica's prefix index with the
+  non-bumping ``prefix_probe`` and send the request where the longest
+  prefix already lives (ties broken by load). Requests whose prefix is
+  not committed anywhere yet are memoized by their first chain key, so a
+  burst of same-prefix arrivals sticks to one replica *before* the first
+  prefill commits — that is what makes a shared prefix prefill once
+  cluster-wide instead of once per replica.
+* ``"round-robin"`` — strict modulo assignment (the A/B baseline).
+* ``"least-loaded"`` — the PR-4 dp-row signal lifted to replicas:
+  queued block demand minus free blocks (queue depth + active for
+  dense engines), lowest index wins ties.
+
+Rebalancing: every ``rebalance_every`` steps the Router compares replica
+loads and, when the spread reaches ``rebalance_skew`` requests, migrates
+the coldest migratable request from the most- to the least-loaded
+replica as a typed block-granular plan (:mod:`repro.cluster.migration`):
+extract on the source (read-only), admit on the destination, copy the
+payload, release on the source (decrement-not-free). The source is only
+touched after the destination holds the data, so a failed admit aborts
+with nothing lost. Exactly-once delivery across the move is enforced by
+the Router's :class:`~repro.ft.recovery.DeliveryLog` — ``poll`` raises
+``ReplayDivergence`` if a migrated request's stream ever disagrees with
+what was already delivered.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..cache.prefix_index import PrefixIndex
+from ..engine.api import ClusterStats
+from ..ft.recovery import DeliveryLog
+from ..obs import MetricsRegistry, merge_snapshots, schema
+from .migration import TransferOp, build_transfer_plan
+
+ROUTING_POLICIES = ("affinity", "round-robin", "least-loaded")
+
+
+class Router:
+    def __init__(self, engines: Sequence, routing: str = "affinity",
+                 rebalance_every: int = 8, rebalance_skew: int = 2):
+        if not engines:
+            raise ValueError("Router needs at least one engine")
+        if routing not in ROUTING_POLICIES:
+            raise ValueError(
+                f"unknown routing policy {routing!r} (one of "
+                f"{ROUTING_POLICIES})")
+        self.engines = list(engines)
+        self.routing = routing
+        self.rebalance_every = rebalance_every
+        self.rebalance_skew = rebalance_skew
+        for i, eng in enumerate(self.engines):
+            eng.set_replica(i)
+        self._owner: Dict[int, int] = {}      # rid -> replica index
+        self._rr = 0                          # round-robin cursor
+        # first-chain-key -> replica: affinity for prefixes submitted but
+        # not yet committed to any replica's index (see module docstring)
+        self._affinity: Dict[int, int] = {}
+        self._delivery = DeliveryLog()
+        self.steps = 0
+        self.migrations = 0
+        self.migrated_blocks = 0
+        self.transfer_log: List[Tuple[TransferOp, ...]] = []
+
+    # ----------------------------------------------------------- routing
+    def _load(self, i: int) -> float:
+        st = self.engines[i].stats()
+        if st.paged:
+            return st.queued_block_demand - st.free_blocks
+        return st.queue_depth + st.active
+
+    def _least_loaded(self) -> int:
+        return min(range(len(self.engines)),
+                   key=lambda i: (self._load(i), i))
+
+    def _prefix_key(self, prompt: Sequence[int]) -> Optional[int]:
+        bs = self.engines[0].cfg.block_size
+        if len(prompt) < bs:
+            return None
+        return next(PrefixIndex.chain_keys(prompt, bs, 1))
+
+    def _route(self, req) -> int:
+        n = len(self.engines)
+        if n == 1:
+            return 0
+        if self.routing == "round-robin":
+            i = self._rr % n
+            self._rr += 1
+            return i
+        if self.routing == "affinity":
+            probes = [eng.prefix_probe(req.prompt) for eng in self.engines]
+            best = max(probes)
+            if best > 0:
+                cands = [i for i, p in enumerate(probes) if p == best]
+                return min(cands, key=lambda i: (self._load(i), i))
+            key = self._prefix_key(req.prompt)
+            if key is not None and key in self._affinity:
+                return self._affinity[key]
+            i = self._least_loaded()
+            if key is not None:
+                self._affinity[key] = i
+            return i
+        return self._least_loaded()
+
+    # ------------------------------------------------------ ServingClient
+    def submit(self, req) -> int:
+        if req.rid in self._owner:
+            raise ValueError(f"rid {req.rid} already submitted")
+        i = self._route(req)
+        self._owner[req.rid] = i
+        return self.engines[i].submit(req)
+
+    def cancel(self, rid: int) -> bool:
+        i = self._owner.get(rid)
+        if i is None:
+            return False
+        return self.engines[i].cancel(rid)
+
+    def step(self) -> bool:
+        """One cluster iteration: every replica steps (no short-circuit —
+        replica k's idleness must not starve replica k+1), then the
+        periodic skew check may migrate one request."""
+        progressed = [eng.step() for eng in self.engines]
+        self.steps += 1
+        if (self.rebalance_every and len(self.engines) > 1
+                and self.steps % self.rebalance_every == 0):
+            self.rebalance()
+        return any(progressed)
+
+    def stream(self, rid: int) -> List[int]:
+        i = self._owner.get(rid)
+        return self.engines[i].stream(rid) if i is not None else []
+
+    def request(self, rid: int):
+        """The LIVE request object, wherever it currently runs. After a
+        migration the submitter's original object is stale (the request
+        lives on in the destination engine's copy) — read state through
+        this, ``stream``, or ``delivered``, never a kept reference."""
+        i = self._owner.get(rid)
+        return self.engines[i].request(rid) if i is not None else None
+
+    def stats(self) -> ClusterStats:
+        return ClusterStats(
+            replicas=tuple(eng.stats() for eng in self.engines),
+            routing=self.routing, steps=self.steps,
+            migrations=self.migrations,
+            migrated_blocks=self.migrated_blocks)
+
+    # ------------------------------------------------- delivery (exactly-once)
+    def poll(self) -> Dict[int, List[int]]:
+        """Release each request's undelivered token suffix. The log spans
+        migrations — a request polls under the same rid wherever it lives,
+        and any disagreement with already-delivered tokens raises
+        ``ReplayDivergence`` (the bit-identical guarantee)."""
+        reqs = [self.engines[i].request(rid)
+                for rid, i in self._owner.items()]
+        return self._delivery.poll([r for r in reqs if r is not None])
+
+    def delivered(self, rid: int) -> List[int]:
+        return self._delivery.delivered(rid)
+
+    def run_until_idle(self, max_steps: int = 10000) -> None:
+        """Step the cluster until every replica is idle (or ``max_steps``),
+        polling delivery each iteration so replay checks run while work
+        is still in flight."""
+        for _ in range(max_steps):
+            self.poll()
+            self.step()
+            if all(st.queue_depth == 0 and st.active == 0
+                   for st in (eng.stats() for eng in self.engines)):
+                break
+        self.poll()
+
+    def drain(self, max_steps: int = 10000, release_cache: bool = True):
+        """Graceful shutdown: every replica finishes its in-flight decodes
+        and sheds its queue (the engines' typed terminal outcomes), then
+        the final token suffixes are delivered."""
+        for eng in self.engines:
+            eng.drain(max_steps=max_steps, release_cache=release_cache)
+        self.poll()
+
+    # --------------------------------------------------------- migration
+    def owner(self, rid: int) -> Optional[int]:
+        return self._owner.get(rid)
+
+    def migrate(self, rid: int,
+                dst_replica: int) -> Optional[Tuple[TransferOp, ...]]:
+        """Move one live request to ``dst_replica``. Returns the applied
+        transfer plan, or None when the request is not migratable or the
+        destination cannot take it (either way the source is untouched)."""
+        src_i = self._owner.get(rid)
+        if src_i is None or src_i == dst_replica:
+            return None
+        src = self.engines[src_i]
+        dst = self.engines[dst_replica]
+        export = src.extract_request(rid)
+        if export is None:
+            return None
+        dst_blocks = dst.admit_migrated(export["state"], export["n_blocks"])
+        if dst_blocks is None:
+            return None                      # abort: source never touched
+        ops = build_transfer_plan(export, dst_blocks, src_i, dst_replica)
+        dst.write_blocks(dst_blocks, export["payload"])
+        src.release_migrated(rid)
+        self._owner[rid] = dst_replica
+        self.migrations += 1
+        self.migrated_blocks += export["n_blocks"]
+        self.transfer_log.append(ops)
+        return ops
+
+    def rebalance(self) -> Optional[Tuple[TransferOp, ...]]:
+        """Migrate the coldest migratable request from the most- to the
+        least-loaded replica when the load spread (queued + active
+        requests) reaches ``rebalance_skew``. At most one move per call —
+        rebalancing is a nudge, not a reshuffle."""
+        if len(self.engines) < 2:
+            return None
+        sts = [eng.stats() for eng in self.engines]
+        loads = [st.queue_depth + st.active for st in sts]
+        src_i = max(range(len(loads)), key=lambda i: (loads[i], -i))
+        dst_i = min(range(len(loads)), key=lambda i: (loads[i], i))
+        if loads[src_i] - loads[dst_i] < self.rebalance_skew:
+            return None
+        for rid in self.engines[src_i].migratable():
+            ops = self.migrate(rid, dst_i)
+            if ops is not None:
+                return ops
+        return None
+
+    # ----------------------------------------------------- observability
+    def counter_total(self, name: str) -> float:
+        """Cluster-wide counter total (summed over replicas)."""
+        return sum(eng.obs.registry.counter_total(name)
+                   for eng in self.engines)
+
+    def merged_registry(self) -> MetricsRegistry:
+        merged = merge_snapshots(
+            [eng.obs.registry.snapshot() for eng in self.engines])
+        return MetricsRegistry().load_state(merged)
+
+    def dump(self) -> dict:
+        """One obs dump for the whole cluster: merged metrics, and the
+        replicas' events/steps interleaved in time order — every record
+        already carries its ``replica`` stamp, so consumers
+        (``repro.obs.report``, the trace exporter) need no translation."""
+        events = [dict(ev) for eng in self.engines
+                  for ev in eng.obs.events.events]
+        events.sort(key=lambda ev: (ev.get("ts", 0.0),
+                                    ev.get("replica", -1)))
+        steps = [dict(rec) for eng in self.engines
+                 for rec in eng.obs.step_records]
+        steps.sort(key=lambda rec: (rec.get("t_start", 0.0),
+                                    rec.get("replica", -1)))
+        return {"schema_version": schema.SCHEMA_VERSION,
+                "source": "cluster",
+                "metrics": merge_snapshots(
+                    [eng.obs.registry.snapshot() for eng in self.engines]),
+                "events": events,
+                "events_dropped": sum(eng.obs.events.dropped
+                                      for eng in self.engines),
+                "steps": steps}
+
+    def write_json(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.dump(), f, indent=1, sort_keys=True)
+
+    def write_prometheus(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.merged_registry().to_prometheus())

@@ -1,4 +1,8 @@
+from .api import (BlockLedger, ClusterStats, EngineStats, FaultConfig,
+                  ObsConfig, PrefixConfig, PrefixStats, ServingClient)
 from .request import Request
 from .engine import ShiftEngine, EngineConfig
 
-__all__ = ["Request", "ShiftEngine", "EngineConfig"]
+__all__ = ["Request", "ShiftEngine", "EngineConfig", "ServingClient",
+           "PrefixConfig", "FaultConfig", "ObsConfig", "PrefixStats",
+           "BlockLedger", "EngineStats", "ClusterStats"]

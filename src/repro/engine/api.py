@@ -1,0 +1,215 @@
+"""Typed serving API: the facade contract and config/result types.
+
+This module is the boundary between the engine and everything that drives
+it (``serve.py``, the cluster ``Router``, benchmarks). Three pieces:
+
+- :class:`ServingClient` — the protocol a serving backend implements:
+  ``submit``/``cancel``/``step``/``stream``/``stats``. ``ShiftEngine``
+  implements it directly; ``repro.cluster.Router`` implements the same
+  protocol over N engine replicas, so a 1-replica router is a drop-in
+  replacement for a bare engine. Callers outside ``src/repro/engine/``
+  speak only this surface — never engine private state (grep-enforced in
+  ``tests/test_cluster.py``).
+
+- Nested config groups — ``EngineConfig`` historically accreted one flat
+  flag per PR (prefix/FT/obs/deadline/queue/snapshot knobs); they now
+  group into :class:`PrefixConfig` / :class:`FaultConfig` /
+  :class:`ObsConfig`. The old flat kwargs are still accepted and mapped
+  (``EngineConfig(prefix_cache=True)`` ->
+  ``EngineConfig(prefix=PrefixConfig(enabled=True))``) with a
+  once-per-process :class:`DeprecationWarning`; the flat *read*
+  properties (``cfg.prefix_cache`` etc.) stay indefinitely. New code
+  should construct the nested groups.
+
+- Typed result dataclasses — :class:`PrefixStats`, :class:`BlockLedger`,
+  :class:`EngineStats` replace the ad-hoc ``prefix_stats`` /
+  ``block_accounting`` dicts. They are frozen, carry ``.as_dict()`` for
+  the bench/JSON paths, and (transitionally) support ``stats["hits"]``
+  mapping access so existing dict-shaped call sites keep working.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field, fields, asdict
+from typing import List, Optional, Protocol, Tuple, runtime_checkable
+
+
+# --------------------------------------------------------------- protocol
+@runtime_checkable
+class ServingClient(Protocol):
+    """What a serving backend looks like from the outside.
+
+    ``submit`` enqueues a :class:`~repro.engine.request.Request` and
+    returns its rid; ``cancel`` terminates a live request (False when the
+    rid is unknown or already terminal); ``step`` runs one scheduling
+    iteration and returns False when idle; ``stream`` returns the tokens
+    generated so far for a rid (a snapshot — exactly-once incremental
+    delivery is the caller's :class:`~repro.ft.DeliveryLog`'s job);
+    ``stats`` returns a typed, frozen summary with ``.as_dict()``.
+    """
+
+    def submit(self, request) -> int: ...
+
+    def cancel(self, rid: int) -> bool: ...
+
+    def step(self) -> bool: ...
+
+    def stream(self, rid: int) -> List[int]: ...
+
+    def stats(self): ...
+
+
+# ------------------------------------------------------- nested config groups
+@dataclass(frozen=True)
+class PrefixConfig:
+    """Prefix-cache knobs (``repro.cache.PrefixIndex`` on the paged pool)."""
+    enabled: bool = False     # hash-indexed prefix reuse + COW (opt-in:
+    #                           reused blocks make warm prefills shape-
+    #                           differently from cold ones, so A/B
+    #                           comparisons should enable it on both sides)
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Fault-tolerance knobs (queue bounds, deadlines, retry, snapshots)."""
+    max_queue: int = 0               # bound on UNADMITTED queued requests;
+    #                                  0 = unbounded
+    shed_policy: str = "reject-newest"   # or "evict-longest-queued"
+    deadline_s: Optional[float] = None   # default per-request deadline
+    quarantine_after: int = 3        # failed steps before FinishReason.FAILED
+    retry_backoff: int = 2           # extra idle steps per accumulated failure
+    auto_snapshot_every: int = 0     # snapshot every N steps (0 = off)
+    snapshot_keep: int = 2           # retained snapshots in the ring
+    straggler_factor: float = 2.5    # watchdog: flag steps slower than
+    #                                  factor x the rolling median
+
+
+@dataclass(frozen=True)
+class ObsConfig:
+    """Observability knobs (``repro.obs``)."""
+    enabled: bool = True      # False swaps in the no-op NullObs (the
+    #                           uninstrumented side of obs.overhead_ratio)
+    window: int = 1024        # rolling per-step audit-record window
+    event_cap: int = 65536    # bounded lifecycle-event log capacity
+
+    def __bool__(self):       # `if cfg.obs:` keeps meaning "is obs on"
+        return self.enabled
+
+
+# warn-once flag for the flat-kwarg deprecation shim (module-level so the
+# warning fires once per process, not once per EngineConfig; tests reset it
+# via _reset_flat_kwarg_warning to assert the warning deterministically)
+_FLAT_KWARGS_WARNED = [False]
+
+
+def _reset_flat_kwarg_warning():
+    _FLAT_KWARGS_WARNED[0] = False
+
+
+def warn_flat_kwargs_once(names):
+    if _FLAT_KWARGS_WARNED[0]:
+        return
+    _FLAT_KWARGS_WARNED[0] = True
+    warnings.warn(
+        f"flat EngineConfig kwargs {sorted(names)} are deprecated; use the "
+        "nested groups (prefix=PrefixConfig(...), fault=FaultConfig(...), "
+        "obs=ObsConfig(...)). The flat spellings are accepted and mapped "
+        "for now (this warning fires once per process).",
+        DeprecationWarning, stacklevel=3)
+
+
+# ------------------------------------------------------ typed result objects
+class _MappingCompat:
+    """Transitional dict-compat for frozen result dataclasses: supports
+    ``stats["hits"]``, ``"hits" in stats``, ``== {...}`` against plain
+    dicts, and ``.as_dict()`` for JSON paths — so call sites written
+    against the old ad-hoc dicts keep working while new code uses typed
+    attribute access."""
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+    def __getitem__(self, key):
+        try:
+            return getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+
+    def __contains__(self, key):
+        return any(f.name == key for f in fields(self))
+
+    def __eq__(self, other):
+        if isinstance(other, dict):
+            return self.as_dict() == other
+        if isinstance(other, type(self)):
+            return self.as_dict() == other.as_dict()
+        return NotImplemented
+
+    __hash__ = None
+
+
+@dataclass(frozen=True, eq=False)
+class PrefixStats(_MappingCompat):
+    """Prefix-cache counters summed across dp rows (zeros when caching is
+    off), plus the engine's COW copy count and — so dense fallbacks are
+    observable — the reason paging is off (None when paged)."""
+    entries: int = 0
+    hits: int = 0
+    misses: int = 0
+    tokens_saved: int = 0
+    evictions: int = 0
+    cow_copies: int = 0
+    paged_disabled_reason: Optional[str] = None
+
+
+@dataclass(frozen=True, eq=False)
+class BlockLedger(_MappingCompat):
+    """Paged-block ledger: ``used`` counts per-sequence mappings,
+    ``pinned`` counts prefix-index pins (both must be zero after
+    ``drain()`` — any remainder is a leaked block); ``free`` /
+    ``free_per_row`` are the allocatable remainder."""
+    used: int = 0
+    pinned: int = 0
+    free: int = 0
+    free_per_row: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True, eq=False)
+class EngineStats(_MappingCompat):
+    """One engine's serving state, frozen at a step boundary. Everything
+    ``serve.py`` prints and the cluster ``Router`` routes on comes from
+    here — no caller needs to reach into engine internals."""
+    steps: int = 0
+    queue_depth: int = 0              # requests waiting for a slot
+    active: int = 0                   # requests holding a slot
+    preemptions: int = 0
+    config_counts: dict = field(default_factory=dict)   # {"base": n, ...}
+    paged: bool = False
+    paged_disabled_reason: Optional[str] = None
+    dp: int = 1
+    block_size: int = 0
+    blocks_per_row: int = 0
+    free_blocks: int = 0
+    queued_block_demand: int = 0      # blocks the unadmitted queue will need
+    prefix: PrefixStats = field(default_factory=PrefixStats)
+    blocks: BlockLedger = field(default_factory=BlockLedger)
+    replica: Optional[int] = None     # set when owned by a cluster Router
+
+
+@dataclass(frozen=True, eq=False)
+class ClusterStats(_MappingCompat):
+    """A Router's view: per-replica :class:`EngineStats` plus the
+    cluster-level routing/migration counters."""
+    replicas: Tuple[EngineStats, ...] = ()
+    routing: str = "affinity"
+    steps: int = 0
+    migrations: int = 0
+    migrated_blocks: int = 0
+
+    @property
+    def queue_depth(self) -> int:
+        return sum(r.queue_depth for r in self.replicas)
+
+    @property
+    def active(self) -> int:
+        return sum(r.active for r in self.replicas)

@@ -67,8 +67,7 @@ from __future__ import annotations
 
 import inspect
 import time
-from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +80,8 @@ from repro.ft.faults import FaultPlan, SnapshotError, corrupt_snapshot
 from repro.ft.watchdog import StragglerWatchdog
 from repro.models.model import Model
 from repro.obs import Observability, NullObs
+from .api import (BlockLedger, EngineStats, FaultConfig, ObsConfig,
+                  PrefixConfig, PrefixStats, warn_flat_kwargs_once)
 from .request import FinishReason, Request
 
 # Rolling-window length for the per-step audit records (the source the
@@ -93,78 +94,123 @@ _EMPTY_STEP = {"prefill_tokens": 0, "decode_tokens": 0, "ready_decodes": 0,
                "attn_ctx_tokens": 0}
 
 
-@dataclass
 class EngineConfig:
-    max_slots: int = 8               # concurrent sequences (global batch)
-    s_max: int = 256                 # max cache length per sequence
-    prefill_chunk: int = 64
-    threshold: int = DEFAULT_SHIFT_THRESHOLD   # shift threshold (tokens)
-    eos_id: int = -1                 # -1: never stop early
-    # paged KV cache -------------------------------------------------------
-    paged: Optional[bool] = None     # None: auto (paged when supported)
-    block_size: int = 16             # tokens per KV block
-    num_blocks: int = 0              # physical blocks PER DP ROW, incl.
-    #                                  each row's null block;
-    #                                  0: auto-size so the row's
-    #                                  slots×s_max fits (no memory
-    #                                  pressure). Smaller values
-    #                                  oversubscribe and exercise admission
-    #                                  control + preemption.
-    # scheduling -----------------------------------------------------------
-    mixed: Optional[bool] = None     # None: auto (mixed whenever paged).
-    #                                  False keeps the serialized
-    #                                  prefill-OR-decode iteration (the
-    #                                  dense fallback always uses it).
-    # prefix caching -------------------------------------------------------
-    prefix_cache: bool = False       # hash-indexed prefix reuse + COW on the
-    #                                  paged pool (opt-in: reused blocks make
-    #                                  warm prefills shape-differently from
-    #                                  cold ones, so A/B comparisons should
-    #                                  enable it on both sides)
-    # kernels --------------------------------------------------------------
-    kernel: Optional[object] = None  # repro.kernels.KernelConfig selecting
-    #                                  the paged-attention backend (None =
-    #                                  dispatch default: Pallas on TPU, its
-    #                                  bit-exact jnp mirror elsewhere;
-    #                                  "gather" keeps the retired
-    #                                  materialized-gather oracle for A/B)
-    # observability --------------------------------------------------------
-    obs: bool = True                 # metrics registry + lifecycle events +
-    #                                  per-step audit records (repro.obs).
-    #                                  False swaps in a no-op NullObs — the
-    #                                  uninstrumented side of the
-    #                                  obs.overhead_ratio CI bench; the
-    #                                  engine schedules identically.
-    # fault tolerance ------------------------------------------------------
-    max_queue: int = 0               # bound on UNADMITTED queued requests;
-    #                                  0 = unbounded (the pre-hardening
-    #                                  behavior). When full, shed_policy
-    #                                  decides who terminates with
-    #                                  FinishReason.SHED.
-    shed_policy: str = "reject-newest"  # "reject-newest": the arriving
-    #                                  request is shed; "evict-longest-
-    #                                  queued": the oldest unadmitted
-    #                                  request is shed to make room.
-    deadline_s: Optional[float] = None  # default per-request deadline,
-    #                                  seconds past arrival (engine clock);
-    #                                  Request.deadline overrides. None =
-    #                                  no default deadline.
-    quarantine_after: int = 3        # failed steps a request may be part
-    #                                  of before it terminates FAILED (the
-    #                                  fail-the-request-not-the-engine
-    #                                  bound)
-    retry_backoff: int = 2           # extra idle steps per accumulated
-    #                                  failure before a failed request may
-    #                                  be batched/admitted again
-    #                                  (step-counted backoff)
-    auto_snapshot_every: int = 0     # capture a recovery snapshot every N
-    #                                  steps (0 = off); the last
-    #                                  snapshot_keep live in _snap_ring —
-    #                                  the durable-checkpoint stand-in
-    #                                  recover() restores from
-    straggler_factor: float = 2.5    # watchdog: flag steps slower than
-    #                                  factor x the rolling median
-    snapshot_keep: int = 2
+    """Engine configuration: scheduling/paging knobs flat, the accreted
+    prefix/fault/observability flags grouped into nested dataclasses
+    (:class:`~repro.engine.api.PrefixConfig`,
+    :class:`~repro.engine.api.FaultConfig`,
+    :class:`~repro.engine.api.ObsConfig`). The pre-PR-8 flat kwargs
+    (``prefix_cache=``, ``max_queue=``, ..., ``obs=bool``) are accepted
+    and mapped with a once-per-process DeprecationWarning, and the flat
+    *read* properties below stay, so existing call sites keep working."""
+
+    # legacy flat kwargs -> the FaultConfig field of the same name
+    _FAULT_FLAT = ("max_queue", "shed_policy", "deadline_s",
+                   "quarantine_after", "retry_backoff",
+                   "auto_snapshot_every", "snapshot_keep",
+                   "straggler_factor")
+
+    def __init__(self, max_slots: int = 8, s_max: int = 256,
+                 prefill_chunk: int = 64,
+                 threshold: int = DEFAULT_SHIFT_THRESHOLD,
+                 eos_id: int = -1,
+                 # paged KV cache: None = auto (paged when supported);
+                 # num_blocks counts physical blocks PER DP ROW incl. the
+                 # row's null block, 0 = auto-size so slots×s_max fits
+                 paged: Optional[bool] = None, block_size: int = 16,
+                 num_blocks: int = 0,
+                 # scheduling: None = mixed whenever paged; False keeps the
+                 # serialized prefill-OR-decode iteration
+                 mixed: Optional[bool] = None,
+                 # repro.kernels.KernelConfig selecting the paged-attention
+                 # backend (None = dispatch default)
+                 kernel: Optional[object] = None,
+                 # nested groups (each None = defaults)
+                 prefix: Optional[PrefixConfig] = None,
+                 fault: Optional[FaultConfig] = None,
+                 obs=None,
+                 **flat):
+        self.max_slots = max_slots
+        self.s_max = s_max
+        self.prefill_chunk = prefill_chunk
+        self.threshold = threshold
+        self.eos_id = eos_id
+        self.paged = paged
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.mixed = mixed
+        self.kernel = kernel
+        # ------------------------------------------- flat-kwarg shim
+        legacy = sorted(flat)
+        if isinstance(obs, bool):
+            legacy.append("obs")
+        if legacy:
+            warn_flat_kwargs_once(legacy)
+        fkw = {k: flat.pop(k) for k in list(flat) if k in self._FAULT_FLAT}
+        pc = flat.pop("prefix_cache", None)
+        if flat:
+            raise TypeError("EngineConfig got unexpected keyword "
+                            f"argument(s) {sorted(flat)}")
+        if pc is not None:
+            if prefix is not None:
+                raise TypeError("pass either prefix=PrefixConfig(...) or "
+                                "the flat prefix_cache=, not both")
+            prefix = PrefixConfig(enabled=bool(pc))
+        if fkw:
+            if fault is not None:
+                raise TypeError("pass either fault=FaultConfig(...) or the "
+                                f"flat {sorted(fkw)} kwargs, not both")
+            fault = FaultConfig(**fkw)
+        if isinstance(obs, bool):
+            obs = ObsConfig(enabled=obs)
+        self.prefix = prefix if prefix is not None else PrefixConfig()
+        self.fault = fault if fault is not None else FaultConfig()
+        self.obs = obs if obs is not None else ObsConfig()
+
+    def __repr__(self):
+        return (f"EngineConfig(max_slots={self.max_slots}, "
+                f"s_max={self.s_max}, prefill_chunk={self.prefill_chunk}, "
+                f"threshold={self.threshold}, paged={self.paged}, "
+                f"block_size={self.block_size}, "
+                f"num_blocks={self.num_blocks}, mixed={self.mixed}, "
+                f"prefix={self.prefix}, fault={self.fault}, obs={self.obs})")
+
+    # flat read properties: the pre-PR-8 spellings, mapped onto the groups
+    @property
+    def prefix_cache(self) -> bool:
+        return self.prefix.enabled
+
+    @property
+    def max_queue(self) -> int:
+        return self.fault.max_queue
+
+    @property
+    def shed_policy(self) -> str:
+        return self.fault.shed_policy
+
+    @property
+    def deadline_s(self) -> Optional[float]:
+        return self.fault.deadline_s
+
+    @property
+    def quarantine_after(self) -> int:
+        return self.fault.quarantine_after
+
+    @property
+    def retry_backoff(self) -> int:
+        return self.fault.retry_backoff
+
+    @property
+    def auto_snapshot_every(self) -> int:
+        return self.fault.auto_snapshot_every
+
+    @property
+    def snapshot_keep(self) -> int:
+        return self.fault.snapshot_keep
+
+    @property
+    def straggler_factor(self) -> float:
+        return self.fault.straggler_factor
 
 
 class ShiftEngine:
@@ -277,6 +323,13 @@ class ShiftEngine:
         self.queue: List[Request] = []
         self.step_count = 0
         self.preemptions = 0
+        # facade registry: every submitted request by rid, so stream(rid)/
+        # request(rid) resolve after retirement too (short-lived engines;
+        # a long-running deployment would bound this)
+        self._requests: Dict[int, Request] = {}
+        # replica id under a cluster Router (None standalone); stamped on
+        # every step record and event through the obs surface
+        self.replica: Optional[int] = None
         # fault tolerance: the (optional) deterministic fault schedule, the
         # per-step straggler watchdog, the retained recovery snapshots, and
         # the graceful-shutdown flag (draining stops fresh admissions)
@@ -290,8 +343,9 @@ class ShiftEngine:
         # legacy step_log/step_times/config_trace views derive from. Each
         # record carries the monotone step index and its duration, so the
         # views can never desynchronize under window trimming again.
-        self.obs = (Observability("engine", window=TRACE_WINDOW, now=now)
-                    if cfg.obs else NullObs(now=now))
+        self.obs = (Observability("engine", window=cfg.obs.window, now=now,
+                                  event_cap=cfg.obs.event_cap)
+                    if cfg.obs.enabled else NullObs(now=now))
         if self.prefix_rows is not None:
             self._attach_prefix_observers()
         # composition + shift-audit facts of the step in flight, stashed by
@@ -391,6 +445,7 @@ class ShiftEngine:
         if req.deadline is None and self.cfg.deadline_s is not None:
             req.deadline = req.arrival + self.cfg.deadline_s
         self.queue.append(req)
+        self._requests[req.rid] = req
         self.obs.inc("requests_arrived_total")
         self.obs.emit("queued", step=self.step_count, rid=req.rid,
                       prompt_tokens=len(req.prompt),
@@ -763,18 +818,20 @@ class ShiftEngine:
         return self.prefix_rows[0] if self.prefix_rows else None
 
     @property
-    def prefix_stats(self) -> dict:
+    def prefix_stats(self) -> PrefixStats:
         """Prefix-cache counters summed across dp rows (zeros when caching
         is off) plus the engine's COW copy count and — so dense fallbacks
-        are observable — the reason paging is off (None when paged)."""
+        are observable — the reason paging is off (None when paged).
+        Typed and frozen; ``["hits"]``/``.as_dict()`` keep the old dict
+        call sites working."""
         s = {"entries": 0, "hits": 0, "misses": 0, "tokens_saved": 0,
              "evictions": 0}
         for idx in (self.prefix_rows or []):
             for k, v in idx.stats().items():
                 s[k] += v
-        s["cow_copies"] = self.cow_copies
-        s["paged_disabled_reason"] = self.paged_disabled_reason
-        return s
+        return PrefixStats(cow_copies=self.cow_copies,
+                           paged_disabled_reason=self.paged_disabled_reason,
+                           **s)
 
     # ----------------------------------------------------- memory pressure
     def _preempt(self, victim: Request):
@@ -1471,6 +1528,7 @@ class ShiftEngine:
             self._refresh_block_tables()   # from_state marks all rows dirty
         self.slot_req = [None] * self.cfg.max_slots
         self.queue = []
+        self._requests = {}
         for rd in snap["requests"]:
             r = Request(rd["rid"], rd["prompt"], rd["max_new_tokens"],
                         arrival=rd.get("arrival", 0.0))
@@ -1489,6 +1547,7 @@ class ShiftEngine:
             if r.slot is not None:
                 self.slot_req[r.slot] = r
             self.queue.append(r)
+            self._requests[r.rid] = r
         self.obs.emit("restore", step=self.step_count)
         return self
 
@@ -1514,12 +1573,224 @@ class ShiftEngine:
                 idx.evict(len(idx))
         return self
 
-    def block_accounting(self) -> dict:
+    def block_accounting(self) -> BlockLedger:
         """Paged-block ledger for leak checks: ``used`` counts per-sequence
         mappings, ``pinned`` counts prefix-index pins. Both must be zero
-        after ``drain()`` — any remainder is a leaked block."""
+        after ``drain()`` — any remainder is a leaked block. Typed and
+        frozen; compares equal to the old ``{"used": .., "pinned": ..}``
+        dicts when ``free``/``free_per_row`` are defaulted."""
         if not self.paged:
-            return {"used": 0, "pinned": 0}
-        return {"used": self.kv.num_used_blocks,
-                "pinned": sum(len(idx.blocks())
-                              for idx in (self.prefix_rows or []))}
+            return BlockLedger()
+        return BlockLedger(
+            used=self.kv.num_used_blocks,
+            pinned=sum(len(idx.blocks())
+                       for idx in (self.prefix_rows or [])),
+            free=self.kv.num_free_blocks,
+            free_per_row=tuple(self.kv.row_free_blocks(r)
+                               for r in range(self.dp)))
+
+    # ------------------------------------------------- serving facade (API)
+    # ShiftEngine implements repro.engine.api.ServingClient; everything a
+    # caller outside src/repro/engine/ needs goes through these methods
+    # (plus obs/drain/snapshot) — never through engine private state.
+    def submit(self, req: Request) -> int:
+        """ServingClient entry: enqueue ``req``, return its rid."""
+        self.add_request(req)
+        return req.rid
+
+    def stream(self, rid: int) -> List[int]:
+        """Tokens generated so far for ``rid`` (a snapshot; exactly-once
+        incremental delivery is the caller's DeliveryLog's job). Empty for
+        unknown rids."""
+        req = self._requests.get(rid)
+        return list(req.generated) if req is not None else []
+
+    def request(self, rid: int) -> Optional[Request]:
+        """Read-only access to a submitted request's state (the Router's
+        DeliveryLog polls these)."""
+        return self._requests.get(rid)
+
+    def set_replica(self, replica: Optional[int]):
+        """Stamp this engine as cluster replica ``replica``: the id rides
+        on every step record and lifecycle event it emits from now on, so
+        one merged obs dump covers the whole cluster."""
+        self.replica = replica
+        self.obs.replica = replica
+
+    def retained_snapshots(self) -> List[dict]:
+        """The auto-snapshot ring (newest last) — what ``recover()``
+        restores from; exposed for crash drills and external checkpoint
+        shipping."""
+        return list(self._snap_ring)
+
+    def prefix_probe(self, tokens: List[int]) -> int:
+        """Longest indexed prefix of ``tokens`` on this engine, in tokens,
+        across all dp rows — WITHOUT the LRU bump (``match(bump=False)``),
+        so cluster routing probes don't skew eviction recency. 0 when
+        prefix caching is off."""
+        if self.prefix_rows is None or len(tokens) < 2:
+            return 0
+        best = 0
+        for idx in self.prefix_rows:
+            m = idx.match(tokens, max_tokens=len(tokens) - 1, bump=False)
+            best = max(best, len(m))
+        return best * self.cfg.block_size
+
+    def _queued_block_demand(self) -> int:
+        """Blocks the unadmitted queue will need (the router load signal —
+        same pricing as ``_route``'s pending-demand term)."""
+        return sum(blocks_for_tokens(q.total_tokens + 1, self.cfg.block_size)
+                   for q in self.queue if q.slot is None)
+
+    def stats(self) -> EngineStats:
+        """ServingClient stats: one frozen snapshot of the engine's serving
+        state (queue/active/config counts/blocks/prefix), taken at a step
+        boundary."""
+        return EngineStats(
+            steps=self.step_count,
+            queue_depth=sum(1 for q in self.queue if q.slot is None),
+            active=len(self.active),
+            preemptions=self.preemptions,
+            config_counts=self.config_counts,
+            paged=self.paged,
+            paged_disabled_reason=self.paged_disabled_reason,
+            dp=self.dp,
+            block_size=self.cfg.block_size,
+            blocks_per_row=self.kv.num_blocks_per_row if self.paged else 0,
+            free_blocks=self.kv.num_free_blocks if self.paged else 0,
+            queued_block_demand=self._queued_block_demand(),
+            prefix=self.prefix_stats,
+            blocks=self.block_accounting(),
+            replica=self.replica)
+
+    # -------------------------------------------- live KV migration (cluster)
+    # Block-granular request migration between replicas: extract (read-only)
+    # -> admit on the destination -> write the block payload -> release on
+    # the source (decrement-not-free). The Router drives the sequence and
+    # only releases after the destination holds the data, so a failed
+    # migration aborts with the source untouched.
+    def migratable(self) -> List[int]:
+        """Rids of requests a Router may migrate off this engine right now:
+        active, prefill-complete, mid-decode, not inside a retry-backoff
+        window. Ordered least-recently-batched first (the cheapest to
+        move: their streams are coldest)."""
+        if not self.paged:
+            return []
+        return [r.rid for r in sorted(self.active,
+                                      key=lambda r: (r.last_used, r.rid))
+                if self._prefill_done(r) and not r.done
+                and self._retryable(r)]
+
+    def extract_request(self, rid: int) -> Optional[dict]:
+        """Read-only export of a live request for migration: its state dict
+        plus the committed KV block payload (host numpy, gathered from the
+        pool after flushing pending COW copies so the bytes are final).
+        Returns None when ``rid`` is not currently migratable. Source
+        state is NOT touched — release happens in ``release_migrated``
+        after the destination holds the data."""
+        req = self._requests.get(rid)
+        if req is None or req.slot is None or not self.paged \
+                or not self._prefill_done(req) or req.done:
+            return None
+        self._apply_copies()            # pending COW lands before the read
+        row = self.kv.row_of(req.slot)
+        local = self.kv.seq_blocks(req.slot)
+        gids = np.asarray([self.kv.global_block(row, b) for b in local],
+                          np.int32)
+
+        def take(pool):
+            arr = np.asarray(pool)
+            return arr[:, gids].copy() if arr.ndim == 5 else arr[gids].copy()
+
+        state = {"rid": req.rid, "prompt": list(req.prompt),
+                 "generated": list(req.generated),
+                 "max_new_tokens": req.max_new_tokens,
+                 "arrival": req.arrival, "deadline": req.deadline,
+                 "prefilled": req.prefilled,
+                 "cached_tokens": req.cached_tokens,
+                 "first_token_time": req.first_token_time,
+                 "num_preemptions": req.num_preemptions,
+                 "fail_count": req.fail_count, "retry_at": req.retry_at}
+        return {"state": state, "n_blocks": len(local),
+                "block_size": self.cfg.block_size,
+                "src_blocks": [int(g) for g in gids],
+                "payload": jax.tree.map(take, self.cache)}
+
+    def admit_migrated(self, state: dict, n_blocks: int) -> Optional[list]:
+        """Allocate ``n_blocks`` fresh blocks and register the migrated
+        request on this engine (``assign_prefix``-style block mapping into
+        a free slot of the least-loaded row). Returns the pool-global
+        destination block ids to write the payload into, or None when no
+        row has a free slot plus capacity (the migration aborts; the
+        source was never touched)."""
+        if not self.paged or state["rid"] in self._requests:
+            return None
+        need_tokens = n_blocks * self.cfg.block_size
+        spr = self.slots_per_row
+        for row in sorted(range(self.dp),
+                          key=lambda r: (-self.kv.row_free_blocks(r), r)):
+            slot = next((s for s in range(row * spr, (row + 1) * spr)
+                         if self.slot_req[s] is None), None)
+            if slot is None:
+                continue
+            if not self.kv.can_allocate(need_tokens, cached_blocks=[],
+                                        row=row):
+                continue
+            if not self.kv.ensure(slot, need_tokens):
+                continue
+            req = Request(state["rid"], list(state["prompt"]),
+                          max_new_tokens=state["max_new_tokens"],
+                          arrival=state["arrival"],
+                          deadline=state["deadline"])
+            req.generated = list(state["generated"])
+            req.prefilled = state["prefilled"]
+            req.cached_tokens = state["cached_tokens"]
+            req.first_token_time = state["first_token_time"]
+            req.num_preemptions = state["num_preemptions"]
+            req.fail_count = state["fail_count"]
+            req.retry_at = state["retry_at"]
+            req.row, req.slot = row, slot
+            req.last_used = self.step_count
+            self.slot_req[slot] = req
+            self.lens[slot] = req.prefilled
+            self.queue.append(req)
+            self._requests[req.rid] = req
+            self.obs.inc("migration_blocks_total", n_blocks)
+            self.obs.emit("migrate_in", step=self.step_count, rid=req.rid,
+                          row=row, slot=slot, blocks=n_blocks,
+                          tokens=req.prefilled)
+            local = self.kv.seq_blocks(slot)
+            return [int(self.kv.global_block(row, b)) for b in local]
+        return None
+
+    def write_blocks(self, gids: list, payload):
+        """Migration data plane: scatter ``payload`` (per-leaf
+        ``[n_blocks, ...]`` arrays from ``extract_request``) into this
+        engine's pool at pool-global ids ``gids``."""
+        dst = jnp.asarray(np.asarray(gids, np.int32))
+
+        def put(pool, data):
+            d = jnp.asarray(data, dtype=pool.dtype)
+            if pool.ndim == 5:
+                return pool.at[:, dst].set(d)
+            return pool.at[dst].set(d)
+
+        self.cache = jax.tree.map(put, self.cache, payload)
+
+    def release_migrated(self, rid: int):
+        """Drop a migrated-away request from this engine: slot and blocks
+        are released through ``free_seq`` (decrement-not-free — blocks a
+        prefix index pins survive), the rid leaves the facade registry,
+        and NO terminal FinishReason is recorded (the request lives on at
+        the destination; ``migrate_out`` is the lifecycle event)."""
+        req = self._requests.pop(rid, None)
+        if req is None:
+            return
+        n_out = len(req.generated)
+        row = req.row
+        if req.slot is not None:
+            self._release_slot(req)
+        self.queue = [q for q in self.queue if q.rid != rid]
+        self.obs.inc("requests_migrated_total")
+        self.obs.emit("migrate_out", step=self.step_count, rid=rid,
+                      row=row, n_out=n_out)

@@ -3,7 +3,9 @@
 On real TPUs this runs one ShiftEngine per data-parallel row with the base
 (SP,TP) + shift (TP) compiled configs; on CPU it demonstrates the full stack
 end-to-end on a reduced model: ``PYTHONPATH=src python -m repro.launch.serve
---arch qwen3-8b --reduced``."""
+--arch qwen3-8b --reduced``. With ``--replicas N`` the same stack runs as a
+cluster: N engine replicas behind the ``repro.cluster.Router`` (prefix-
+affinity routing, live KV migration under skew, one merged obs dump)."""
 from __future__ import annotations
 
 import argparse
@@ -17,10 +19,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 
+from repro.cluster import Router
 from repro.configs import get_config
 from repro.core.policy import (DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy,
                                AdaptivePolicy)
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import (ShiftEngine, EngineConfig, FaultConfig,
+                          PrefixConfig, Request)
 from repro.ft import random_plan
 from repro.models import build_model
 from repro.models.model import Model
@@ -29,17 +33,15 @@ from repro.parallel import Layout
 from repro.sim.costmodel import CostModel
 
 
-def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
+def _build_stack(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
                  slots=8, s_max=256, chunk=64,
                  threshold=DEFAULT_SHIFT_THRESHOLD, adaptive=False,
                  paged=None, block_size=16, num_blocks=0, prefix_cache=False,
                  dp=1, dtype=jnp.float32, deadline_s=None, max_queue=0,
-                 shed_policy="reject-newest", auto_snapshot_every=0,
-                 faults=None):
-    """One ShiftEngine over an optional (data, sp, tp) mesh. With dp > 1
-    (and no explicit mesh) a dp×1×1 test mesh is built: the engine pages
-    per dp row — each row owns a private block pool and prefix index, and
-    queued requests are routed to the row with the most free blocks."""
+                 shed_policy="reject-newest", auto_snapshot_every=0):
+    """Models + params + policy + EngineConfig, built once — replicas of a
+    cluster share the stack (same weights: a migrated request decodes the
+    same stream on any replica)."""
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -64,14 +66,60 @@ def build_engine(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
                else shift.init_params(jax.random.key(0)))  # separate models
     policy = (AdaptivePolicy(CostModel(cfg), sp, tp) if adaptive
               else ThresholdPolicy(threshold))
-    ecfg = EngineConfig(max_slots=slots, s_max=s_max, prefill_chunk=chunk,
-                        threshold=threshold, paged=paged,
-                        block_size=block_size, num_blocks=num_blocks,
-                        prefix_cache=prefix_cache, deadline_s=deadline_s,
-                        max_queue=max_queue, shed_policy=shed_policy,
-                        auto_snapshot_every=auto_snapshot_every)
+    ecfg = EngineConfig(
+        max_slots=slots, s_max=s_max, prefill_chunk=chunk,
+        threshold=threshold, paged=paged, block_size=block_size,
+        num_blocks=num_blocks,
+        prefix=PrefixConfig(enabled=prefix_cache),
+        fault=FaultConfig(deadline_s=deadline_s, max_queue=max_queue,
+                          shed_policy=shed_policy,
+                          auto_snapshot_every=auto_snapshot_every))
+    return base, shift, p_base, p_shift, ecfg, policy
+
+
+def build_engine(arch: str, *, faults=None, **kw):
+    """One ShiftEngine over an optional (data, sp, tp) mesh. With dp > 1
+    (and no explicit mesh) a dp×1×1 test mesh is built: the engine pages
+    per dp row — each row owns a private block pool and prefix index, and
+    queued requests are routed to the row with the most free blocks."""
+    base, shift, p_base, p_shift, ecfg, policy = _build_stack(arch, **kw)
     return ShiftEngine(base, shift, p_base, p_shift, ecfg, policy=policy,
                        faults=faults)
+
+
+def build_cluster(arch: str, replicas: int, *, routing="affinity",
+                  rebalance_every=8, faults=None, **kw) -> Router:
+    """N engine replicas over ONE shared model/params stack, behind a
+    Router. ``faults`` (a FaultPlan) applies to replica 0 only — the
+    cluster demo's skew/migration drills need a healthy destination."""
+    base, shift, p_base, p_shift, ecfg, policy = _build_stack(arch, **kw)
+    engines = [ShiftEngine(base, shift, p_base, p_shift, ecfg,
+                           policy=policy,
+                           faults=faults if i == 0 else None)
+               for i in range(replicas)]
+    return Router(engines, routing=routing, rebalance_every=rebalance_every)
+
+
+def _print_engine_summary(eng, label=""):
+    st = eng.stats()
+    print(f"{label}configs used: base={st.config_counts['base']} "
+          f"shift={st.config_counts['shift']}")
+    if st.paged:
+        print(f"{label}paged cache: {st.dp} dp row(s) x "
+              f"{st.blocks_per_row} blocks x {st.block_size} tokens, "
+              f"{st.preemptions} preemptions, {st.free_blocks} free at exit")
+        for r, free in enumerate(st.blocks.free_per_row):
+            print(f"{label}  row {r}: {free} free blocks")
+        p = st.prefix
+        if eng.cfg.prefix.enabled:
+            print(f"{label}prefix cache: {p.entries} cached blocks, "
+                  f"{p.hits} hits / {p.misses} misses, "
+                  f"{p.tokens_saved} prefill tokens saved, "
+                  f"{p.evictions} evictions, {p.cow_copies} COW copies")
+    else:
+        # the dense fallback is loud: say WHY paging is off (also recorded
+        # in prefix stats / step records)
+        print(f"{label}dense cache fallback: {st.paged_disabled_reason}")
 
 
 def main():
@@ -96,6 +144,13 @@ def main():
                     help="data-parallel rows: ONE engine pages per-row "
                          "block pools over a dp×1×1 mesh (CPU demo needs "
                          "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the cluster Router "
+                         "(prefix-affinity routing + live KV migration); "
+                         "1 = a bare engine, no Router")
+    ap.add_argument("--routing", default="affinity",
+                    choices=["affinity", "round-robin", "least-loaded"],
+                    help="Router policy for --replicas > 1")
     ap.add_argument("--metrics-out", metavar="PATH",
                     help="write the observability dump as JSON to PATH and "
                          "the Prometheus text exposition next to it "
@@ -131,21 +186,23 @@ def main():
                              p_route=args.p_fault, dp=args.dp)
         print(f"fault plan: seed={args.fault_seed} "
               f"{len(faults)} faults over {args.fault_steps} steps")
-    eng = build_engine(args.arch, adaptive=args.adaptive,
-                       block_size=args.block_size,
-                       num_blocks=args.num_blocks,
-                       prefix_cache=args.prefix_cache,
-                       dp=args.dp, deadline_s=args.deadline_s,
-                       max_queue=args.max_queue,
-                       shed_policy=args.shed_policy,
-                       auto_snapshot_every=args.auto_snapshot_every,
-                       faults=faults)
+    kw = dict(adaptive=args.adaptive, block_size=args.block_size,
+              num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
+              dp=args.dp, deadline_s=args.deadline_s,
+              max_queue=args.max_queue, shed_policy=args.shed_policy,
+              auto_snapshot_every=args.auto_snapshot_every)
+    if args.replicas > 1:
+        client = build_cluster(args.arch, args.replicas,
+                               routing=args.routing, faults=faults, **kw)
+        print(f"cluster: {args.replicas} replicas, routing={args.routing}")
+    else:
+        client = build_engine(args.arch, faults=faults, **kw)
     system = list(range(1000, 1000 + args.shared_prefix))
     reqs = [Request(i, system + list(range(1, 20 + 3 * i)),
                     max_new_tokens=args.max_new, arrival=time.monotonic())
             for i in range(args.requests)]
     for r in reqs:
-        eng.add_request(r)
+        client.submit(r)
 
     # graceful shutdown: SIGTERM (and Ctrl-C) drains in-flight decodes and
     # sheds the queue, so every request still reaches a typed terminal
@@ -158,54 +215,51 @@ def main():
         pass                          # not on the main thread (tests)
 
     t0 = time.monotonic()
-    interrupted = False
     try:
-        eng.run_until_idle()
+        client.run_until_idle()
     except KeyboardInterrupt:
-        interrupted = True
         print("\ninterrupt: draining in-flight requests, shedding queue...")
-        eng.drain()
+        client.drain()
+        st = client.stats()
+        ledgers = ([r.blocks for r in st.replicas]
+                   if args.replicas > 1 else [st.blocks])
+        for i, led in enumerate(ledgers):
+            print(f"drained: replica {i}: used={led.used} "
+                  f"pinned={led.pinned} blocks after shutdown")
     dt = time.monotonic() - t0
-    if interrupted:
-        acct = eng.block_accounting()
-        print(f"drained: used={acct['used']} pinned={acct['pinned']} "
-              "blocks after shutdown")
     for r in reqs:
-        ttft = (r.first_token_time - r.arrival) if r.first_token_time else -1
-        print(f"req {r.rid}: {len(r.generated)} tokens, "
-              f"reason={r.finish_reason}, ttft={ttft*1e3:.0f}ms, "
-              f"out={r.generated[:8]}...")
-    n_tok = sum(len(r.generated) for r in reqs)
-    # totals, not config_trace.count(): the trace is a rolling window
-    print(f"configs used: base={eng.config_counts['base']} "
-          f"shift={eng.config_counts['shift']}; "
-          f"{n_tok} tokens in {dt:.2f}s")
-    if eng.paged:
-        print(f"paged cache: {eng.dp} dp row(s) x "
-              f"{eng.kv.num_blocks_per_row} blocks x "
-              f"{eng.cfg.block_size} tokens, {eng.preemptions} preemptions, "
-              f"{eng.kv.num_free_blocks} free at exit")
-        for r in range(eng.dp):
-            routed = sum(1 for q in reqs if q.row == r)
-            print(f"  row {r}: {routed} requests routed, "
-                  f"{eng.kv.row_free_blocks(r)} free blocks")
-        if eng.prefix_rows is not None:
-            s = eng.prefix_stats
-            print(f"prefix cache: {s['entries']} cached blocks, "
-                  f"{s['hits']} hits / {s['misses']} misses, "
-                  f"{s['tokens_saved']} prefill tokens saved, "
-                  f"{s['evictions']} evictions, {s['cow_copies']} COW copies")
+        # read through the facade: after a live migration the submitted
+        # Request object is stale (the request lives on at its new replica)
+        live = client.request(r.rid) or r
+        ttft = (live.first_token_time - live.arrival) \
+            if live.first_token_time else -1
+        out = client.stream(r.rid)
+        print(f"req {r.rid}: {len(out)} tokens, "
+              f"reason={live.finish_reason}, ttft={ttft*1e3:.0f}ms, "
+              f"out={out[:8]}...")
+    n_tok = sum(len(client.stream(r.rid)) for r in reqs)
+    print(f"{n_tok} tokens in {dt:.2f}s")
+    if args.replicas > 1:
+        cs = client.stats()
+        for i, eng in enumerate(client.engines):
+            _print_engine_summary(eng, label=f"[replica {i}] ")
+        print(f"cluster: {cs.migrations} migrations "
+              f"({cs.migrated_blocks} KV blocks moved), "
+              f"routing={cs.routing}, {cs.steps} router steps")
     else:
-        # the dense fallback is loud: say WHY paging is off (also recorded
-        # in prefix_stats / step_log)
-        print(f"dense cache fallback: {eng.paged_disabled_reason}")
+        # totals, not config_trace.count(): the trace is a rolling window
+        _print_engine_summary(client)
 
-    dump = eng.obs.dump()
+    dump = client.dump() if args.replicas > 1 else client.obs.dump()
     print(format_report(build_report(dump)))
     if args.metrics_out:
-        eng.obs.write_json(args.metrics_out)
         prom = os.path.splitext(args.metrics_out)[0] + ".prom"
-        eng.obs.write_prometheus(prom)
+        if args.replicas > 1:
+            client.write_json(args.metrics_out)
+            client.write_prometheus(prom)
+        else:
+            client.obs.write_json(args.metrics_out)
+            client.obs.write_prometheus(prom)
         print(f"metrics written: {args.metrics_out} (JSON), {prom} "
               "(Prometheus text)")
     if args.trace_out:

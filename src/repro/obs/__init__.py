@@ -21,12 +21,13 @@ simulator.
 """
 from . import schema
 from .events import EventLog
-from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry, \
+    merge_snapshots
 from .observer import Observability, NullObs
 from .report import build_report, format_report, latency_throughput_table
 from .trace import chrome_trace, write_chrome_trace
 
 __all__ = ["schema", "EventLog", "Counter", "Gauge", "Histogram",
-           "MetricsRegistry", "Observability", "NullObs", "build_report",
-           "format_report", "latency_throughput_table", "chrome_trace",
-           "write_chrome_trace"]
+           "MetricsRegistry", "merge_snapshots", "Observability", "NullObs",
+           "build_report", "format_report", "latency_throughput_table",
+           "chrome_trace", "write_chrome_trace"]

@@ -240,3 +240,34 @@ class MetricsRegistry:
             hist.sum = float(h["sum"])
             hist.count = int(h["count"])
         return self
+
+
+def merge_snapshots(snaps) -> dict:
+    """Merge per-replica registry snapshots into one cluster view:
+    counters and histograms (same schema bounds everywhere) add; gauges
+    add too — they are cluster totals (queue depth, active requests, free
+    blocks) — except ``*_peak`` gauges, which take the max (a per-replica
+    peak summed across replicas is not a peak of anything). The result is
+    itself a valid ``MetricsRegistry.load_state`` input, which is how the
+    Router renders Prometheus text for the merged view."""
+    reg = MetricsRegistry()
+    for snap in snaps:
+        for c in snap.get("counters", []):
+            reg.counter(c["name"], **c["labels"]).inc(float(c["value"]))
+        for g in snap.get("gauges", []):
+            gauge = reg.gauge(g["name"], **g["labels"])
+            if g["name"].endswith("_peak"):
+                gauge.set_max(float(g["value"]))
+            else:
+                gauge.set(gauge.value + float(g["value"]))
+        for h in snap.get("histograms", []):
+            hist = reg.histogram(h["name"], **h["labels"])
+            if tuple(h["bounds"]) != hist.bounds:
+                raise ValueError(
+                    f"histogram {h['name']!r} bounds differ across "
+                    "replicas — snapshots cannot be merged")
+            hist.buckets = [a + b for a, b in zip(hist.buckets,
+                                                  h["buckets"])]
+            hist.sum += float(h["sum"])
+            hist.count += int(h["count"])
+    return reg.snapshot()

@@ -40,11 +40,17 @@ class Observability:
         self.events = EventLog(cap=event_cap)
         self.step_records: List[dict] = []
         self.enabled = True
+        # cluster replica id (None standalone). Set once by the Router via
+        # the engine facade; stamped centrally on every step record and
+        # event so no call site needs to thread it through.
+        self.replica: Optional[int] = None
 
     # ------------------------------------------------------------- steps
     def record_step(self, rec: dict) -> dict:
         """Append one per-iteration audit record (schema-checked) and
         derive the standard step metrics from it."""
+        if self.replica is not None:
+            rec.setdefault("replica", self.replica)
         schema.check_step_record(rec)
         self.step_records.append(rec)
         if len(self.step_records) > self.window:
@@ -72,6 +78,8 @@ class Observability:
     # ------------------------------------------------------------ events
     def emit(self, kind: str, *, step: int, ts: Optional[float] = None,
              rid: Optional[int] = None, **attrs) -> Optional[dict]:
+        if self.replica is not None:
+            attrs.setdefault("replica", self.replica)
         return self.events.emit(kind, step=step,
                                 ts=self.now() if ts is None else ts,
                                 rid=rid, **attrs)

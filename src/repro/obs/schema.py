@@ -80,6 +80,13 @@ COUNTERS = {
         ("Engine state snapshots captured (auto or explicit)", ()),
     "recoveries_total":
         ("Successful recover() restores from a retained snapshot", ()),
+    # ------------------------------------------------- cluster serving
+    "requests_migrated_total":
+        ("Live requests migrated off this replica (counted at the "
+         "source)", ()),
+    "migration_blocks_total":
+        ("KV blocks received through live migration (counted at the "
+         "destination)", ()),
 }
 
 # ``seam`` label values: the named injection points of repro.ft.faults —
@@ -138,6 +145,9 @@ EVENTS = (
     "quarantined",   # request terminated: killed the step too many times
     "recovered",     # engine state recovered from a retained snapshot
     "straggler",     # watchdog flagged this step as abnormally slow
+    # ------------------------------------------------- cluster serving
+    "migrate_out",   # live request extracted+released from this replica
+    "migrate_in",    # live request admitted with migrated KV blocks
 )
 
 # ------------------------------------------------------ step audit record

@@ -97,10 +97,22 @@ class ServeSim:
                  faults: Optional[FaultPlan] = None,
                  deadline_s: Optional[float] = None, max_queue: int = 0,
                  shed_policy: str = "reject-newest",
-                 quarantine_after: int = 3, retry_backoff: int = 2):
+                 quarantine_after: int = 3, retry_backoff: int = 2,
+                 replicas: Optional[int] = None,
+                 routing: str = "least-loaded"):
         self.cost = cost
         self.strategy = strategy
         self.n = n_chips
+        # multi-replica serving mirror of the cluster Router: ``replicas``
+        # overrides the strategy-derived replica count (each replica is an
+        # independent serving group) and ``routing`` selects the Router's
+        # policy A/B — "affinity" (hard preference for the replica that
+        # already holds the prefix), "round-robin", or the default
+        # "least-loaded" (block-demand signal with soft prefix credit,
+        # the pre-cluster behavior).
+        if routing not in ("least-loaded", "affinity", "round-robin"):
+            raise ValueError(f"unknown routing policy {routing!r}")
+        self.routing = routing
         self.chunk = prefill_chunk
         self.max_conc = max_concurrent
         self.block_size = kv_block_size
@@ -130,7 +142,10 @@ class ServeSim:
         # prefill-OR-decode engine: an iteration that takes prefill tokens
         # makes no decode progress (the TPOT interference being measured).
         self.mixed = mixed
-        n_rep = n_chips if strategy == "dp" else 1
+        n_rep = (replicas if replicas is not None
+                 else (n_chips if strategy == "dp" else 1))
+        if n_rep < 1:
+            raise ValueError("replicas must be >= 1")
         self.reps = [ReplicaState(idx=i) for i in range(n_rep)]
         # the same observability surface the live engine drives: one metric
         # schema, the same step-record and event shapes. Timestamps are the
@@ -459,6 +474,7 @@ class ServeSim:
         assign: List[List[SimRequest]] = [[] for _ in self.reps]
         load = [0] * len(self.reps)
         seen: List[set] = [set() for _ in self.reps]
+        rr = 0
         for r in reqs:
             need = blocks_for_tokens(r.n_in + r.n_out + 1, self.block_size)
 
@@ -467,8 +483,21 @@ class ServeSim:
                     return need - self._matched_blocks(r)
                 return need
 
-            best = min(range(len(self.reps)),
-                       key=lambda i: (load[i] + demand(i), i))
+            if self.routing == "round-robin":
+                best = rr % len(self.reps)
+                rr += 1
+            elif (self.routing == "affinity" and self.prefix_cache
+                    and r.prefix_id >= 0
+                    and any(r.prefix_id in s for s in seen)):
+                # hard affinity (the Router's policy): the request goes
+                # where its prefix already lives, load be damned — ties
+                # (prefix resident on several replicas) break by load
+                owners = [i for i, s in enumerate(seen)
+                          if r.prefix_id in s]
+                best = min(owners, key=lambda i: (load[i], i))
+            else:
+                best = min(range(len(self.reps)),
+                           key=lambda i: (load[i] + demand(i), i))
             assign[best].append(r)
             load[best] += demand(best)
             self.obs.emit("routed", step=self.step_count, ts=r.arrival,

@@ -1,0 +1,156 @@
+"""Typed serving API: the nested EngineConfig groups (PrefixConfig /
+FaultConfig / ObsConfig) with the flat-kwarg deprecation shim, the typed
+frozen stats records (PrefixStats / BlockLedger / EngineStats /
+ClusterStats) with their dict-compat surface, and the ServingClient
+protocol. Model-free — the engine/Router integration half lives in
+tests/test_cluster.py."""
+import warnings
+
+import pytest
+
+from repro.engine import (BlockLedger, ClusterStats, EngineConfig,
+                          EngineStats, FaultConfig, ObsConfig, PrefixConfig,
+                          PrefixStats, ServingClient)
+from repro.engine.api import _reset_flat_kwarg_warning
+
+
+# ---------------------------------------------------------------------------
+# nested config groups + flat-kwarg shim
+# ---------------------------------------------------------------------------
+def test_nested_groups_construct():
+    cfg = EngineConfig(prefix=PrefixConfig(enabled=True),
+                       fault=FaultConfig(max_queue=4, deadline_s=1.5),
+                       obs=ObsConfig(window=64, event_cap=128))
+    assert cfg.prefix.enabled
+    assert cfg.fault.max_queue == 4 and cfg.fault.deadline_s == 1.5
+    assert cfg.obs.window == 64 and cfg.obs.event_cap == 128
+
+
+def test_flat_kwargs_map_and_warn_once():
+    _reset_flat_kwarg_warning()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = EngineConfig(prefix_cache=True, max_queue=7,
+                           shed_policy="evict-longest-queued",
+                           deadline_s=2.0, auto_snapshot_every=3)
+        assert len(w) == 1 and issubclass(w[0].category, DeprecationWarning)
+        assert "prefix_cache" in str(w[0].message)
+        # once per process: a second flat construction stays silent
+        EngineConfig(max_queue=1)
+        assert len(w) == 1
+    assert cfg.prefix.enabled
+    assert cfg.fault.max_queue == 7
+    assert cfg.fault.shed_policy == "evict-longest-queued"
+    assert cfg.fault.deadline_s == 2.0
+    assert cfg.fault.auto_snapshot_every == 3
+    # defaults for unspecified fault knobs survive the mapping
+    assert cfg.fault.quarantine_after == FaultConfig().quarantine_after
+    _reset_flat_kwarg_warning()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        EngineConfig(prefix_cache=False)
+        assert len(w) == 1               # reset hook re-arms the warning
+
+
+def test_flat_obs_bool_maps_to_obs_config():
+    _reset_flat_kwarg_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        off = EngineConfig(obs=False)
+        on = EngineConfig(obs=True)
+    assert isinstance(off.obs, ObsConfig) and not off.obs.enabled
+    assert isinstance(on.obs, ObsConfig) and on.obs.enabled
+    assert not bool(off.obs) and bool(on.obs)
+
+
+def test_back_compat_read_properties():
+    cfg = EngineConfig(prefix=PrefixConfig(enabled=True),
+                       fault=FaultConfig(max_queue=9, straggler_factor=4.0))
+    assert cfg.prefix_cache is True
+    assert cfg.max_queue == 9
+    assert cfg.straggler_factor == 4.0
+    assert cfg.shed_policy == FaultConfig().shed_policy
+
+
+def test_flat_and_nested_conflict_raises():
+    _reset_flat_kwarg_warning()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        with pytest.raises(TypeError):
+            EngineConfig(fault=FaultConfig(max_queue=2), max_queue=3)
+        with pytest.raises(TypeError):
+            EngineConfig(prefix=PrefixConfig(enabled=True),
+                         prefix_cache=True)
+
+
+def test_unknown_kwarg_raises():
+    with pytest.raises(TypeError):
+        EngineConfig(definitely_not_a_knob=1)
+
+
+# ---------------------------------------------------------------------------
+# typed stats records: frozen, dict-compatible
+# ---------------------------------------------------------------------------
+def test_prefix_stats_mapping_compat():
+    s = PrefixStats(entries=3, hits=2, misses=1, tokens_saved=16,
+                    evictions=0, cow_copies=4, paged_disabled_reason=None)
+    assert s["hits"] == 2 and s["tokens_saved"] == 16
+    assert "entries" in s and "nope" not in s
+    with pytest.raises(KeyError):
+        s["nope"]
+    d = s.as_dict()
+    assert d["cow_copies"] == 4 and s == d
+    with pytest.raises(Exception):       # frozen
+        s.hits = 5
+
+
+def test_block_ledger_mapping_compat():
+    led = BlockLedger(used=2, pinned=1, free=5, free_per_row=(5,))
+    assert led["used"] == 2 and led["pinned"] == 1
+    assert led == {"used": 2, "pinned": 1, "free": 5, "free_per_row": (5,)}
+    assert led != {"used": 0, "pinned": 0}   # strict, not subset
+    empty = BlockLedger()
+    assert empty.used == 0 and empty.pinned == 0
+
+
+def test_cluster_stats_sums_over_replicas():
+    def mk(queue, active):
+        return EngineStats(
+            steps=1, queue_depth=queue, active=active, preemptions=0,
+            config_counts={"base": 1, "shift": 0}, paged=True,
+            paged_disabled_reason=None, dp=1, block_size=16,
+            blocks_per_row=8, free_blocks=8, queued_block_demand=0,
+            prefix=PrefixStats(0, 0, 0, 0, 0, 0, None),
+            blocks=BlockLedger(), replica=0)
+    cs = ClusterStats(replicas=(mk(2, 1), mk(0, 3)), routing="affinity",
+                      steps=5, migrations=1, migrated_blocks=3)
+    assert cs.queue_depth == 2 and cs.active == 4
+    assert cs.migrations == 1 and cs.routing == "affinity"
+
+
+# ---------------------------------------------------------------------------
+# ServingClient protocol
+# ---------------------------------------------------------------------------
+def test_serving_client_is_runtime_checkable():
+    class Stub:
+        def submit(self, req):
+            return 0
+
+        def cancel(self, rid):
+            return False
+
+        def step(self):
+            return False
+
+        def stream(self, rid):
+            return []
+
+        def stats(self):
+            return None
+
+    assert isinstance(Stub(), ServingClient)
+
+    class NotAClient:
+        pass
+
+    assert not isinstance(NotAClient(), ServingClient)

@@ -1,0 +1,386 @@
+"""Cluster serving: Router parity (N=1 is bit-identical to a bare engine
+on the mixed AND serialized paths), prefix-affinity routing (a shared
+prefix prefills once cluster-wide), mid-stream live migration (typed
+block-granular TransferOps, exactly-once bit-identical streams via the
+DeliveryLog), skew-triggered rebalancing, the merged observability dump,
+the ServeSim routing mirror, and the grep-enforced rule that no caller
+outside src/repro/engine/ touches engine private state."""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.cluster import ROUTING_POLICIES, Router, TransferOp, \
+    build_transfer_plan
+from repro.engine import (ShiftEngine, EngineConfig, PrefixConfig, Request,
+                          ServingClient)
+from repro.core.policy import ThresholdPolicy
+from repro.ft.recovery import ReplayDivergence
+from repro.models import build_model
+from repro.obs import MetricsRegistry, merge_snapshots
+
+
+@pytest.fixture(scope="module")
+def mp():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _engine(mp, prefix=True, **kw):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
+                        block_size=8, prefix=PrefixConfig(enabled=prefix),
+                        **kw)
+    return ShiftEngine(m, m, params, params, ecfg, policy=ThresholdPolicy(4))
+
+
+def _reqs(n=3, max_new=6, shared=()):
+    return [Request(i, list(shared) + list(range(1, 14 + 3 * i)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# TransferOp units (model-free)
+# ---------------------------------------------------------------------------
+def test_transfer_op_validation():
+    with pytest.raises(ValueError):
+        TransferOp("teleport", 0, 0, 1)
+    with pytest.raises(ValueError):
+        TransferOp("kv_block", 0, 0, 1)       # missing block ids
+    op = TransferOp("kv_block", 0, 0, 1, src_block=3, dst_block=7,
+                    logical=0, tokens=8)
+    with pytest.raises(Exception):            # frozen
+        op.tokens = 9
+
+
+def test_build_transfer_plan_shapes():
+    export = {"state": {"rid": 5, "prefilled": 19},
+              "src_blocks": [3, 4, 9], "block_size": 8}
+    ops = build_transfer_plan(export, [1, 2, 6], 0, 1)
+    assert [o.kind for o in ops] == ["state"] + ["kv_block"] * 3
+    assert all(o.rid == 5 and o.src_replica == 0 and o.dst_replica == 1
+               for o in ops)
+    blocks = ops[1:]
+    assert [(o.src_block, o.dst_block, o.logical) for o in blocks] \
+        == [(3, 1, 0), (4, 2, 1), (9, 6, 2)]
+    # only the last block is partial: 19 tokens over bs=8 -> 8, 8, 3
+    assert [o.tokens for o in blocks] == [8, 8, 3]
+    with pytest.raises(ValueError):
+        build_transfer_plan(export, [1, 2], 0, 1)   # count mismatch
+
+
+def test_router_rejects_unknown_policy_and_empty():
+    with pytest.raises(ValueError):
+        Router([], routing="affinity")
+    assert "affinity" in ROUTING_POLICIES
+
+
+# ---------------------------------------------------------------------------
+# N=1 parity: the Router is a drop-in ServingClient over one engine
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("mixed", [True, False],
+                         ids=["mixed", "serialized"])
+def test_single_replica_router_parity(mp, mixed):
+    bare = _engine(mp, mixed=mixed)
+    ref = _reqs()
+    for r in ref:
+        bare.add_request(r)
+    bare.run_until_idle(max_steps=2000)
+
+    router = Router([_engine(mp, mixed=mixed)], routing="affinity")
+    assert isinstance(router, ServingClient)
+    assert isinstance(bare, ServingClient)
+    reqs = _reqs()
+    for r in reqs:
+        assert router.submit(r) == r.rid
+    router.run_until_idle()
+    for a, b in zip(ref, reqs):
+        assert list(b.generated) == list(a.generated)     # bit-identical
+        assert router.stream(b.rid) == list(a.generated)
+        assert router.delivered(b.rid) == list(a.generated)
+    # identical work: same config choices step for step (the trailing
+    # idle-step count may differ by the drain loop's exit check)
+    st = router.stats()
+    assert st.replicas[0].config_counts == bare.stats().config_counts
+    assert router.cancel(999) is False
+
+
+# ---------------------------------------------------------------------------
+# affinity: a shared prefix prefills ONCE cluster-wide
+# ---------------------------------------------------------------------------
+def test_affinity_prefills_shared_prefix_once_cluster_wide(mp):
+    shared = list(range(200, 224))              # 24 tokens = 3 blocks of 8
+    router = Router([_engine(mp), _engine(mp)], routing="affinity",
+                    rebalance_every=0)
+    reqs = [Request(i, shared + [300 + 2 * i, 301 + 2 * i],
+                    max_new_tokens=4) for i in range(4)]
+    for r in reqs:
+        router.submit(r)
+    owners = {router.owner(r.rid) for r in reqs}
+    assert len(owners) == 1                     # all stuck to one replica
+    router.run_until_idle()
+    # the shared 24-token span ran through prefill exactly once: every
+    # follower served it from the prefix cache (in-flight dedup included)
+    saved = router.counter_total("prefix_tokens_saved_total")
+    assert saved == (len(reqs) - 1) * 24
+    # the other replica never prefilled anything
+    idle = 1 - owners.pop()
+    assert router.engines[idle].obs.registry.counter_total(
+        "tokens_prefill_total") == 0
+
+
+def test_round_robin_scatters_and_wastes_prefills(mp):
+    shared = list(range(200, 224))
+    router = Router([_engine(mp), _engine(mp)], routing="round-robin",
+                    rebalance_every=0)
+    reqs = [Request(i, shared + [300 + 2 * i, 301 + 2 * i],
+                    max_new_tokens=4) for i in range(4)]
+    for r in reqs:
+        router.submit(r)
+    assert {router.owner(r.rid) for r in reqs} == {0, 1}
+    router.run_until_idle()
+    # both replicas prefill the shared span once -> only 2 of 4 reuse it
+    saved = router.counter_total("prefix_tokens_saved_total")
+    assert saved == (len(reqs) - 2) * 24
+
+
+# ---------------------------------------------------------------------------
+# live migration: exactly-once, bit-identical
+# ---------------------------------------------------------------------------
+def test_mid_stream_migration_is_exactly_once_bit_identical(mp):
+    prompt = list(range(1, 17))
+    bare = _engine(mp)
+    ref = Request(0, prompt, max_new_tokens=8)
+    bare.add_request(ref)
+    bare.run_until_idle(max_steps=2000)
+
+    router = Router([_engine(mp), _engine(mp)], routing="least-loaded",
+                    rebalance_every=0)
+    req = Request(0, prompt, max_new_tokens=8)
+    router.submit(req)
+    for _ in range(200):                        # decode into mid-stream
+        router.step()
+        router.poll()
+        if len(router.stream(0)) >= 3:
+            break
+    src = router.owner(0)
+    assert len(router.stream(0)) >= 3 and not req.done
+    assert 0 in router.engines[src].migratable()
+    pre = list(router.delivered(0))
+
+    ops = router.migrate(0, 1 - src)
+    assert ops is not None
+    assert router.owner(0) == 1 - src
+    # typed plan: one state op + one op per committed block, every block
+    # full except possibly the last
+    assert ops[0].kind == "state"
+    kv_ops = [o for o in ops[1:]]
+    assert all(o.kind == "kv_block" for o in kv_ops)
+    assert sum(o.tokens for o in kv_ops) >= len(prompt)
+    assert router.transfer_log[-1] is ops
+    # source no longer knows the rid; destination serves the stream
+    assert router.engines[src].request(0) is None
+    assert router.engines[1 - src].request(0) is not None
+
+    router.run_until_idle()                     # polls every step: any
+    final = router.delivered(0)                 # divergence would raise
+    assert final[:len(pre)] == pre              # exactly-once: no re-send
+    assert final == list(ref.generated)         # bit-identical across move
+    cs = router.stats()
+    assert cs.migrations == 1 and cs.migrated_blocks == len(kv_ops)
+    # both sides logged the lifecycle, stamped with their replica id
+    out_ev = [e for e in router.engines[src].obs.events.events
+              if e["kind"] == "migrate_out"]
+    in_ev = [e for e in router.engines[1 - src].obs.events.events
+             if e["kind"] == "migrate_in"]
+    assert out_ev and out_ev[0]["replica"] == src
+    assert in_ev and in_ev[0]["replica"] == 1 - src
+    # zero leak on both replicas after shutdown
+    router.drain()
+    for eng in router.engines:
+        led = eng.block_accounting()
+        assert led.used == 0 and led.pinned == 0
+
+
+def test_delivery_log_catches_divergence_after_migration(mp):
+    router = Router([_engine(mp), _engine(mp)], routing="least-loaded",
+                    rebalance_every=0)
+    req = Request(0, list(range(1, 17)), max_new_tokens=8)
+    router.submit(req)
+    for _ in range(200):
+        router.step()
+        router.poll()
+        if len(router.stream(0)) >= 2:
+            break
+    src = router.owner(0)
+    assert router.migrate(0, 1 - src) is not None
+    # corrupt the migrated request's already-delivered prefix: the next
+    # poll must refuse to pass it off as the same stream
+    moved = router.engines[1 - src].request(0)
+    moved.generated[0] += 1
+    with pytest.raises(ReplayDivergence):
+        router.poll()
+
+
+def test_rebalance_migrates_under_skew(mp):
+    shared = list(range(400, 424))
+    # affinity piles all four requests onto one replica; the periodic skew
+    # check must move at least one mid-decode request to the idle replica
+    router = Router([_engine(mp), _engine(mp)], routing="affinity",
+                    rebalance_every=2, rebalance_skew=2)
+    reqs = [Request(i, shared + [500 + 2 * i, 501 + 2 * i],
+                    max_new_tokens=8) for i in range(4)]
+    bare = _engine(mp)
+    ref = [Request(i, list(r.prompt), max_new_tokens=8)
+           for i, r in enumerate(reqs)]
+    for r in ref:
+        bare.add_request(r)
+    bare.run_until_idle(max_steps=2000)
+    for r in reqs:
+        router.submit(r)
+    assert len({router.owner(r.rid) for r in reqs}) == 1
+    router.run_until_idle()
+    assert router.migrations >= 1
+    for r, rr in zip(reqs, ref):
+        assert router.delivered(r.rid) == list(rr.generated)
+
+
+def test_migration_aborts_leave_source_intact(mp):
+    router = Router([_engine(mp), _engine(mp)], routing="least-loaded",
+                    rebalance_every=0)
+    req = Request(0, list(range(1, 17)), max_new_tokens=4)
+    router.submit(req)
+    src = router.owner(0)
+    # still prefilling: not migratable -> no-op, source untouched
+    router.step()
+    if 0 not in router.engines[src].migratable():
+        assert router.migrate(0, 1 - src) is None
+        assert router.owner(0) == src
+        assert router.engines[src].request(0) is req
+    router.run_until_idle()
+    # finished: no longer migratable either
+    assert router.migrate(0, 1 - src) is None
+    assert router.delivered(0) == list(req.generated)
+
+
+# ---------------------------------------------------------------------------
+# merged observability
+# ---------------------------------------------------------------------------
+def test_cluster_dump_is_one_schema_valid_view(mp, tmp_path):
+    router = Router([_engine(mp), _engine(mp)], routing="round-robin",
+                    rebalance_every=0)
+    for r in _reqs(4, max_new=4):
+        router.submit(r)
+    router.run_until_idle()
+    dump = router.dump()
+    assert dump["source"] == "cluster"
+    # every step record and event carries its replica stamp
+    assert {rec["replica"] for rec in dump["steps"]} == {0, 1}
+    assert all("replica" in e for e in dump["events"])
+    # steps interleave in time order
+    starts = [rec["t_start"] for rec in dump["steps"]]
+    assert starts == sorted(starts)
+    # merged counters = sum of per-replica counters
+    per = sum(eng.obs.registry.counter_total("requests_finished_total")
+              for eng in router.engines)
+    merged = {c["name"]: c["value"] for c in dump["metrics"]["counters"]}
+    assert merged["requests_finished_total"] == per == 4
+    # the merged snapshot loads into a registry and renders Prometheus
+    prom = tmp_path / "cluster.prom"
+    router.write_prometheus(str(prom))
+    text = prom.read_text()
+    assert "repro_requests_finished_total 4" in text
+    router.write_json(str(tmp_path / "cluster.json"))
+
+
+def test_merge_snapshots_sums_counters_maxes_peaks():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("requests_arrived_total").inc(3)
+    b.counter("requests_arrived_total").inc(4)
+    a.gauge("free_blocks").set(5)
+    b.gauge("free_blocks").set(7)
+    a.gauge("shared_blocks_peak").set_max(9)
+    b.gauge("shared_blocks_peak").set_max(2)
+    a.histogram("step_seconds").observe(0.01)
+    b.histogram("step_seconds").observe(0.02)
+    merged = MetricsRegistry().load_state(
+        merge_snapshots([a.snapshot(), b.snapshot()]))
+    assert merged.counter_total("requests_arrived_total") == 7
+    assert merged.gauge_value("free_blocks") == 12          # cluster total
+    assert merged.gauge_value("shared_blocks_peak") == 9    # max, not sum
+    h = merged.histogram("step_seconds")
+    assert h.count == 2 and abs(h.sum - 0.03) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# ServeSim mirror
+# ---------------------------------------------------------------------------
+def test_sim_multi_replica_routing_ab():
+    from repro.configs import get_config
+    from repro.roofline.terms import H200
+    from repro.sim.costmodel import CostModel
+    from repro.sim.simulator import ServeSim, SimRequest
+
+    cfg = get_config("qwen3-8b")
+
+    def run(routing):
+        sim = ServeSim(CostModel(cfg, hw=H200), "shift", n_chips=8,
+                       prefill_chunk=512, prefix_cache=True, replicas=2,
+                       routing=routing)
+        sim.run([SimRequest(i, 0.05 * i, 256 + 64, 16, prefix_id=0,
+                            prefix_len=256) for i in range(8)])
+        return sim
+
+    aff = run("affinity")
+    rr = run("round-robin")
+    ll = run("least-loaded")
+    assert len(aff.reps) == 2
+    # affinity: the shared span prefills once cluster-wide (7 of 8 reuse);
+    # round-robin pays it once per replica (6 of 8 reuse)
+    assert aff.prefill_tokens_saved == 7 * 256
+    assert rr.prefill_tokens_saved == 6 * 256
+    assert aff.prefill_tokens_saved > rr.prefill_tokens_saved
+    assert ll.prefill_tokens_saved >= rr.prefill_tokens_saved
+    with pytest.raises(ValueError):
+        ServeSim(CostModel(cfg, hw=H200), "shift", routing="teleport")
+
+
+# ---------------------------------------------------------------------------
+# facade enforcement: nobody outside src/repro/engine touches privates
+# ---------------------------------------------------------------------------
+def test_no_engine_private_state_outside_engine():
+    """Grep-enforced API boundary: engine internals (private attrs, the
+    slot table, the raw KV object) are reachable only from inside
+    src/repro/engine/. Everything else — cluster, launch, sim, benchmarks
+    — goes through the ServingClient facade."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    forbidden = [r"\._snap_ring", r"\._bt_host", r"\._step_copies",
+                 r"\._inflight", r"\._prefill_done", r"\._release_slot",
+                 r"\._apply_copies\(", r"\.slot_req", r"\._retryable",
+                 r"\.kv\."]
+    pat = re.compile("|".join(forbidden))
+    offenders = []
+    for base in ("src/repro", "benchmarks"):
+        for dirpath, _, names in os.walk(os.path.join(root, base)):
+            rel = os.path.relpath(dirpath, root)
+            if rel.startswith(os.path.join("src", "repro", "engine")) \
+                    or rel.startswith(os.path.join("src", "repro",
+                                                   "cache")):
+                continue                 # cache owns the kv objects
+            for name in names:
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                with open(path) as f:
+                    for ln, line in enumerate(f, 1):
+                        if pat.search(line):
+                            offenders.append(
+                                f"{os.path.relpath(path, root)}:{ln}: "
+                                f"{line.strip()}")
+    assert not offenders, \
+        "engine private state accessed outside src/repro/engine/:\n" \
+        + "\n".join(offenders)

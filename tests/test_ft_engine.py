@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import pytest
 
 from conftest import reduced_cfg
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import (FaultConfig, PrefixConfig, ShiftEngine,
+                          EngineConfig, Request)
 from repro.engine.request import FinishReason
 from repro.ft import Fault, FaultPlan, StragglerWatchdog
 from repro.models import build_model
@@ -28,9 +29,13 @@ def mp():
     return m, m.init_params(jax.random.key(0))
 
 
-def _engine(mp, faults=None, now=None, **kw):
+def _engine(mp, faults=None, now=None, num_blocks=0, prefix_cache=False,
+            **fault_kw):
     m, params = mp
-    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                        num_blocks=num_blocks,
+                        prefix=PrefixConfig(enabled=prefix_cache),
+                        fault=FaultConfig(**fault_kw))
     kws = {"now": now} if now is not None else {}
     return ShiftEngine(m, m, params, params, ecfg, policy=Always(True),
                        faults=faults, **kws)
@@ -99,7 +104,7 @@ def test_bounded_queue_shed_policy(mp, policy, shed_rids):
     # for the single queue seat (max_queue=1)
     m, params = mp
     ecfg = EngineConfig(max_slots=1, s_max=64, prefill_chunk=8,
-                        max_queue=1, shed_policy=policy)
+                        fault=FaultConfig(max_queue=1, shed_policy=policy))
     eng = ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
     reqs = _reqs(5)
     eng.add_request(reqs[0])
@@ -189,7 +194,7 @@ def test_fault_storm_all_requests_terminal(mp):
     eng.drain(max_steps=400)
     assert all(r.finish_reason is not None for r in reqs)
     acct = eng.block_accounting()
-    assert acct == {"used": 0, "pinned": 0}
+    assert acct.used == 0 and acct.pinned == 0
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +212,8 @@ def test_drain_finishes_inflight_and_sheds_queued(mp):
     eng.drain()
     assert reqs[0].finish_reason is FinishReason.OK   # in-flight completes
     assert {r.finish_reason for r in reqs[1:]} == {FinishReason.SHED}
-    assert eng.block_accounting() == {"used": 0, "pinned": 0}
+    acct = eng.block_accounting()
+    assert acct.used == 0 and acct.pinned == 0
     # requests arriving after shutdown are shed immediately
     late = Request(9, list(range(1, 8)), max_new_tokens=2)
     eng.add_request(late)

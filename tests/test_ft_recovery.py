@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from conftest import reduced_cfg
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import FaultConfig, ShiftEngine, EngineConfig, Request
 from repro.engine.request import FinishReason
 from repro.ft import (DeliveryLog, Fault, FaultPlan, SnapshotError,
                       corrupt_snapshot)
@@ -29,9 +29,10 @@ def mp():
     return m, m.init_params(jax.random.key(0))
 
 
-def _engine(mp, **kw):
+def _engine(mp, **fault_kw):
     m, params = mp
-    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                        fault=FaultConfig(**fault_kw))
     return ShiftEngine(m, m, params, params, ecfg, policy=Always(True))
 
 

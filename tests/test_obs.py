@@ -11,7 +11,8 @@ import pytest
 
 from conftest import reduced_cfg
 from repro.core.policy import ThresholdPolicy
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import (ObsConfig, PrefixConfig, ShiftEngine,
+                          EngineConfig, Request)
 from repro.models import build_model
 from repro.obs import (schema, MetricsRegistry, Observability,
                        build_report, chrome_trace)
@@ -120,9 +121,11 @@ def _fake_clock():
     return lambda: next(c) * 1e-3
 
 
-def _run_engine(mp, n_req=3, n_new=5, **kw):
+def _run_engine(mp, n_req=3, n_new=5, prefix_cache=False, obs=True, **kw):
     m, params = mp
-    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, **kw)
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                        prefix=PrefixConfig(enabled=prefix_cache),
+                        obs=ObsConfig(enabled=obs), **kw)
     eng = ShiftEngine(m, m, params, params, ecfg,
                       policy=ThresholdPolicy(4), now=_fake_clock())
     for i in range(n_req):
@@ -194,7 +197,7 @@ def test_snapshot_restore_carries_obs_state(mp, mixed):
     restore, on both the mixed and the serialized scheduling paths."""
     m, params = mp
     ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
-                        prefix_cache=True, mixed=mixed)
+                        prefix=PrefixConfig(enabled=True), mixed=mixed)
     eng = ShiftEngine(m, m, params, params, ecfg,
                       policy=ThresholdPolicy(4), now=_fake_clock())
     for i in range(3):

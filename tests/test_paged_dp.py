@@ -14,7 +14,7 @@ from conftest import make_mesh, reduced_cfg
 from repro.cache import PagedKVCache, PrefixIndex
 from repro.core.invariance import verify_paged_invariance
 from repro.core.policy import ThresholdPolicy
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import PrefixConfig, ShiftEngine, EngineConfig, Request
 from repro.models import build_model
 from repro.models.model import Model
 from repro.parallel import Layout
@@ -51,7 +51,8 @@ def test_dp2_engine_matches_routed_dp1_engines(mixed):
     ps = ms.init_params(jax.random.key(0))
     n_req = 6 if mixed else 4
     ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
-                        block_size=8, prefix_cache=mixed, mixed=mixed)
+                        block_size=8, prefix=PrefixConfig(enabled=mixed),
+                        mixed=mixed)
     eng = ShiftEngine(mb, ms, pb, ps, ecfg, policy=ThresholdPolicy(4))
     assert eng.paged and eng.dp == 2 and eng.slots_per_row == 2
     reqs = [Request(i, list(range(1, 12 + i)), max_new_tokens=6)
@@ -67,7 +68,8 @@ def test_dp2_engine_matches_routed_dp1_engines(mixed):
         e1 = ShiftEngine(m1, m1, p1, p1,
                          EngineConfig(max_slots=2, s_max=64, prefill_chunk=8,
                                       threshold=4, block_size=8,
-                                      prefix_cache=mixed, mixed=mixed),
+                                      prefix=PrefixConfig(enabled=mixed),
+                                      mixed=mixed),
                          policy=ThresholdPolicy(4))
         sub = [Request(r.rid, list(r.prompt), max_new_tokens=6)
                for r in reqs if rows[r.rid] == row]
@@ -166,7 +168,7 @@ def test_dp_engine_snapshot_restores_per_row_state():
     mb, ms = _dp2_models(cfg)
     pb = mb.init_params(jax.random.key(0))
     ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
-                        block_size=8, prefix_cache=True)
+                        block_size=8, prefix=PrefixConfig(enabled=True))
     eng = ShiftEngine(mb, ms, pb, pb, ecfg, policy=ThresholdPolicy(4))
     reqs = [Request(i, list(range(1, 14 + i)), max_new_tokens=4)
             for i in range(4)]
@@ -265,7 +267,8 @@ def test_concurrent_same_prefix_prefill_shared():
         eng = ShiftEngine(m, m, params, params,
                           EngineConfig(max_slots=4, s_max=64,
                                        prefill_chunk=8, threshold=4,
-                                       block_size=8, prefix_cache=True),
+                                       block_size=8,
+                                       prefix=PrefixConfig(enabled=True)),
                           policy=ThresholdPolicy(4))
         return _run(eng, [Request(rid, prompt, max_new_tokens=5)])[rid]
 
@@ -273,7 +276,7 @@ def test_concurrent_same_prefix_prefill_shared():
     eng = ShiftEngine(m, m, params, params,
                       EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
                                    threshold=4, block_size=8,
-                                   prefix_cache=True),
+                                   prefix=PrefixConfig(enabled=True)),
                       policy=ThresholdPolicy(4))
     ra = Request(0, pa, max_new_tokens=5)
     rb = Request(1, pb, max_new_tokens=5)

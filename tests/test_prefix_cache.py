@@ -16,7 +16,7 @@ from repro.cache import (BlockAllocator, PagedKVCache, PrefixIndex,
 from repro.core.invariance import (shared_blocks_identical,
                                    verify_paged_invariance)
 from repro.core.policy import ThresholdPolicy
-from repro.engine import ShiftEngine, EngineConfig, Request
+from repro.engine import PrefixConfig, ShiftEngine, EngineConfig, Request
 from repro.models import build_model
 from repro.models.model import Model
 from repro.parallel import Layout
@@ -253,7 +253,8 @@ def test_cow_append_shared_tail_model_streams_independent():
 # ---------------------------------------------------------------------------
 def _mk_engine(m, params, prefix_cache, **kw):
     ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
-                        block_size=8, prefix_cache=prefix_cache, **kw)
+                        block_size=8,
+                        prefix=PrefixConfig(enabled=prefix_cache), **kw)
     return ShiftEngine(m, m, params, params, ecfg, policy=ThresholdPolicy(4))
 
 
@@ -377,7 +378,7 @@ def test_engine_oversubscribed_with_prefix_cache_completes_all():
     params = m.init_params(jax.random.key(0))
     ecfg = EngineConfig(max_slots=16, s_max=64, prefill_chunk=8,
                         threshold=4, block_size=8, num_blocks=25,
-                        prefix_cache=True)
+                        prefix=PrefixConfig(enabled=True))
     eng = ShiftEngine(m, m, params, params, ecfg, policy=ThresholdPolicy(4))
     reqs = [Request(i, list(range(1, 13 + i % 5)), max_new_tokens=6)
             for i in range(32)]

@@ -14,7 +14,12 @@ Each drill builds a reduced-model engine, injects a deterministic
                auto-snapshot ring: the delivered token streams are
                exactly-once and bit-identical to an uninterrupted run;
 - ``storm``  — every seam at once from one seed: typed outcomes + zero
-               leak under compound pressure.
+               leak under compound pressure;
+- ``reshard``— elastic deployment swap mid-decode UNDER forward faults:
+               a dp=2 engine grows to merged pure-TP and shrinks back
+               while a seeded fault plan poisons steps; completed
+               streams stay bit-identical to a fault-free static run
+               and the ledger drains to zero.
 
 Exit 0 when the contract holds, 1 with a per-assertion report otherwise;
 ``--out`` writes a JSON artifact either way. Same seed -> same drill,
@@ -24,7 +29,11 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+# the reshard drill runs a dp=2 engine on a host mesh
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -180,8 +189,67 @@ def drill_storm(mp, seed, results):
            len(eng.retained_snapshots()) > 0 and eng.recover() is eng)
 
 
+def drill_reshard(mp, seed, results):
+    # this drill builds its own dp=2 meshed stack: the shared
+    # single-device models cannot change layout
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.model import Model
+    from repro.parallel import Layout
+
+    cfg = get_config("qwen3-8b").reduced()
+    mesh_dp = make_test_mesh(data=2, sp=1, tp=1)
+    mesh_tp = make_test_mesh(data=1, sp=1, tp=2)
+    lay_dp = Layout.from_mesh(mesh_dp, dp=("data",), sp=("sp",),
+                              tp=("tp",))
+    lay_tp = Layout.from_mesh(mesh_tp, dp=("data",), sp=("sp",),
+                              tp=("tp",))
+
+    def engine(faults=None):
+        mb = Model(cfg=cfg, lay=lay_dp, mesh=mesh_dp, dtype=jnp.float32)
+        ms = Model(cfg=cfg, lay=lay_dp.to_shift(), mesh=mesh_dp,
+                   dtype=jnp.float32)
+        ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                            block_size=8)
+        return ShiftEngine(mb, ms, mb.init_params(jax.random.key(0)),
+                           ms.init_params(jax.random.key(0)), ecfg,
+                           policy=_AlwaysBase(), faults=faults)
+
+    ref_eng = engine()
+    ref_reqs = _reqs(n_new=8)
+    for r in ref_reqs:
+        ref_eng.add_request(r)
+    ref_eng.run_until_idle()
+    ref = {r.rid: list(r.generated) for r in ref_reqs}
+
+    plan = random_plan(seed, 40, p_forward=0.15)
+    eng = engine(faults=plan)
+    reqs = _reqs(n_new=8)
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(4):
+        eng.step()
+    rep = eng.reshard(lay_tp, mesh=mesh_tp)       # grow mid-decode
+    _check(results, "grow_moved_requests",
+           rep.delta.kind == "grow" and rep.moved_requests > 0,
+           f"{rep.moved_requests} requests, {rep.blocks_moved} blocks")
+    for _ in range(3):
+        eng.step()
+    rep2 = eng.reshard(lay_dp, mesh=mesh_dp)      # shrink back
+    _check(results, "shrink_completed", rep2.delta.kind == "shrink",
+           f"{rep2.moved_requests} requests, {rep2.blocks_moved} blocks")
+    eng.run_until_idle(max_steps=600)
+    done = {r.rid: list(r.generated) for r in reqs
+            if r.finish_reason is FinishReason.OK}
+    _check(results, "resharded_streams_bit_identical",
+           len(done) > 0 and all(done[rid] == ref[rid] for rid in done),
+           f"{len(done)}/{len(reqs)} completed ok")
+    _check(results, "reshards_counted",
+           eng.obs.registry.counter_total("reshards_total") == 2)
+    _terminal_and_zero_leak(results, eng, reqs, plan)
+
+
 DRILLS = {"oom": drill_oom, "poison": drill_poison, "crash": drill_crash,
-          "storm": drill_storm}
+          "storm": drill_storm, "reshard": drill_reshard}
 
 
 def main(argv=None) -> int:

@@ -31,6 +31,12 @@ mode on CPU (TPU timings are the roofline estimates in EXPERIMENTS.md
   wall overhead of the fault-tolerance bookkeeping on the fault-free
   hot path (``fault.overhead_ratio``, relaxed gate like
   ``obs.overhead_ratio``).
+* elastic resharding (``elastic.*``) — a dp=2 engine swaps its
+  Deployment to merged pure-TP mid-decode and back
+  (``elastic.reshard_replay_ok``: 1.0 iff streams stay bit-identical and
+  zero blocks leak — gated), plus the deterministic re-pour volume and
+  the extra iterations the swap cost (should be 0: it runs between
+  iterations).
 
 Emits CSV rows (legacy, for benchmarks/run.py) and writes a
 machine-readable ``BENCH_kernels.json``:
@@ -556,6 +562,96 @@ def _cluster_bench(rec, emit, smoke):
     rec("cluster.migration_replay_ok", replay_ok, "x")
 
 
+def _elastic_bench(rec, emit, smoke):
+    """Elastic resharding contract, boiled down to three gated numbers on
+    a real dp=2 paged engine (host mesh, reduced model — deterministic
+    integers):
+
+    * ``elastic.reshard_replay_ok`` — 1.0 iff a mid-decode grow (dp merge
+      -> wider TP) plus a shrink back complete, every stream matches an
+      uninterrupted dp=2 run bit for bit, and the drained ledger shows
+      zero leaked blocks. Hard-gated at 1.0.
+    * ``elastic.reshard_blocks_moved`` — KV blocks re-poured across the
+      two swaps (deterministic placement; a change means the transfer
+      plan changed).
+    * ``elastic.reshard_pause_steps`` — extra engine iterations the
+      resharded run needed over the reference (the swap happens BETWEEN
+      iterations, so this should stay 0)."""
+    from repro.configs import get_config
+    from repro.core.policy import DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy
+    from repro.engine import ShiftEngine, EngineConfig, Request
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.model import Model
+    from repro.parallel import Layout
+
+    cfg = get_config("qwen3-8b").reduced()
+    mesh_dp = make_test_mesh(data=2, sp=1, tp=1)
+    mesh_tp = make_test_mesh(data=1, sp=1, tp=2)
+    lay_dp = Layout.from_mesh(mesh_dp, dp=("data",), sp=("sp",), tp=("tp",))
+    lay_tp = Layout.from_mesh(mesh_tp, dp=("data",), sp=("sp",), tp=("tp",))
+    # enough decode runway that requests are still mid-stream at BOTH
+    # swaps — a shrink with no holders would gate on an empty re-pour
+    n_new = 8 if smoke else 12
+
+    def engine(mesh, lay):
+        mb = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.float32)
+        ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh,
+                   dtype=jnp.float32)
+        ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
+                            block_size=8)
+        return ShiftEngine(mb, ms, mb.init_params(jax.random.key(0)),
+                           ms.init_params(jax.random.key(0)), ecfg,
+                           policy=ThresholdPolicy(DEFAULT_SHIFT_THRESHOLD))
+
+    def reqs():
+        return [Request(i, list(range(1, 11 + 2 * i)),
+                        max_new_tokens=n_new) for i in range(4)]
+
+    def run_out(eng, rs):
+        steps = 0
+        for r in rs:
+            eng.add_request(r)
+        while eng.active or eng.queue:
+            if not eng.step():
+                break
+            steps += 1
+        return steps
+
+    ref_eng, ref = engine(mesh_dp, lay_dp), reqs()
+    ref_steps = run_out(ref_eng, ref)
+    expect = {r.rid: list(r.generated) for r in ref}
+
+    eng, rs = engine(mesh_dp, lay_dp), reqs()
+    blocks_moved, replay_ok, drill_steps = 0, 0.0, 0
+    try:
+        for r in rs:
+            eng.add_request(r)
+        for _ in range(4):
+            eng.step()
+            drill_steps += 1
+        rep = eng.reshard(lay_tp, mesh=mesh_tp)       # grow: dp merge
+        for _ in range(3):
+            eng.step()
+            drill_steps += 1
+        rep2 = eng.reshard(lay_dp, mesh=mesh_dp)      # shrink back
+        blocks_moved = rep.blocks_moved + rep2.blocks_moved
+        while eng.active or eng.queue:
+            if not eng.step():
+                break
+            drill_steps += 1
+        eng.drain(max_steps=400)
+        led = eng.stats().blocks
+        if ({r.rid: list(r.generated) for r in rs} == expect
+                and led.used == 0 and led.pinned == 0):
+            replay_ok = 1.0
+    except Exception:
+        replay_ok = 0.0                 # ReshardError/divergence -> 0
+    rec("elastic.reshard_replay_ok", replay_ok, "x")
+    rec("elastic.reshard_blocks_moved", blocks_moved, "blocks")
+    rec("elastic.reshard_pause_steps", max(0, drill_steps - ref_steps),
+        "iters")
+
+
 def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     entries = []
 
@@ -573,6 +669,7 @@ def main(emit=print, smoke=False, out="BENCH_kernels.json"):
     _obs_bench(rec, smoke)
     _fault_bench(rec, smoke)
     _cluster_bench(rec, emit, smoke)
+    _elastic_bench(rec, emit, smoke)
     if out:
         with open(out, "w") as f:
             json.dump({"smoke": smoke, "entries": entries}, f, indent=1)

@@ -36,6 +36,7 @@ what was already delivered.
 from __future__ import annotations
 
 import json
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..cache.prefix_index import PrefixIndex
@@ -49,13 +50,16 @@ ROUTING_POLICIES = ("affinity", "round-robin", "least-loaded")
 
 class Router:
     def __init__(self, engines: Sequence, routing: str = "affinity",
-                 rebalance_every: int = 8, rebalance_skew: int = 2):
+                 rebalance_every: int = 8, rebalance_skew: int = 2,
+                 affinity_cap: int = 1024):
         if not engines:
             raise ValueError("Router needs at least one engine")
         if routing not in ROUTING_POLICIES:
             raise ValueError(
                 f"unknown routing policy {routing!r} (one of "
                 f"{ROUTING_POLICIES})")
+        if affinity_cap < 1:
+            raise ValueError("affinity_cap must be >= 1")
         self.engines = list(engines)
         self.routing = routing
         self.rebalance_every = rebalance_every
@@ -65,8 +69,13 @@ class Router:
         self._owner: Dict[int, int] = {}      # rid -> replica index
         self._rr = 0                          # round-robin cursor
         # first-chain-key -> replica: affinity for prefixes submitted but
-        # not yet committed to any replica's index (see module docstring)
-        self._affinity: Dict[int, int] = {}
+        # not yet committed to any replica's index (see module docstring).
+        # LRU-bounded at ``affinity_cap`` entries: adversarial prefix
+        # churn evicts the coldest memo instead of growing without bound
+        # (a lost memo only costs one extra cross-replica prefill).
+        self.affinity_cap = affinity_cap
+        self.affinity_evictions = 0
+        self._affinity: "OrderedDict[int, int]" = OrderedDict()
         self._delivery = DeliveryLog()
         self.steps = 0
         self.migrations = 0
@@ -106,10 +115,14 @@ class Router:
                 return min(cands, key=lambda i: (self._load(i), i))
             key = self._prefix_key(req.prompt)
             if key is not None and key in self._affinity:
+                self._affinity.move_to_end(key)       # LRU bump
                 return self._affinity[key]
             i = self._least_loaded()
             if key is not None:
                 self._affinity[key] = i
+                while len(self._affinity) > self.affinity_cap:
+                    self._affinity.popitem(last=False)
+                    self.affinity_evictions += 1
             return i
         return self._least_loaded()
 
@@ -155,7 +168,8 @@ class Router:
             replicas=tuple(eng.stats() for eng in self.engines),
             routing=self.routing, steps=self.steps,
             migrations=self.migrations,
-            migrated_blocks=self.migrated_blocks)
+            migrated_blocks=self.migrated_blocks,
+            affinity_evictions=self.affinity_evictions)
 
     # ------------------------------------------------- delivery (exactly-once)
     def poll(self) -> Dict[int, List[int]]:
@@ -237,6 +251,82 @@ class Router:
             if ops is not None:
                 return ops
         return None
+
+    # ----------------------------------------------- elastic resharding
+    # Router-driven merge/split: drain a replica's requests onto a peer
+    # (mid-decode streams move with their KV through the migration data
+    # plane; queued and mid-prefill requests resubmit and recompute), then
+    # reshard the emptied/widened replica onto its new layout. Everything
+    # goes through the engine facade — the same surface migrate() uses.
+    def reshard_replica(self, i: int, layout, mesh=None):
+        """Reshard replica ``i`` onto ``layout`` between iterations (the
+        engine's validate-then-mutate protocol; raises
+        :class:`~repro.engine.ReshardError` with the replica untouched
+        when the new geometry cannot hold its live requests)."""
+        return self.engines[i].reshard(layout, mesh=mesh)
+
+    def move_request(self, rid: int, dst_replica: int) -> bool:
+        """Move one live request to ``dst_replica`` by whatever means its
+        state allows: block-granular KV migration for mid-decode requests,
+        release-and-resubmit (recompute on the destination, same stream —
+        the preemption path's determinism) for queued or mid-prefill
+        ones. False when the request is unknown, terminal, or already
+        there."""
+        if self.migrate(rid, dst_replica) is not None:
+            return True
+        src_i = self._owner.get(rid)
+        if src_i is None or src_i == dst_replica:
+            return False
+        src = self.engines[src_i]
+        req = src.request(rid)
+        if req is None or req.finish_reason is not None:
+            return False
+        src.release_migrated(rid)
+        # recompute-style reset (what preemption does): the destination
+        # re-prefills prompt+generated and continues the stream
+        req.row = None
+        req.slot = None
+        req.prefilled = 0
+        req.cached_tokens = 0
+        req.pc_blocks, req.pc_parent = 0, None
+        req.inflight_keys = []
+        self.engines[dst_replica].submit(req)
+        self._owner[rid] = dst_replica
+        return True
+
+    def merge_replicas(self, dst: int, src: int) -> int:
+        """Drain every live request off replica ``src`` onto ``dst`` (the
+        low-traffic half of an elastic merge: empty one replica so its
+        chips can join the other's mesh). Returns how many requests
+        moved; ``src`` stays in the cluster and keeps serving anything
+        that could not move."""
+        if src == dst:
+            raise ValueError("merge needs two distinct replicas")
+        moved = 0
+        for rid in sorted(r for r, i in self._owner.items() if i == src):
+            req = self.engines[src].request(rid)
+            if req is None or req.finish_reason is not None:
+                continue
+            if self.move_request(rid, dst):
+                moved += 1
+        return moved
+
+    def split_replica(self, src: int, dst: int,
+                      fraction: float = 0.5) -> int:
+        """Move ``fraction`` of replica ``src``'s live requests to ``dst``
+        (the high-traffic half of an elastic split: populate a freshly
+        narrowed replica). Deterministic: highest rids move first.
+        Returns how many requests moved."""
+        if src == dst:
+            raise ValueError("split needs two distinct replicas")
+        live = sorted(
+            rid for rid, i in self._owner.items()
+            if i == src
+            and (req := self.engines[src].request(rid)) is not None
+            and req.finish_reason is None)
+        take = live[len(live) - int(len(live) * fraction):]
+        return sum(1 for rid in reversed(take)
+                   if self.move_request(rid, dst))
 
     # ----------------------------------------------------- observability
     def counter_total(self, name: str) -> float:

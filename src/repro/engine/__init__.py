@@ -1,8 +1,10 @@
 from .api import (BlockLedger, ClusterStats, EngineStats, FaultConfig,
                   ObsConfig, PrefixConfig, PrefixStats, ServingClient)
+from .deployment import Deployment, ReshardError, ReshardReport
 from .request import Request
 from .engine import ShiftEngine, EngineConfig
 
 __all__ = ["Request", "ShiftEngine", "EngineConfig", "ServingClient",
            "PrefixConfig", "FaultConfig", "ObsConfig", "PrefixStats",
-           "BlockLedger", "EngineStats", "ClusterStats"]
+           "BlockLedger", "EngineStats", "ClusterStats",
+           "Deployment", "ReshardError", "ReshardReport"]

@@ -14,12 +14,11 @@ it (``serve.py``, the cluster ``Router``, benchmarks). Three pieces:
 - Nested config groups — ``EngineConfig`` historically accreted one flat
   flag per PR (prefix/FT/obs/deadline/queue/snapshot knobs); they now
   group into :class:`PrefixConfig` / :class:`FaultConfig` /
-  :class:`ObsConfig`. The old flat kwargs are still accepted and mapped
-  (``EngineConfig(prefix_cache=True)`` ->
-  ``EngineConfig(prefix=PrefixConfig(enabled=True))``) with a
-  once-per-process :class:`DeprecationWarning`; the flat *read*
-  properties (``cfg.prefix_cache`` etc.) stay indefinitely. New code
-  should construct the nested groups.
+  :class:`ObsConfig`. The pre-PR-8 flat *write* kwargs
+  (``prefix_cache=True``, ``max_queue=``, ..., ``obs=bool``) were
+  deprecated with a warning in PR 8 and are removed — passing one now
+  raises ``TypeError``. The flat *read* properties
+  (``cfg.prefix_cache`` etc.) stay indefinitely.
 
 - Typed result dataclasses — :class:`PrefixStats`, :class:`BlockLedger`,
   :class:`EngineStats` replace the ad-hoc ``prefix_stats`` /
@@ -29,7 +28,6 @@ it (``serve.py``, the cluster ``Router``, benchmarks). Three pieces:
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field, fields, asdict
 from typing import List, Optional, Protocol, Tuple, runtime_checkable
 
@@ -94,28 +92,6 @@ class ObsConfig:
 
     def __bool__(self):       # `if cfg.obs:` keeps meaning "is obs on"
         return self.enabled
-
-
-# warn-once flag for the flat-kwarg deprecation shim (module-level so the
-# warning fires once per process, not once per EngineConfig; tests reset it
-# via _reset_flat_kwarg_warning to assert the warning deterministically)
-_FLAT_KWARGS_WARNED = [False]
-
-
-def _reset_flat_kwarg_warning():
-    _FLAT_KWARGS_WARNED[0] = False
-
-
-def warn_flat_kwargs_once(names):
-    if _FLAT_KWARGS_WARNED[0]:
-        return
-    _FLAT_KWARGS_WARNED[0] = True
-    warnings.warn(
-        f"flat EngineConfig kwargs {sorted(names)} are deprecated; use the "
-        "nested groups (prefix=PrefixConfig(...), fault=FaultConfig(...), "
-        "obs=ObsConfig(...)). The flat spellings are accepted and mapped "
-        "for now (this warning fires once per process).",
-        DeprecationWarning, stacklevel=3)
 
 
 # ------------------------------------------------------ typed result objects
@@ -205,6 +181,8 @@ class ClusterStats(_MappingCompat):
     steps: int = 0
     migrations: int = 0
     migrated_blocks: int = 0
+    affinity_evictions: int = 0       # LRU evictions from the bounded
+    #                                   first-chain-key affinity memo
 
     @property
     def queue_depth(self) -> int:

@@ -1,0 +1,140 @@
+"""The engine's swappable execution state.
+
+A :class:`Deployment` owns everything that depends on the parallel layout:
+the two :class:`~repro.models.model.Model` views (base = SP,TP and shift =
+pure TP over the same weights), their sharded parameter trees, and the
+jitted step-fn tables compiled against the layout's mesh. ``ShiftEngine``
+holds exactly one Deployment and delegates ``base/shift/p_base/p_shift/
+dp/_forward/_prefill/_decode`` to it; ``ShiftEngine.reshard(new_layout)``
+swaps the whole value between iterations — weights move through the proven
+``ft/elastic.reshard_params`` round-trip, the paged pool's committed
+blocks re-pour into the new dp-row layout as a typed block-granular plan,
+and step-fns recompile lazily on first use of each shape.
+
+Layout is therefore a *value* of the engine, not a constructor constant:
+the compat checks live in ``repro.parallel.layout_delta`` and the reshard
+protocol (validate -> plan -> mutate) in ``ShiftEngine.reshard``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+from repro.models.model import Model
+from repro.parallel import Layout, LayoutDelta
+
+
+class ReshardError(RuntimeError):
+    """A reshard request that cannot be satisfied. Raised BEFORE any
+    engine state is mutated — the engine keeps serving on its current
+    deployment when this propagates."""
+
+
+@dataclass(frozen=True)
+class ReshardReport:
+    """What a completed ``ShiftEngine.reshard`` did, as data.
+
+    ``plan`` is the typed block-granular move list — one tuple of
+    :class:`~repro.cluster.migration.TransferOp` per live request that was
+    re-poured into the new pool layout (PR 8's extract→admit→copy→release
+    shape, replica-local)."""
+
+    delta: LayoutDelta
+    moved_requests: int
+    blocks_moved: int
+    dropped_prefix_blocks: int
+    plan: Tuple[tuple, ...] = ()
+
+    @property
+    def noop(self) -> bool:
+        return self.delta.kind == "same"
+
+
+@dataclass
+class Deployment:
+    """Layout-dependent execution state, swappable as one value.
+
+    ``forward`` is the mixed-batch jit table ({config -> jitted fn}) and is
+    ``None`` when the engine runs the serialized iteration, in which case
+    ``prefill``/``decode`` carry the 2×2 table instead."""
+
+    base: Model
+    shift: Model
+    p_base: object
+    p_shift: object
+    mixed: bool
+    paged: bool
+    kernel: Optional[object] = None
+    forward: Optional[dict] = None
+    prefill: Optional[dict] = None
+    decode: Optional[dict] = None
+
+    # ------------------------------------------------------------ identity
+    @property
+    def mesh(self):
+        return self.base.mesh
+
+    @property
+    def layout(self) -> Layout:
+        return self.base.lay
+
+    @property
+    def dp(self) -> int:
+        return max(self.base.lay.dp, 1)
+
+    @property
+    def signature(self):
+        return self.base.lay.signature
+
+    # ------------------------------------------------------------ factory
+    @classmethod
+    def build(cls, model_base: Model, model_shift: Model,
+              params_base, params_shift, *, mixed: bool, paged: bool,
+              kernel=None) -> "Deployment":
+        d = cls(base=model_base, shift=model_shift,
+                p_base=params_base, p_shift=params_shift,
+                mixed=mixed, paged=paged, kernel=kernel)
+        d._compile()
+        return d
+
+    def _compile(self):
+        kc = self.kernel
+        if self.mixed:
+            # ONE unified program per config replaces the 2×2
+            # prefill/decode table: prefill chunks and decode rows share a
+            # forward pass, so the policy prices the real iteration.
+            self.forward = {
+                "base": jax.jit(self.base.forward_fn(paged=True, kernel=kc),
+                                donate_argnums=(1,)),
+                "shift": jax.jit(self.shift.forward_fn(paged=True,
+                                                       kernel=kc),
+                                 donate_argnums=(1,))}
+        else:
+            pg = self.paged
+            self.prefill = {
+                "base": jax.jit(self.base.prefill_fn(paged=pg, kernel=kc),
+                                donate_argnums=(1,)),
+                "shift": jax.jit(self.shift.prefill_fn(paged=pg, kernel=kc),
+                                 donate_argnums=(1,))}
+            self.decode = {
+                "base": jax.jit(self.base.decode_fn(True, paged=pg,
+                                                    kernel=kc),
+                                donate_argnums=(1,)),
+                "shift": jax.jit(self.shift.decode_fn(True, paged=pg,
+                                                      kernel=kc),
+                                 donate_argnums=(1,))}
+
+    # ------------------------------------------------------------ reshard
+    def reshard(self, new_base: Model, new_shift: Model) -> "Deployment":
+        """A fresh Deployment over the new models' layout. Weights move
+        through ``ft/elastic.reshard_params`` (bitwise for same-shape
+        leaves; replication-expanded leaves re-derive from init); jit
+        tables are rebuilt and compile lazily per shape."""
+        from repro.ft.elastic import reshard_params
+        return Deployment.build(
+            new_base, new_shift,
+            reshard_params(self.p_base, self.base, new_base),
+            reshard_params(self.p_shift, self.shift, new_shift),
+            mixed=self.mixed, paged=self.paged, kernel=self.kernel)

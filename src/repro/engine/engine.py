@@ -80,8 +80,10 @@ from repro.ft.faults import FaultPlan, SnapshotError, corrupt_snapshot
 from repro.ft.watchdog import StragglerWatchdog
 from repro.models.model import Model
 from repro.obs import Observability, NullObs
+from repro.parallel import Layout, layout_delta
 from .api import (BlockLedger, EngineStats, FaultConfig, ObsConfig,
-                  PrefixConfig, PrefixStats, warn_flat_kwargs_once)
+                  PrefixConfig, PrefixStats)
+from .deployment import Deployment, ReshardError, ReshardReport
 from .request import FinishReason, Request
 
 # Rolling-window length for the per-step audit records (the source the
@@ -99,16 +101,10 @@ class EngineConfig:
     prefix/fault/observability flags grouped into nested dataclasses
     (:class:`~repro.engine.api.PrefixConfig`,
     :class:`~repro.engine.api.FaultConfig`,
-    :class:`~repro.engine.api.ObsConfig`). The pre-PR-8 flat kwargs
-    (``prefix_cache=``, ``max_queue=``, ..., ``obs=bool``) are accepted
-    and mapped with a once-per-process DeprecationWarning, and the flat
-    *read* properties below stay, so existing call sites keep working."""
-
-    # legacy flat kwargs -> the FaultConfig field of the same name
-    _FAULT_FLAT = ("max_queue", "shed_policy", "deadline_s",
-                   "quarantine_after", "retry_backoff",
-                   "auto_snapshot_every", "snapshot_keep",
-                   "straggler_factor")
+    :class:`~repro.engine.api.ObsConfig`). The pre-PR-8 flat *write*
+    kwargs (``prefix_cache=``, ``max_queue=``, ..., ``obs=bool``) were
+    deprecated in PR 8 and are now removed — pass the nested groups. The
+    flat *read* properties below stay."""
 
     def __init__(self, max_slots: int = 8, s_max: int = 256,
                  prefill_chunk: int = 64,
@@ -128,8 +124,7 @@ class EngineConfig:
                  # nested groups (each None = defaults)
                  prefix: Optional[PrefixConfig] = None,
                  fault: Optional[FaultConfig] = None,
-                 obs=None,
-                 **flat):
+                 obs: Optional[ObsConfig] = None):
         self.max_slots = max_slots
         self.s_max = s_max
         self.prefill_chunk = prefill_chunk
@@ -140,29 +135,9 @@ class EngineConfig:
         self.num_blocks = num_blocks
         self.mixed = mixed
         self.kernel = kernel
-        # ------------------------------------------- flat-kwarg shim
-        legacy = sorted(flat)
         if isinstance(obs, bool):
-            legacy.append("obs")
-        if legacy:
-            warn_flat_kwargs_once(legacy)
-        fkw = {k: flat.pop(k) for k in list(flat) if k in self._FAULT_FLAT}
-        pc = flat.pop("prefix_cache", None)
-        if flat:
-            raise TypeError("EngineConfig got unexpected keyword "
-                            f"argument(s) {sorted(flat)}")
-        if pc is not None:
-            if prefix is not None:
-                raise TypeError("pass either prefix=PrefixConfig(...) or "
-                                "the flat prefix_cache=, not both")
-            prefix = PrefixConfig(enabled=bool(pc))
-        if fkw:
-            if fault is not None:
-                raise TypeError("pass either fault=FaultConfig(...) or the "
-                                f"flat {sorted(fkw)} kwargs, not both")
-            fault = FaultConfig(**fkw)
-        if isinstance(obs, bool):
-            obs = ObsConfig(enabled=obs)
+            raise TypeError("obs=bool was removed with the flat-kwarg "
+                            "shim — pass obs=ObsConfig(enabled=...)")
         self.prefix = prefix if prefix is not None else PrefixConfig()
         self.fault = fault if fault is not None else FaultConfig()
         self.obs = obs if obs is not None else ObsConfig()
@@ -222,10 +197,6 @@ class ShiftEngine:
         if cfg.shed_policy not in ("reject-newest", "evict-longest-queued"):
             raise ValueError(f"unknown shed_policy {cfg.shed_policy!r}")
         self.mcfg = model_base.cfg
-        self.base = model_base
-        self.shift = model_shift
-        self.p_base = params_base
-        self.p_shift = params_shift
         self.cfg = cfg
         self.policy = policy or ThresholdPolicy(cfg.threshold)
         # detect ONCE which of the per-iteration context facts
@@ -247,15 +218,15 @@ class ShiftEngine:
             self._policy_ctx_kwargs = ()
         self.now = now
 
-        self.dp = max(model_base.lay.dp, 1)
+        dp = max(model_base.lay.dp, 1)
         reason = None
         if not model_base.supports_paged:
             reason = (f"architecture {self.mcfg.name} has non-pageable "
                       "layer kinds (MLA latents / ring buffers / recurrent "
                       "state keep the contiguous cache)")
-        elif cfg.max_slots % self.dp != 0:
+        elif cfg.max_slots % dp != 0:
             reason = (f"max_slots={cfg.max_slots} not divisible by "
-                      f"dp={self.dp} — slots partition into dp rows")
+                      f"dp={dp} — slots partition into dp rows")
         if cfg.paged and reason is not None:
             raise ValueError(
                 f"config {self.mcfg.name} cannot use a paged KV cache: "
@@ -277,7 +248,15 @@ class ShiftEngine:
             raise ValueError(
                 "prefix caching requires the paged KV cache (cached blocks "
                 "are shared through ref-counted block tables)")
-        self.slots_per_row = cfg.max_slots // self.dp if self.paged \
+        # ONE swappable value owns everything layout-dependent: the model
+        # views, the sharded params, and the jit tables. reshard() replaces
+        # it wholesale; base/shift/p_base/p_shift/dp/_forward/_prefill/
+        # _decode below are read-through views of it.
+        self.deploy = Deployment.build(model_base, model_shift,
+                                       params_base, params_shift,
+                                       mixed=self.mixed, paged=self.paged,
+                                       kernel=cfg.kernel)
+        self.slots_per_row = cfg.max_slots // dp if self.paged \
             else cfg.max_slots
         if self.paged:
             nmax = blocks_for_tokens(cfg.s_max, cfg.block_size)
@@ -353,31 +332,41 @@ class ShiftEngine:
         self._step_stats: Optional[dict] = None
         self._step_audit: Optional[dict] = None
 
-        pg = self.paged
-        kc = cfg.kernel
-        if self.mixed:
-            # ONE unified program per config replaces the 2×2
-            # prefill/decode table: prefill chunks and decode rows share a
-            # forward pass, so the policy prices the real iteration.
-            self._forward = {
-                "base": jax.jit(model_base.forward_fn(paged=True, kernel=kc),
-                                donate_argnums=(1,)),
-                "shift": jax.jit(model_shift.forward_fn(paged=True,
-                                                        kernel=kc),
-                                 donate_argnums=(1,))}
-        else:
-            self._prefill = {
-                "base": jax.jit(model_base.prefill_fn(paged=pg, kernel=kc),
-                                donate_argnums=(1,)),
-                "shift": jax.jit(model_shift.prefill_fn(paged=pg, kernel=kc),
-                                 donate_argnums=(1,))}
-            self._decode = {
-                "base": jax.jit(model_base.decode_fn(True, paged=pg,
-                                                     kernel=kc),
-                                donate_argnums=(1,)),
-                "shift": jax.jit(model_shift.decode_fn(True, paged=pg,
-                                                       kernel=kc),
-                                 donate_argnums=(1,))}
+    # ------------------------------------------- deployment (read-through)
+    # Everything layout-dependent lives on self.deploy so reshard() can
+    # swap it as one value; these views keep the engine body (and its
+    # callers) spelled the same as before the refactor.
+    @property
+    def base(self) -> Model:
+        return self.deploy.base
+
+    @property
+    def shift(self) -> Model:
+        return self.deploy.shift
+
+    @property
+    def p_base(self):
+        return self.deploy.p_base
+
+    @property
+    def p_shift(self):
+        return self.deploy.p_shift
+
+    @property
+    def dp(self) -> int:
+        return self.deploy.dp
+
+    @property
+    def _forward(self):
+        return self.deploy.forward
+
+    @property
+    def _prefill(self):
+        return self.deploy.prefill
+
+    @property
+    def _decode(self):
+        return self.deploy.decode
 
     # ---------------------------------------------------- observability
     def _attach_prefix_observers(self):
@@ -1385,6 +1374,9 @@ class ShiftEngine:
             "cache": jax.tree.map(np.asarray, self.cache),
             "lens": self.lens.copy(),
             "step_count": self.step_count,
+            # layout identity: a snapshot only restores into a deployment
+            # with the same (dp, sp, tp, ep) signature (validate_snapshot)
+            "layout": tuple(self.deploy.layout.signature),
             "obs": self.obs.state_dict(),
             "requests": [
                 {"rid": r.rid, "prompt": list(r.prompt), "slot": r.slot,
@@ -1456,11 +1448,19 @@ class ShiftEngine:
                 if slot in seen_slots:
                     raise SnapshotError(f"duplicate request slot {slot}")
                 seen_slots.add(slot)
+        if "layout" in snap:
+            sig = tuple(self.deploy.layout.signature)
+            if tuple(snap["layout"]) != sig:
+                raise SnapshotError(
+                    f"snapshot was captured under layout signature "
+                    f"{tuple(snap['layout'])} (dp, sp, tp, ep); this "
+                    f"engine's deployment is {sig} — reshard first, or "
+                    "restore into a matching deployment")
         if self.paged:
             if "kv" not in snap:
                 raise SnapshotError("paged engine restoring a snapshot "
                                     "without the paged-KV state")
-            if snap["kv"].get("dp", 1) != self.dp:   # pre-dp snapshots: dp=1
+            if snap["kv"].get("dp", 1) != self.dp:   # pre-layout snapshots
                 raise SnapshotError(
                     f"snapshot has dp={snap['kv'].get('dp', 1)}, "
                     f"engine has dp={self.dp}")
@@ -1589,6 +1589,162 @@ class ShiftEngine:
             free_per_row=tuple(self.kv.row_free_blocks(r)
                                for r in range(self.dp)))
 
+    # --------------------------------------------------- elastic resharding
+    def reshard(self, layout: Layout, mesh=None,
+                row_blocks: int = 0) -> ReshardReport:
+        """Swap the engine onto a new parallel layout between iterations.
+
+        The protocol is validate -> plan -> mutate: every check that can
+        fail runs against read-only state first, so a raised
+        :class:`ReshardError` leaves the engine serving on its current
+        deployment. The mutation then (1) flushes pending COW copies and
+        exports every slot-holder's committed blocks to host memory, (2)
+        swaps the :class:`Deployment` (weights re-place through
+        ``ft/elastic.reshard_params`` — bitwise for same-shape leaves),
+        (3) rebuilds the paged pool in the new dp-row geometry
+        (``row_blocks`` per row; 0 = preserve total usable capacity), and
+        (4) re-pours the holders: deterministic best-fit placement into
+        the new rows, block payloads written back at their new pool-global
+        ids, recorded as PR 8's typed :class:`TransferOp` plan
+        (replica-local: src == dst replica). Queued non-holders are
+        re-routed from scratch; prefix indexes restart empty (the dropped
+        pin count is reported); retained snapshots from the old layout
+        stay in the ring and fail ``validate_snapshot`` with a typed
+        :class:`SnapshotError` rather than restoring into the wrong
+        geometry.
+
+        Mid-decode streams resume bit-identically: block bytes move
+        verbatim and the dp-row change never re-orders a sequence's
+        positions. (Changing tp changes the logits' psum order — argmax
+        streams stay stable on the reduced test models, but that is a
+        determinism-in-practice property, not an algebraic one.)"""
+        from repro.cluster.migration import build_transfer_plan
+        if not self.paged:
+            raise ReshardError(
+                "resharding requires the paged KV cache "
+                f"({self.paged_disabled_reason})")
+        delta = layout_delta(self.deploy.layout, layout)
+        new_dp = max(layout.dp, 1)
+        if self.cfg.max_slots % new_dp != 0:
+            raise ReshardError(
+                f"max_slots={self.cfg.max_slots} not divisible by the new "
+                f"dp={new_dp} — slots partition into dp rows")
+        if delta.kind == "same":
+            return ReshardReport(delta, 0, 0, 0)
+        old_dp = self.dp
+        old_rb = self.kv.num_blocks_per_row
+        bs = self.cfg.block_size
+        nmax = self.kv.max_blocks_per_seq
+        # default: preserve total usable (non-null) block capacity
+        new_rb = row_blocks or (old_dp * (old_rb - 1)) // new_dp + 1
+        new_spr = self.cfg.max_slots // new_dp
+        # ---------------- validate + plan (read-only; ReshardError-safe)
+        holders = [r for r in self.slot_req if r is not None]
+        for q in self.queue:
+            worst = max(q.total_tokens + 1,
+                        len(q.prompt) + q.max_new_tokens)
+            if blocks_for_tokens(worst, bs) > new_rb - 1:
+                raise ReshardError(
+                    f"request {q.rid} needs {blocks_for_tokens(worst, bs)} "
+                    f"blocks; each new dp row's pool has {new_rb - 1}")
+        free = [new_rb - 1] * new_dp
+        slots_left = [new_spr] * new_dp
+        placement = {}                     # rid -> (row, slot, n_blocks)
+        for r in sorted(holders,
+                        key=lambda r: (-int(self.kv.n_mapped[r.slot]),
+                                       r.rid)):
+            need = int(self.kv.n_mapped[r.slot])
+            fits = [ri for ri in range(new_dp)
+                    if slots_left[ri] > 0 and free[ri] >= need]
+            if not fits:
+                raise ReshardError(
+                    f"cannot place request {r.rid} ({need} blocks) into "
+                    f"layout {layout.describe()} — shrink exceeds "
+                    "per-row capacity")
+            row = max(fits, key=lambda ri: (free[ri], -ri))
+            slot = (row + 1) * new_spr - slots_left[row]
+            slots_left[row] -= 1
+            free[row] -= need
+            placement[r.rid] = (row, slot, need)
+        blocks_moved = sum(n for _, _, n in placement.values())
+        self.obs.emit("reshard_begin", step=self.step_count,
+                      old=self.deploy.layout.describe(),
+                      new=layout.describe(), delta_kind=delta.kind,
+                      requests=len(holders), blocks=blocks_moved)
+        # ---------------- export (host copies of every holder's blocks)
+        self._apply_copies()               # pending COW lands first
+        exports = {}
+        for r in holders:
+            row = self.kv.row_of(r.slot)
+            gids = np.asarray([self.kv.global_block(row, b)
+                               for b in self.kv.seq_blocks(r.slot)],
+                              np.int32)
+
+            def take(pool, gids=gids):
+                arr = np.asarray(pool)
+                return (arr[:, gids].copy() if arr.ndim == 5
+                        else arr[gids].copy())
+
+            exports[r.rid] = {
+                "state": {"rid": r.rid, "prefilled": r.prefilled},
+                "block_size": bs,
+                "src_blocks": [int(g) for g in gids],
+                "payload": jax.tree.map(take, self.cache)}
+        dropped_pins = sum(len(idx.blocks())
+                           for idx in (self.prefix_rows or []))
+        # ---------------- swap the deployment + pool geometry
+        old_base, old_shift = self.deploy.base, self.deploy.shift
+        new_base = Model(cfg=self.mcfg, lay=layout, mesh=mesh,
+                         dtype=old_base.dtype, kernel=old_base.kernel)
+        new_shift = Model(cfg=self.mcfg, lay=layout.to_shift(), mesh=mesh,
+                          dtype=old_shift.dtype, kernel=old_shift.kernel)
+        self.deploy = self.deploy.reshard(new_base, new_shift)
+        self.kv = PagedKVCache(new_rb, bs, self.cfg.max_slots, nmax,
+                               dp=new_dp)
+        self.cache = new_base.init_paged_cache(new_rb, bs)
+        self.slots_per_row = new_spr
+        self.slot_req = [None] * self.cfg.max_slots
+        self.lens[:] = 0
+        self._bt_host = np.zeros((self.cfg.max_slots, nmax), np.int32)
+        self._step_copies = []
+        self._inflight = [dict() for _ in range(new_dp)]
+        if self.prefix_rows is not None:
+            # fresh (empty) per-row indexes: cached prefixes don't survive
+            # a pool re-layout; re-use rebuilds them as traffic re-commits
+            self.prefix_rows = [PrefixIndex(bs, self.kv.allocators[r])
+                                for r in range(new_dp)]
+            self.kv.prefix_indices = list(self.prefix_rows)
+            self._attach_prefix_observers()
+        # ---------------- re-pour the holders; re-route everyone else
+        rep = self.replica if self.replica is not None else 0
+        plan = []
+        for q in self.queue:
+            q.inflight_keys = []
+            if q.rid not in placement:
+                q.row = None               # re-route under the new geometry
+        for r in holders:
+            row, slot, need = placement[r.rid]
+            r.row, r.slot = row, slot
+            r.pc_blocks, r.pc_parent = 0, None
+            self.slot_req[slot] = r
+            ok = self.kv.ensure(slot, need * bs)
+            assert ok, "planned placement must allocate"
+            self.lens[slot] = r.prefilled
+            dst = [int(self.kv.global_block(row, b))
+                   for b in self.kv.seq_blocks(slot)]
+            ex = exports[r.rid]
+            self.write_blocks(dst, ex["payload"])
+            plan.append(build_transfer_plan(ex, dst, rep, rep))
+        self._refresh_block_tables()
+        self.obs.inc("reshards_total")
+        self.obs.inc("reshard_blocks_moved_total", blocks_moved)
+        self.obs.emit("reshard_end", step=self.step_count,
+                      old=f"{delta.old}", new=f"{delta.new}",
+                      delta_kind=delta.kind, requests=len(holders),
+                      blocks=blocks_moved, dropped_pins=dropped_pins)
+        return ReshardReport(delta, len(holders), blocks_moved,
+                             dropped_pins, tuple(plan))
+
     # ------------------------------------------------- serving facade (API)
     # ShiftEngine implements repro.engine.api.ServingClient; everything a
     # caller outside src/repro/engine/ needs goes through these methods
@@ -1671,15 +1827,17 @@ class ShiftEngine:
     # migration aborts with the source untouched.
     def migratable(self) -> List[int]:
         """Rids of requests a Router may migrate off this engine right now:
-        active, prefill-complete, mid-decode, not inside a retry-backoff
-        window. Ordered least-recently-batched first (the cheapest to
-        move: their streams are coldest)."""
+        active, prefill-complete, mid-decode. Requests inside a
+        retry-backoff window are included — their remaining backoff is
+        exported step-relative and re-based onto the destination's step
+        clock, so migrating one neither extends nor shortens its penalty.
+        Ordered least-recently-batched first (the cheapest to move: their
+        streams are coldest)."""
         if not self.paged:
             return []
         return [r.rid for r in sorted(self.active,
                                       key=lambda r: (r.last_used, r.rid))
-                if self._prefill_done(r) and not r.done
-                and self._retryable(r)]
+                if self._prefill_done(r) and not r.done]
 
     def extract_request(self, rid: int) -> Optional[dict]:
         """Read-only export of a live request for migration: its state dict
@@ -1710,7 +1868,10 @@ class ShiftEngine:
                  "cached_tokens": req.cached_tokens,
                  "first_token_time": req.first_token_time,
                  "num_preemptions": req.num_preemptions,
-                 "fail_count": req.fail_count, "retry_at": req.retry_at}
+                 "fail_count": req.fail_count, "retry_at": req.retry_at,
+                 # backoff travels step-relative: destination step clocks
+                 # are unrelated to the source's
+                 "retry_remaining": max(0, req.retry_at - self.step_count)}
         return {"state": state, "n_blocks": len(local),
                 "block_size": self.cfg.block_size,
                 "src_blocks": [int(g) for g in gids],
@@ -1748,7 +1909,13 @@ class ShiftEngine:
             req.first_token_time = state["first_token_time"]
             req.num_preemptions = state["num_preemptions"]
             req.fail_count = state["fail_count"]
-            req.retry_at = state["retry_at"]
+            # re-base a mid-backoff request onto this engine's step clock
+            # (older export dicts without the relative field keep the raw
+            # retry_at — harmless, it only ever shortens the wait)
+            if "retry_remaining" in state:
+                req.retry_at = self.step_count + state["retry_remaining"]
+            else:
+                req.retry_at = state["retry_at"]
             req.row, req.slot = row, slot
             req.last_used = self.step_count
             self.slot_req[slot] = req

@@ -122,6 +122,80 @@ def _print_engine_summary(eng, label=""):
         print(f"{label}dense cache fallback: {st.paged_disabled_reason}")
 
 
+def _reshard_demo(arch: str, *, requests=4, max_new=8):
+    """Elastic resharding demo: a dp=2 engine reshards mid-decode to the
+    merged pure-TP layout (dp merge -> wider TP) and back, and every
+    stream still matches an uninterrupted reference run bit for bit."""
+    from repro.launch.mesh import make_test_mesh
+    if len(jax.devices()) < 2:
+        raise ValueError(
+            "--reshard-demo needs >= 2 devices (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "jax initializes for a CPU demo)")
+    cfg = get_config(arch).reduced()
+    mesh_dp = make_test_mesh(data=2, sp=1, tp=1)
+    mesh_tp = make_test_mesh(data=1, sp=1, tp=2)
+    lay_dp = Layout.from_mesh(mesh_dp, dp=("data",), sp=("sp",), tp=("tp",))
+    lay_tp = Layout.from_mesh(mesh_tp, dp=("data",), sp=("sp",), tp=("tp",))
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, block_size=8)
+    policy = ThresholdPolicy(DEFAULT_SHIFT_THRESHOLD)
+
+    def build(mesh, lay):
+        base = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.float32)
+        shift = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh,
+                      dtype=jnp.float32)
+        return ShiftEngine(base, shift, base.init_params(jax.random.key(0)),
+                           shift.init_params(jax.random.key(0)), ecfg,
+                           policy=policy)
+
+    def reqs():
+        return [Request(i, list(range(1, 11 + 2 * i)), max_new_tokens=max_new)
+                for i in range(requests)]
+
+    print(f"reference: static {lay_dp.describe()} run")
+    ref = build(mesh_dp, lay_dp)
+    ref_reqs = reqs()
+    for r in ref_reqs:
+        ref.submit(r)
+    ref.run_until_idle()
+    expect = {r.rid: list(r.generated) for r in ref_reqs}
+
+    eng = build(mesh_dp, lay_dp)
+    rs = reqs()
+    for r in rs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    print(f"resharding mid-decode: {lay_dp.describe()} -> "
+          f"{lay_tp.describe()} (dp merge, wider TP)")
+    rep = eng.reshard(lay_tp, mesh=mesh_tp)
+    print(f"  {rep.delta.kind}: {rep.moved_requests} requests, "
+          f"{rep.blocks_moved} KV blocks re-poured")
+    for _ in range(3):
+        eng.step()
+    print(f"resharding back: {lay_tp.describe()} -> {lay_dp.describe()}")
+    rep2 = eng.reshard(lay_dp, mesh=mesh_dp)
+    print(f"  {rep2.delta.kind}: {rep2.moved_requests} requests, "
+          f"{rep2.blocks_moved} KV blocks re-poured")
+    eng.run_until_idle()
+    got = {r.rid: list(r.generated) for r in rs}
+    ok = got == expect
+    for rid in sorted(got):
+        print(f"req {rid}: {len(got[rid])} tokens, "
+              f"bit-identical={got[rid] == expect.get(rid)}")
+    eng.drain()
+    led = eng.stats().blocks
+    print(f"drained: used={led.used} pinned={led.pinned} blocks")
+    counters = {c["name"]: c["value"]
+                for c in eng.obs.dump()["metrics"]["counters"]}
+    print(f"obs: reshards_total={counters.get('reshards_total', 0)} "
+          f"reshard_blocks_moved_total="
+          f"{counters.get('reshard_blocks_moved_total', 0)}")
+    print("PASS: streams bit-identical across grow+shrink" if ok
+          else "FAIL: streams diverged after reshard")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -177,7 +251,15 @@ def main():
     ap.add_argument("--p-fault", type=float, default=0.05,
                     help="per-step per-seam fault probability for the "
                          "seeded storm (alloc/forward/route seams)")
+    ap.add_argument("--reshard-demo", action="store_true",
+                    help="elastic resharding demo: a dp=2 engine swaps its "
+                         "Deployment to merged pure-TP mid-decode and back; "
+                         "streams must match a static reference bit for bit")
     args = ap.parse_args()
+
+    if args.reshard_demo:
+        raise SystemExit(_reshard_demo(args.arch, requests=args.requests,
+                                       max_new=args.max_new))
 
     faults = None
     if args.fault_seed is not None:

@@ -87,6 +87,11 @@ COUNTERS = {
     "migration_blocks_total":
         ("KV blocks received through live migration (counted at the "
          "destination)", ()),
+    # ------------------------------------------------ elastic resharding
+    "reshards_total":
+        ("Completed deployment reshards (layout swaps) on this engine", ()),
+    "reshard_blocks_moved_total":
+        ("KV blocks re-poured into the new pool layout by reshards", ()),
 }
 
 # ``seam`` label values: the named injection points of repro.ft.faults —
@@ -148,6 +153,9 @@ EVENTS = (
     # ------------------------------------------------- cluster serving
     "migrate_out",   # live request extracted+released from this replica
     "migrate_in",    # live request admitted with migrated KV blocks
+    # ------------------------------------------------ elastic resharding
+    "reshard_begin",  # deployment swap starting (attrs: old/new/kind)
+    "reshard_end",    # deployment swap complete (attrs carry the report)
 )
 
 # ------------------------------------------------------ step audit record

@@ -105,6 +105,58 @@ class Layout:
         (== KV cache head sharding). Same in base and shift configs."""
         return self.model_axes if self.model_axes else None
 
+    # ------------------------------------------------------------ identity
+    @property
+    def signature(self) -> Tuple[int, int, int, int]:
+        """Degree tuple ``(dp, sp, tp, ep)`` — the reshard-relevant identity
+        of a layout. Two layouts with equal signatures shard requests and
+        paged blocks identically regardless of axis *names*."""
+        return (self.dp, self.sp, self.tp, self.ep)
+
+    def describe(self) -> str:
+        s = f"dp{self.dp}·sp{self.sp}·tp{self.tp}"
+        return s + (f"·ep{self.ep}" if self.ep > 1 else "")
+
+
+# ---------------------------------------------------------------------------
+# Layout diffing: what changes when a deployment reshards old -> new.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayoutDelta:
+    """Typed diff between two layouts' signatures.
+
+    ``kind`` classifies the dp-row transition the paged pool must survive:
+
+    * ``"same"``    — identical signatures; reshard is a no-op.
+    * ``"grow"``    — fewer dp rows (replica merge -> wider model group):
+                      low-traffic latency mode.
+    * ``"shrink"``  — more dp rows (replica split): high-traffic
+                      throughput mode.
+    * ``"reshape"`` — same dp but a different sp/tp/ep factorisation.
+    """
+
+    old: Tuple[int, int, int, int]
+    new: Tuple[int, int, int, int]
+    kind: str
+
+    @property
+    def dp_change(self) -> bool:
+        return self.old[0] != self.new[0]
+
+
+def layout_delta(old: Layout, new: Layout) -> LayoutDelta:
+    a, b = old.signature, new.signature
+    if a == b:
+        kind = "same"
+    elif b[0] < a[0]:
+        kind = "grow"
+    elif b[0] > a[0]:
+        kind = "shrink"
+    else:
+        kind = "reshape"
+    return LayoutDelta(old=a, new=b, kind=kind)
+
 
 # ---------------------------------------------------------------------------
 # Collective helpers that degrade to no-ops on absent axes (single-device

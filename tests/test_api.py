@@ -1,21 +1,18 @@
 """Typed serving API: the nested EngineConfig groups (PrefixConfig /
-FaultConfig / ObsConfig) with the flat-kwarg deprecation shim, the typed
-frozen stats records (PrefixStats / BlockLedger / EngineStats /
-ClusterStats) with their dict-compat surface, and the ServingClient
-protocol. Model-free — the engine/Router integration half lives in
-tests/test_cluster.py."""
-import warnings
-
+FaultConfig / ObsConfig) — flat write kwargs are GONE (TypeError), only
+the flat READ properties remain — the typed frozen stats records
+(PrefixStats / BlockLedger / EngineStats / ClusterStats) with their
+dict-compat surface, and the ServingClient protocol. Model-free — the
+engine/Router integration half lives in tests/test_cluster.py."""
 import pytest
 
 from repro.engine import (BlockLedger, ClusterStats, EngineConfig,
                           EngineStats, FaultConfig, ObsConfig, PrefixConfig,
                           PrefixStats, ServingClient)
-from repro.engine.api import _reset_flat_kwarg_warning
 
 
 # ---------------------------------------------------------------------------
-# nested config groups + flat-kwarg shim
+# nested config groups; flat write kwargs removed
 # ---------------------------------------------------------------------------
 def test_nested_groups_construct():
     cfg = EngineConfig(prefix=PrefixConfig(enabled=True),
@@ -26,41 +23,25 @@ def test_nested_groups_construct():
     assert cfg.obs.window == 64 and cfg.obs.event_cap == 128
 
 
-def test_flat_kwargs_map_and_warn_once():
-    _reset_flat_kwarg_warning()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        cfg = EngineConfig(prefix_cache=True, max_queue=7,
-                           shed_policy="evict-longest-queued",
-                           deadline_s=2.0, auto_snapshot_every=3)
-        assert len(w) == 1 and issubclass(w[0].category, DeprecationWarning)
-        assert "prefix_cache" in str(w[0].message)
-        # once per process: a second flat construction stays silent
-        EngineConfig(max_queue=1)
-        assert len(w) == 1
-    assert cfg.prefix.enabled
-    assert cfg.fault.max_queue == 7
-    assert cfg.fault.shed_policy == "evict-longest-queued"
-    assert cfg.fault.deadline_s == 2.0
-    assert cfg.fault.auto_snapshot_every == 3
-    # defaults for unspecified fault knobs survive the mapping
-    assert cfg.fault.quarantine_after == FaultConfig().quarantine_after
-    _reset_flat_kwarg_warning()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        EngineConfig(prefix_cache=False)
-        assert len(w) == 1               # reset hook re-arms the warning
+def test_flat_write_kwargs_removed():
+    # the deprecation shim is gone: former flat spellings are plain
+    # unknown kwargs now and raise immediately, not warn
+    for bad in (dict(prefix_cache=True), dict(max_queue=7),
+                dict(shed_policy="evict-longest-queued"),
+                dict(deadline_s=2.0), dict(auto_snapshot_every=3)):
+        with pytest.raises(TypeError):
+            EngineConfig(**bad)
 
 
-def test_flat_obs_bool_maps_to_obs_config():
-    _reset_flat_kwarg_warning()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        off = EngineConfig(obs=False)
-        on = EngineConfig(obs=True)
-    assert isinstance(off.obs, ObsConfig) and not off.obs.enabled
-    assert isinstance(on.obs, ObsConfig) and on.obs.enabled
-    assert not bool(off.obs) and bool(on.obs)
+def test_obs_bool_removed():
+    # obs=True/False rode on the shim; the nested spelling is the only one
+    with pytest.raises(TypeError):
+        EngineConfig(obs=True)
+    with pytest.raises(TypeError):
+        EngineConfig(obs=False)
+    off = EngineConfig(obs=ObsConfig(enabled=False))
+    assert isinstance(off.obs, ObsConfig) and not bool(off.obs)
+    assert bool(EngineConfig().obs)      # default stays enabled
 
 
 def test_back_compat_read_properties():
@@ -70,17 +51,6 @@ def test_back_compat_read_properties():
     assert cfg.max_queue == 9
     assert cfg.straggler_factor == 4.0
     assert cfg.shed_policy == FaultConfig().shed_policy
-
-
-def test_flat_and_nested_conflict_raises():
-    _reset_flat_kwarg_warning()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        with pytest.raises(TypeError):
-            EngineConfig(fault=FaultConfig(max_queue=2), max_queue=3)
-        with pytest.raises(TypeError):
-            EngineConfig(prefix=PrefixConfig(enabled=True),
-                         prefix_cache=True)
 
 
 def test_unknown_kwarg_raises():

@@ -1,0 +1,156 @@
+"""Router-level elastic surface + the PR-9 satellites that live in the
+cluster layer: the bounded (LRU) affinity memo with its eviction counter,
+retry-backoff requests riding live migration with a step-relative
+re-based penalty and a bit-identical replayed stream, and the Router's
+merge/split drains that empty or populate a replica through the same
+facade the migration path uses."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import reduced_cfg
+from repro.cluster import Router
+from repro.core.policy import ThresholdPolicy
+from repro.engine import EngineConfig, PrefixConfig, Request, ShiftEngine
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def mp():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def _engine(mp, prefix=False, **kw):
+    m, params = mp
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, threshold=4,
+                        block_size=8, prefix=PrefixConfig(enabled=prefix),
+                        **kw)
+    return ShiftEngine(m, m, params, params, ecfg, policy=ThresholdPolicy(4))
+
+
+def _reqs(n=3, max_new=6):
+    return [Request(i, list(range(1, 14 + 3 * i)), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# bounded affinity memo: LRU cap + eviction counter
+# ---------------------------------------------------------------------------
+def test_affinity_cap_validates():
+    with pytest.raises(ValueError):
+        Router([object()], affinity_cap=0)
+
+
+def test_affinity_memo_is_lru_bounded(mp):
+    router = Router([_engine(mp, prefix=True), _engine(mp, prefix=True)],
+                    routing="affinity", rebalance_every=0, affinity_cap=2)
+    # distinct >= block_size prompts, never prefilled: each submit drops a
+    # memo entry; the cap holds and the coldest entry is the one evicted
+    for i in range(5):
+        router.submit(Request(i, list(range(100 * (i + 1), 100 * (i + 1) + 8)),
+                              max_new_tokens=2))
+    assert len(router._affinity) == 2
+    assert router.affinity_evictions == 3
+    assert router.stats().affinity_evictions == 3
+
+    # LRU, not FIFO: a hit bumps the entry, so inserting one more evicts
+    # the OTHER (cold) key, and the bumped prefix keeps its replica
+    hot = list(range(900, 908))
+    router.submit(Request(10, hot, max_new_tokens=2))
+    hot_replica = router.owner(10)
+    router.submit(Request(11, hot, max_new_tokens=2))       # bump
+    assert router.owner(11) == hot_replica
+    router.submit(Request(12, list(range(1000, 1008)), max_new_tokens=2))
+    assert router.affinity_evictions == 5
+    router.submit(Request(13, hot, max_new_tokens=2))       # memo survived
+    assert router.owner(13) == hot_replica
+
+
+# ---------------------------------------------------------------------------
+# satellite: retry-backoff requests are migratable, penalty re-based
+# ---------------------------------------------------------------------------
+def test_backoff_request_migrates_with_rebased_penalty(mp):
+    ref_eng = _engine(mp)
+    ref = _reqs()
+    for r in ref:
+        ref_eng.add_request(r)
+    ref_eng.run_until_idle(max_steps=2000)
+    expect = {r.rid: list(r.generated) for r in ref}
+
+    router = Router([_engine(mp), _engine(mp)], routing="round-robin",
+                    rebalance_every=0)
+    reqs = _reqs()
+    for r in reqs:
+        router.submit(r)
+    for _ in range(6):                     # prefill + a few decode steps
+        router.poll()
+        router.step()
+    src_i = router.owner(0)
+    src = router.engines[src_i]
+    dst_i = 1 - src_i
+    dst = router.engines[dst_i]
+    req = src.request(0)
+    assert req is not None and req.slot is not None
+
+    # put rid 0 into a retry-backoff window; it must still be migratable
+    req.retry_at = src.step_count + 5
+    assert 0 in src.migratable()
+    # skew the destination's step clock so an absolute retry_at would
+    # distort the penalty — the export travels step-relative instead
+    for _ in range(3):
+        dst.step()
+    ops = router.migrate(0, dst_i)
+    assert ops is not None
+    moved = dst.request(0)
+    assert moved.retry_at == dst.step_count + 5   # re-based, not copied
+
+    router.run_until_idle()
+    got = {r.rid: router.stream(r.rid) for r in reqs}
+    assert got == expect                   # bit-identical across the move
+    assert router.delivered(0) == expect[0]
+
+
+# ---------------------------------------------------------------------------
+# Router merge/split: drain a replica through the facade
+# ---------------------------------------------------------------------------
+def test_merge_and_split_replicas(mp):
+    ref_eng = _engine(mp)
+    ref = _reqs(n=4, max_new=8)
+    for r in ref:
+        ref_eng.add_request(r)
+    ref_eng.run_until_idle(max_steps=2000)
+    expect = {r.rid: list(r.generated) for r in ref}
+
+    router = Router([_engine(mp), _engine(mp)], routing="round-robin",
+                    rebalance_every=0)
+    reqs = _reqs(n=4, max_new=8)
+    for r in reqs:
+        router.submit(r)
+    for _ in range(5):
+        router.poll()
+        router.step()
+    with pytest.raises(ValueError):
+        router.merge_replicas(0, 0)
+
+    # merge: replica 1 drains onto replica 0 (mid-decode requests move
+    # with their KV; anything else resubmits and recomputes)
+    live_on_1 = [rid for rid, i in router._owner.items() if i == 1
+                 and router.engines[1].request(rid).finish_reason is None]
+    moved = router.merge_replicas(0, 1)
+    assert moved == len(live_on_1)
+    assert all(router.owner(rid) == 0 for rid in live_on_1)
+    st1 = router.engines[1].stats()
+    assert st1.active == 0 and st1.queue_depth == 0       # emptied
+
+    # split: half of replica 0's live requests populate replica 1 again
+    live_on_0 = [rid for rid, i in router._owner.items() if i == 0
+                 and router.engines[0].request(rid).finish_reason is None]
+    back = router.split_replica(0, 1)
+    assert back == len(live_on_0) // 2
+    assert sum(1 for rid in live_on_0 if router.owner(rid) == 1) == back
+
+    router.run_until_idle()
+    got = {r.rid: router.stream(r.rid) for r in reqs}
+    assert got == expect                   # streams survive merge + split

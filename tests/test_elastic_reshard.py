@@ -1,0 +1,216 @@
+"""Elastic runtime resharding: the swappable Deployment layer.
+
+The engine's execution state (mesh, layout, jitted step-fn tables,
+sharded params, paged pool) lives in one ``Deployment`` object and
+``ShiftEngine.reshard(new_layout)`` swaps it between iterations. These
+tests pin the contract: layout diffing, Deployment delegation, the
+validate-then-mutate failure modes (a raised ReshardError leaves the
+engine serving), mid-decode grow (dp merge -> wider TP) and shrink with
+bit-identical streams under the Router's exactly-once DeliveryLog,
+allocator leak-freedom across a reshard round-trip, and the snapshot
+layout-identity check (an old-layout snapshot fails restore() with a
+typed SnapshotError before any mutation)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_mesh, reduced_cfg
+from repro.cluster import Router
+from repro.core.policy import ThresholdPolicy
+from repro.engine import (Deployment, EngineConfig, Request, ReshardError,
+                          ReshardReport, ShiftEngine)
+from repro.ft import SnapshotError
+from repro.models import build_model
+from repro.models.model import Model
+from repro.parallel import Layout, LayoutDelta, layout_delta
+
+
+def _lay(shape):
+    return Layout.from_mesh(make_mesh(shape), dp=("data",), sp=("sp",),
+                            tp=("tp",))
+
+
+def _engine(cfg, mesh, lay, max_slots=4):
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.float32)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh, dtype=jnp.float32)
+    ecfg = EngineConfig(max_slots=max_slots, s_max=64, prefill_chunk=8,
+                        block_size=8)
+    return ShiftEngine(mb, ms, mb.init_params(jax.random.key(0)),
+                       ms.init_params(jax.random.key(0)), ecfg,
+                       policy=ThresholdPolicy(4))
+
+
+def _reqs(n=4, prompt_len=12, max_new=6):
+    # equal-length prompts: placement symmetry makes the reshard
+    # round-trip's BlockLedger exactly reproducible
+    return [Request(i, [i + 1] + list(range(2, prompt_len + 1)),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# layout diffing
+# ---------------------------------------------------------------------------
+def test_layout_signature_and_describe():
+    lay = _lay((2, 1, 1))
+    assert lay.signature == (2, 1, 1, 1)
+    assert lay.describe() == "dp2·sp1·tp1"
+    assert _lay((1, 1, 2)).describe() == "dp1·sp1·tp2"
+
+
+def test_layout_delta_kinds():
+    dp2, tp2, wide = _lay((2, 1, 1)), _lay((1, 1, 2)), _lay((2, 1, 2))
+    same = layout_delta(dp2, _lay((2, 1, 1)))
+    assert isinstance(same, LayoutDelta) and same.kind == "same"
+    grow = layout_delta(dp2, tp2)          # dp merge -> wider TP
+    assert grow.kind == "grow" and grow.old == (2, 1, 1, 1)
+    assert layout_delta(tp2, dp2).kind == "shrink"
+    assert layout_delta(dp2, wide).kind == "reshape"   # dp fixed, tp wider
+
+
+# ---------------------------------------------------------------------------
+# Deployment owns the execution state; the engine delegates
+# ---------------------------------------------------------------------------
+def test_engine_delegates_to_deployment():
+    cfg = reduced_cfg("qwen3-8b")
+    eng = _engine(cfg, make_mesh((2, 1, 1)), _lay((2, 1, 1)))
+    assert isinstance(eng.deploy, Deployment)
+    assert eng.base is eng.deploy.base and eng.shift is eng.deploy.shift
+    assert eng.p_base is eng.deploy.p_base
+    assert eng.dp == 2 and eng.deploy.signature == (2, 1, 1, 1)
+    # mixed-batching mode: one forward table keyed by compiled config
+    assert eng.mixed and set(eng.deploy.forward) == {"base", "shift"}
+    assert eng.deploy.prefill is None and eng.deploy.decode is None
+
+
+def test_reshard_same_layout_is_noop():
+    cfg = reduced_cfg("qwen3-8b")
+    eng = _engine(cfg, make_mesh((2, 1, 1)), _lay((2, 1, 1)))
+    old_deploy = eng.deploy
+    rep = eng.reshard(_lay((2, 1, 1)))
+    assert isinstance(rep, ReshardReport) and rep.noop
+    assert rep.moved_requests == 0 and rep.blocks_moved == 0
+    assert eng.deploy is old_deploy        # nothing swapped
+    assert eng.obs.registry.counter_total("reshards_total") == 0
+
+
+# ---------------------------------------------------------------------------
+# validate-then-mutate: every ReshardError leaves the engine serving
+# ---------------------------------------------------------------------------
+def test_reshard_requires_paged():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    p = m.init_params(jax.random.key(0))
+    eng = ShiftEngine(m, m, p, p,
+                      EngineConfig(max_slots=2, s_max=64, prefill_chunk=8,
+                                   paged=False),
+                      policy=ThresholdPolicy(4))
+    with pytest.raises(ReshardError):
+        eng.reshard(_lay((1, 1, 1)))
+
+
+def test_reshard_rejects_indivisible_slots():
+    cfg = reduced_cfg("qwen3-8b")
+    eng = _engine(cfg, make_mesh((1, 1, 2)), _lay((1, 1, 2)), max_slots=3)
+    with pytest.raises(ReshardError):
+        eng.reshard(_lay((2, 1, 1)), mesh=make_mesh((2, 1, 1)))
+    assert eng.dp == 1                     # untouched
+
+
+def test_reshard_capacity_error_leaves_engine_serving():
+    cfg = reduced_cfg("qwen3-8b")
+    eng = _engine(cfg, make_mesh((2, 1, 1)), _lay((2, 1, 1)))
+    reqs = _reqs(n=2, max_new=4)
+    for r in reqs:
+        eng.add_request(r)
+    # a 1-usable-block row cannot hold any queued request's worst case
+    with pytest.raises(ReshardError):
+        eng.reshard(_lay((1, 1, 2)), mesh=make_mesh((1, 1, 2)),
+                    row_blocks=2)
+    assert eng.dp == 2                     # validate failed before mutate
+    eng.run_until_idle()
+    assert all(len(r.generated) == 4 for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: mid-decode grow + shrink, bit-identical, leak-free
+# ---------------------------------------------------------------------------
+def test_grow_shrink_mid_decode_bit_identical_and_leak_free():
+    cfg = reduced_cfg("qwen3-8b")
+    mesh_dp, mesh_tp = make_mesh((2, 1, 1)), make_mesh((1, 1, 2))
+    lay_dp, lay_tp = _lay((2, 1, 1)), _lay((1, 1, 2))
+
+    ref = _engine(cfg, mesh_dp, lay_dp)
+    ref_reqs = _reqs()
+    for r in ref_reqs:
+        ref.add_request(r)
+    ref.run_until_idle()
+    expect = {r.rid: list(r.generated) for r in ref_reqs}
+
+    # the drill runs behind a Router so the DeliveryLog polls across the
+    # reshards: any replayed-token divergence raises ReplayDivergence
+    eng = _engine(cfg, mesh_dp, lay_dp)
+    router = Router([eng], rebalance_every=0)
+    reqs = _reqs()
+    for r in reqs:
+        router.submit(r)
+    for _ in range(4):
+        router.poll()
+        router.step()
+
+    # allocator leak-freedom: an immediate grow+shrink round-trip restores
+    # the ledger exactly (equal-size holders -> symmetric placement)
+    led0 = eng.stats().blocks
+    rep_g = router.reshard_replica(0, lay_tp, mesh=mesh_tp)
+    assert rep_g.delta.kind == "grow"
+    assert rep_g.moved_requests == 4 and rep_g.blocks_moved > 0
+    # the re-pour is a typed replica-local transfer plan (PR 8's shape)
+    ops = [op for plan in rep_g.plan for op in plan]
+    assert all(op.src_replica == op.dst_replica == 0 for op in ops)
+    assert sum(1 for op in ops if op.kind == "kv_block") == \
+        rep_g.blocks_moved
+    rep_s = router.reshard_replica(0, lay_dp, mesh=mesh_dp)
+    assert rep_s.delta.kind == "shrink"
+    assert eng.stats().blocks == led0
+
+    # decode a while on the merged pure-TP deployment, then shrink back
+    router.reshard_replica(0, lay_tp, mesh=mesh_tp)
+    for _ in range(3):
+        router.poll()
+        router.step()
+    router.reshard_replica(0, lay_dp, mesh=mesh_dp)
+    router.run_until_idle()
+
+    got = {r.rid: list(r.generated) for r in reqs}
+    assert got == expect                   # bit-identical across 4 swaps
+    for r in reqs:
+        assert router.delivered(r.rid) == expect[r.rid]   # exactly-once
+    assert eng.obs.registry.counter_total("reshards_total") == 4
+    assert eng.obs.registry.counter_total("reshard_blocks_moved_total") > 0
+    router.drain()
+    led = eng.stats().blocks
+    assert led.used == 0 and led.pinned == 0
+
+
+# ---------------------------------------------------------------------------
+# snapshot layout identity: old-layout snapshots refuse to restore
+# ---------------------------------------------------------------------------
+def test_restore_layout_mismatch_raises_before_mutation():
+    cfg = reduced_cfg("qwen3-8b")
+    eng = _engine(cfg, make_mesh((2, 1, 1)), _lay((2, 1, 1)))
+    reqs = _reqs(n=2, max_new=4)
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(3):
+        eng.step()
+    snap = eng.snapshot()
+    assert snap["layout"] == (2, 1, 1, 1)
+
+    eng.reshard(_lay((1, 1, 2)), mesh=make_mesh((1, 1, 2)))
+    step0, lens0 = eng.step_count, eng.lens.copy()
+    with pytest.raises(SnapshotError, match="layout signature"):
+        eng.restore(snap)                  # dp=2 snapshot, dp=1 engine
+    # validate-before-mutate: the failed restore touched nothing
+    assert eng.step_count == step0
+    assert (eng.lens == lens0).all()
+    eng.run_until_idle()
+    assert all(len(r.generated) == 4 for r in reqs)

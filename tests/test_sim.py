@@ -1,11 +1,13 @@
 """Simulator / cost model: the paper's qualitative claims (Table 1) must
-hold as invariants of the roofline cost model, and the sim must be
-deterministic."""
+hold as invariants of the roofline cost model, the sim must be
+deterministic, and the elastic reshard policy must switch strategy with
+offered load while charging its pause tax."""
 import pytest
 
 from repro.configs import get_config
 from repro.roofline.terms import H200
-from repro.sim import simulate, bursty_trace, uniform_trace
+from repro.sim import (simulate, simulate_elastic, reshard_policy_ab,
+                       bursty_trace, uniform_trace)
 from repro.sim.costmodel import CostModel, Strategy
 
 
@@ -63,3 +65,41 @@ def test_sim_deterministic():
     a = simulate(cfg, tr, "shift", hw=H200)
     b = simulate(cfg, tr, "shift", hw=H200)
     assert a == b
+
+
+# ---------------------------------------------------------------------------
+# elastic reshard policy: strategy follows offered load, pause is priced
+# ---------------------------------------------------------------------------
+def _bimodal_trace():
+    # a quiet 10s window (~130 tok/s offered) then a burst (~3700 tok/s)
+    low = [(float(i), 128, 32) for i in range(8)]
+    high = [(10.0 + 0.1 * i, 2048, 256) for i in range(16)]
+    return low + high
+
+
+def test_elastic_switches_with_load_and_charges_pause():
+    cfg = get_config("llama-70b")
+    res = simulate_elastic(cfg, _bimodal_trace(), hw=H200,
+                           window_s=10.0, high_load_tok_s=2000.0,
+                           reshard_pause_s=0.25)
+    assert res["window_strategies"] == ["tp", "dp"]
+    assert res["reshards"] == 1
+    assert res["reshard_pause_s"] == pytest.approx(0.25)
+    assert res["n_done"] == 24
+    # starting from the wrong deployment costs one more reshard
+    res2 = simulate_elastic(cfg, _bimodal_trace(), hw=H200,
+                            window_s=10.0, high_load_tok_s=2000.0,
+                            start_strategy="dp")
+    assert res2["reshards"] == 2
+
+
+def test_reshard_policy_ab_compares_static_deployments():
+    cfg = get_config("llama-70b")
+    ab = reshard_policy_ab(cfg, _bimodal_trace(), hw=H200,
+                           window_s=10.0, high_load_tok_s=2000.0)
+    assert set(ab) == {"elastic", "static_dp", "static_tp"}
+    assert ab["elastic"]["n_done"] == ab["static_dp"]["n_done"] \
+        == ab["static_tp"]["n_done"] == 24
+    # deterministic end to end
+    assert ab == reshard_policy_ab(cfg, _bimodal_trace(), hw=H200,
+                                   window_s=10.0, high_load_tok_s=2000.0)

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.engine import (ShiftEngine, EngineConfig, FaultConfig,
-                          PrefixConfig, Request)
+                          PrefixConfig, Request, SpecConfig)
 from repro.engine.request import FinishReason
 from repro.ft import DeliveryLog, Fault, FaultPlan, random_plan
 from repro.models import build_model
@@ -57,11 +57,13 @@ def _models():
     return m, m.init_params(jax.random.key(0))
 
 
-def _engine(mp, faults=None, num_blocks=0, prefix_cache=False, **fault_kw):
+def _engine(mp, faults=None, num_blocks=0, prefix_cache=False, spec_k=0,
+            **fault_kw):
     m, params = mp
     ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8,
                         num_blocks=num_blocks,
                         prefix=PrefixConfig(enabled=prefix_cache),
+                        spec=SpecConfig(k=spec_k),
                         fault=FaultConfig(**fault_kw))
     return ShiftEngine(m, m, params, params, ecfg, policy=_AlwaysBase(),
                        faults=faults)
@@ -248,8 +250,58 @@ def drill_reshard(mp, seed, results):
     _terminal_and_zero_leak(results, eng, reqs, plan)
 
 
+def drill_spec(mp, seed, results):
+    """Poisoned forward steps on a SPECULATING engine: a failed verify
+    iteration rolls its drafts back before the retry, so streams stay
+    exactly-once through the DeliveryLog and bit-identical to a fault-free
+    spec-OFF run — speculation must add no new divergence seams."""
+    def reqs():
+        # repetitive prompts so the drafter actually drafts (and faults
+        # land on real verify steps, not plain decodes)
+        return [Request(i, ([2, 3, 4] * 4)[:9 + i], max_new_tokens=8)
+                for i in range(4)]
+
+    eng0 = _engine(mp)
+    rs0 = reqs()
+    for r in rs0:
+        eng0.add_request(r)
+    eng0.run_until_idle()
+    ref = {r.rid: list(r.generated) for r in rs0}
+
+    plan = random_plan(seed, 60, p_forward=0.25)
+    eng = _engine(mp, faults=plan, spec_k=4)
+    log = DeliveryLog()
+    rs = reqs()
+    for r in rs:
+        eng.add_request(r)
+    divergence = None
+    try:
+        for _ in range(600):
+            progressed = eng.step()
+            log.poll(rs)              # multi-token suffixes, exactly-once
+            if not progressed and not eng.queue and not eng.active:
+                break
+    except Exception as e:            # ReplayDivergence included
+        divergence = e
+    _check(results, "replay_clean", divergence is None,
+           repr(divergence) if divergence else "")
+    done = {r.rid: list(r.generated) for r in rs
+            if r.finish_reason is FinishReason.OK}
+    _check(results, "spec_streams_bit_identical_under_faults",
+           len(done) > 0 and all(done[rid] == ref[rid] for rid in done),
+           f"{len(done)}/{len(rs)} completed ok")
+    _check(results, "spec_streams_exactly_once",
+           all(log.delivered(rid) == done[rid] for rid in done))
+    _check(results, "drafts_proposed",
+           eng.obs.registry.counter_total("spec_proposed_total") > 0)
+    _check(results, "failed_steps_logged",
+           eng.obs.registry.counter_total("failed_steps_total") > 0)
+    _terminal_and_zero_leak(results, eng, rs, plan)
+
+
 DRILLS = {"oom": drill_oom, "poison": drill_poison, "crash": drill_crash,
-          "storm": drill_storm, "reshard": drill_reshard}
+          "storm": drill_storm, "reshard": drill_reshard,
+          "spec": drill_spec}
 
 
 def main(argv=None) -> int:

@@ -266,6 +266,28 @@ class PagedKVCache:
         self.n_mapped[seq] = 0
         self._dirty.add(seq)
 
+    def truncate(self, seq: int, n_tokens: int) -> int:
+        """Unmap ``seq``'s tail blocks beyond ``n_tokens`` coverage —
+        the speculative-decode rollback primitive. Rejected draft KV
+        needs no data-plane work: positions inside kept blocks are
+        masked by the context length and overwritten position-
+        idempotently by later steps; only blocks wholly past the
+        accepted length are returned here (decrement-not-free, same
+        invariants as ``free_seq``). Returns the number of table
+        entries unmapped."""
+        keep = blocks_for_tokens(n_tokens, self.block_size)
+        cur = int(self.n_mapped[seq])
+        if keep >= cur:
+            return 0
+        tail = [int(b) for b in self.table[seq, keep:cur]]
+        assert BlockAllocator.NULL_BLOCK not in tail, \
+            f"slot {seq} maps the null block — table corrupt"
+        self.allocators[self.row_of(seq)].free(tail)
+        self.table[seq, keep:cur] = BlockAllocator.NULL_BLOCK
+        self.n_mapped[seq] = keep
+        self._dirty.add(seq)
+        return cur - keep
+
     def fork(self, src: int, dst: int):
         """Share src's blocks into dst (ref-counted) — prefix-sharing hook.
         Writes into dst must go through ``copy_on_write`` first. Both slots

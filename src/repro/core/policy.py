@@ -24,12 +24,15 @@ class ThresholdPolicy:
 
     def use_base(self, n_tokens: int, n_prefill_tokens: int = 0,
                  ctx_tokens: int = 0, n_rows: int = 0,
-                 ctx_max: int = 0) -> bool:
+                 ctx_max: int = 0, spec_tokens: int = 0) -> bool:
         """The paper's rule ignores context; ``ctx_tokens`` (sum of the
-        batch rows' actual KV context lengths), ``n_rows`` and ``ctx_max``
+        batch rows' actual KV context lengths), ``n_rows``, ``ctx_max``
         (the largest row context — the engine's launch bucket derives
-        from it) are accepted so the engine can feed every policy the
-        same iteration facts."""
+        from it) and ``spec_tokens`` (speculative draft queries inside
+        ``n_tokens``) are accepted so the engine can feed every policy
+        the same iteration facts. Draft queries count toward the
+        threshold like any batched token: verify iterations are bigger
+        launches, which is exactly the load signal Algorithm 2 keys on."""
         return n_tokens > self.threshold
 
 
@@ -49,7 +52,7 @@ class AdaptivePolicy:
 
     def use_base(self, n_tokens: int, n_prefill_tokens: int = 0,
                  ctx_tokens: int = 0, n_rows: int = 0,
-                 ctx_max: int = 0) -> bool:
+                 ctx_max: int = 0, spec_tokens: int = 0) -> bool:
         from repro.sim.costmodel import Strategy
         n_decode = max(n_tokens - n_prefill_tokens, 0)
         n = self.sp * self.tp
@@ -66,10 +69,13 @@ class AdaptivePolicy:
             ctx_lens = [ctx_tokens // n_rows] * n_rows
         else:
             ctx_lens = None
+        # acceptance-aware: speculative draft queries share their rows'
+        # KV reads (n_spec), so verify-heavy iterations are priced
+        # compute-side — which is where the SP/TP asymmetry lives
         t_base = self.cost_model.iteration_time(
             n_prefill_tokens, n_decode, ctx, Strategy("sp", n),
-            ctx_lens=ctx_lens)
+            ctx_lens=ctx_lens, n_spec=spec_tokens)
         t_shift = self.cost_model.iteration_time(
             n_prefill_tokens, n_decode, ctx, Strategy("tp", n),
-            ctx_lens=ctx_lens)
+            ctx_lens=ctx_lens, n_spec=spec_tokens)
         return t_base <= t_shift

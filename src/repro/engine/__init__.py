@@ -2,9 +2,11 @@ from .api import (BlockLedger, ClusterStats, EngineStats, FaultConfig,
                   ObsConfig, PrefixConfig, PrefixStats, ServingClient)
 from .deployment import Deployment, ReshardError, ReshardReport
 from .request import Request
+from repro.spec import SpecConfig
 from .engine import ShiftEngine, EngineConfig
 
-__all__ = ["Request", "ShiftEngine", "EngineConfig", "ServingClient",
+__all__ = ["Request", "ShiftEngine", "EngineConfig", "SpecConfig",
+           "ServingClient",
            "PrefixConfig", "FaultConfig", "ObsConfig", "PrefixStats",
            "BlockLedger", "EngineStats", "ClusterStats",
            "Deployment", "ReshardError", "ReshardReport"]

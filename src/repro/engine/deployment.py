@@ -46,6 +46,9 @@ class ReshardReport:
     blocks_moved: int
     dropped_prefix_blocks: int
     plan: Tuple[tuple, ...] = ()
+    # steps ``schedule_reshard`` held admissions before executing the swap
+    # (0 for an immediate ``reshard()`` call): fewer live blocks to re-pour
+    admission_paused_steps: int = 0
 
     @property
     def noop(self) -> bool:
@@ -70,6 +73,11 @@ class Deployment:
     forward: Optional[dict] = None
     prefill: Optional[dict] = None
     decode: Optional[dict] = None
+    # lazily-populated speculative verify table: {(config, n_last) -> fn}.
+    # Rebuilt empty on reshard (layouts change the program); n_last == 1
+    # aliases the plain ``forward`` table so a no-draft step runs the
+    # exact pre-spec compiled program.
+    spec_forward: Optional[dict] = None
 
     # ------------------------------------------------------------ identity
     @property
@@ -111,6 +119,7 @@ class Deployment:
                 "shift": jax.jit(self.shift.forward_fn(paged=True,
                                                        kernel=kc),
                                  donate_argnums=(1,))}
+            self.spec_forward = {}
         else:
             pg = self.paged
             self.prefill = {
@@ -125,6 +134,27 @@ class Deployment:
                 "shift": jax.jit(self.shift.decode_fn(True, paged=pg,
                                                       kernel=kc),
                                  donate_argnums=(1,))}
+
+    # -------------------------------------------------------- spec verify
+    def forward_at(self, config: str, n_last: int = 1):
+        """The mixed forward for ``config`` ("base" | "shift") at
+        speculative verify width ``n_last``. Width 1 returns the plain
+        ``forward`` entry unchanged (bitwise the non-spec program);
+        wider programs jit once per (config, n_last) and are retired
+        with the Deployment on reshard."""
+        if self.forward is None:
+            raise ValueError("forward_at requires the mixed jit table")
+        if n_last <= 1:
+            return self.forward[config]
+        key = (config, n_last)
+        fn = self.spec_forward.get(key)
+        if fn is None:
+            model = self.base if config == "base" else self.shift
+            fn = jax.jit(model.forward_fn(paged=True, kernel=self.kernel,
+                                          n_last=n_last),
+                         donate_argnums=(1,))
+            self.spec_forward[key] = fn
+        return fn
 
     # ------------------------------------------------------------ reshard
     def reshard(self, new_base: Model, new_shift: Model) -> "Deployment":

@@ -65,6 +65,7 @@ bucketed so each (config, shape) pair compiles once — the JAX analogue of
 the paper's per-shape CUDA-graph capture."""
 from __future__ import annotations
 
+import dataclasses
 import inspect
 import time
 from typing import Dict, List, Optional
@@ -81,6 +82,7 @@ from repro.ft.watchdog import StragglerWatchdog
 from repro.models.model import Model
 from repro.obs import Observability, NullObs
 from repro.parallel import Layout, layout_delta
+from repro.spec import SpecConfig, SuffixDrafter
 from .api import (BlockLedger, EngineStats, FaultConfig, ObsConfig,
                   PrefixConfig, PrefixStats)
 from .deployment import Deployment, ReshardError, ReshardReport
@@ -124,7 +126,9 @@ class EngineConfig:
                  # nested groups (each None = defaults)
                  prefix: Optional[PrefixConfig] = None,
                  fault: Optional[FaultConfig] = None,
-                 obs: Optional[ObsConfig] = None):
+                 obs: Optional[ObsConfig] = None,
+                 # speculative decoding (repro.spec): k == 0 disables
+                 spec: Optional[SpecConfig] = None):
         self.max_slots = max_slots
         self.s_max = s_max
         self.prefill_chunk = prefill_chunk
@@ -141,6 +145,7 @@ class EngineConfig:
         self.prefix = prefix if prefix is not None else PrefixConfig()
         self.fault = fault if fault is not None else FaultConfig()
         self.obs = obs if obs is not None else ObsConfig()
+        self.spec = spec if spec is not None else SpecConfig()
 
     def __repr__(self):
         return (f"EngineConfig(max_slots={self.max_slots}, "
@@ -148,7 +153,12 @@ class EngineConfig:
                 f"threshold={self.threshold}, paged={self.paged}, "
                 f"block_size={self.block_size}, "
                 f"num_blocks={self.num_blocks}, mixed={self.mixed}, "
-                f"prefix={self.prefix}, fault={self.fault}, obs={self.obs})")
+                f"prefix={self.prefix}, fault={self.fault}, obs={self.obs}, "
+                f"spec={self.spec})")
+
+    @property
+    def spec_k(self) -> int:
+        return self.spec.k
 
     # flat read properties: the pre-PR-8 spellings, mapped onto the groups
     @property
@@ -205,7 +215,7 @@ class ShiftEngine:
         # what they declare. A per-call try/except TypeError would
         # swallow TypeErrors raised INSIDE a modern policy and silently
         # degrade it to the context-blind path.
-        _facts = ("ctx_tokens", "n_rows", "ctx_max")
+        _facts = ("ctx_tokens", "n_rows", "ctx_max", "spec_tokens")
         try:
             params = inspect.signature(self.policy.use_base).parameters
             if any(p.kind is inspect.Parameter.VAR_KEYWORD
@@ -248,6 +258,25 @@ class ShiftEngine:
             raise ValueError(
                 "prefix caching requires the paged KV cache (cached blocks "
                 "are shared through ref-counted block tables)")
+        # speculative decoding: drafts only flow on the paged mixed-batch
+        # path (verify rows are ragged q_len=1+k rows through the paged
+        # attention; the serialized/dense fallbacks decode one token per
+        # pass, so their streams are trivially identical to spec-off).
+        # Like the dense fallback, a silently inert spec_k must be LOUD.
+        self.spec = cfg.spec
+        self.spec_disabled_reason = None
+        if self.spec.k and not (self.paged and self.mixed):
+            self.spec_disabled_reason = (
+                "speculative decoding requires the paged mixed-batch path "
+                f"(paged={self.paged}, mixed={self.mixed})")
+        self._spec_on = bool(self.spec.k) and self.spec_disabled_reason is None
+        # drafter state is a pure function of each request's tokens and is
+        # therefore never snapshotted: restore/reshard rebuild it lazily
+        self.drafter = SuffixDrafter(self.spec)
+        # reshard-aware admission: a scheduled reshard pauses admissions
+        # for its lead steps so the re-pour moves fewer blocks
+        self._pending_reshard: Optional[dict] = None
+        self.last_reshard_report: Optional[ReshardReport] = None
         # ONE swappable value owns everything layout-dependent: the model
         # views, the sharded params, and the jit tables. reshard() replaces
         # it wholesale; base/shift/p_base/p_shift/dp/_forward/_prefill/
@@ -500,6 +529,7 @@ class ShiftEngine:
         self.queue = [q for q in self.queue if q.rid != req.rid]
         req.finish_time = t
         req.finish_reason = reason
+        self.drafter.drop(req.rid)
         self.obs.inc(self._REASON_COUNTER[reason])
         self.obs.emit(self._REASON_EVENT[reason], step=self.step_count,
                       ts=t, rid=req.rid, row=req.row,
@@ -702,6 +732,11 @@ class ShiftEngine:
         One FCFS exception: a request voluntarily waiting on an in-flight
         same-prefix prefill is skipped, not blocking — its wait is bounded
         by the writer's progress, so later arrivals may admit past it."""
+        if self._pending_reshard is not None:
+            # admissions hold while a scheduled reshard counts down, so
+            # the swap re-pours only already-running requests' blocks
+            self._pending_reshard["paused"] += 1
+            return
         if not self.paged:
             for req in list(self.queue):
                 if req.slot is not None or not self._admissible(req):
@@ -947,16 +982,20 @@ class ShiftEngine:
     # ---------------------------------------------------------------- steps
     def _choose(self, n_tokens: int, n_prefill: int,
                 ctx_tokens: int = 0, n_rows: int = 0,
-                ctx_max: int = 0) -> str:
+                ctx_max: int = 0, spec_tokens: int = 0) -> str:
         """Pick the config for this iteration. ``ctx_tokens`` is the sum of
         the batch rows' ACTUAL context lengths — what the
         work-proportional kernel reads — and ``ctx_max`` the largest row
         (the pow2 launch bucket derives from it), so a cost-model policy
-        prices the real KV traffic instead of assuming S_max. Policies
-        with the older two-arg signature still work (they just don't see
-        the context)."""
+        prices the real KV traffic instead of assuming S_max.
+        ``spec_tokens`` counts the speculative draft queries inside
+        ``n_tokens``: they add weight-side compute like prefill tokens but
+        share their row's KV read, so an acceptance-aware policy prices
+        verify-vs-decode instead of treating each as a full decode row.
+        Policies with the older two-arg signature still work (they just
+        don't see the context)."""
         facts = {"ctx_tokens": ctx_tokens, "n_rows": n_rows,
-                 "ctx_max": ctx_max}
+                 "ctx_max": ctx_max, "spec_tokens": spec_tokens}
         use_base = self.policy.use_base(
             n_tokens, n_prefill,
             **{k: facts[k] for k in self._policy_ctx_kwargs})
@@ -969,6 +1008,8 @@ class ShiftEngine:
                             "ctx_max": ctx_max,
                             "threshold": getattr(self.policy, "threshold",
                                                  None)}
+        if spec_tokens:
+            self._step_audit["spec_tokens"] = spec_tokens
         return name
 
     def _log_step(self, n_prefill: int, n_decode: int, n_ready: int,
@@ -1000,6 +1041,7 @@ class ShiftEngine:
                       and r.generated[-1] == self.cfg.eos_id):
             r.finish_time = t
             r.finish_reason = FinishReason.OK
+            self.drafter.drop(r.rid)
             if self.paged:
                 self._unregister_inflight(r)
                 self.kv.free_seq(r.slot)
@@ -1035,6 +1077,8 @@ class ShiftEngine:
                  and not r.done and self._retryable(r)]
         n_ready = len(ready)
         rows = []                          # (req, off, q_len, produces)
+        drafts: Dict[int, List[int]] = {}  # rid -> speculative draft tokens
+        decode_rows = set()                # Requests batched as decode rows
         protect = set()
         for r in ready:
             if r.slot is None:
@@ -1042,9 +1086,29 @@ class ShiftEngine:
             # coverage for the token written this step (position r.pos)
             if self._reserve(r, r.total_tokens, protect=protect,
                              write_from=r.pos):
-                rows.append((r, r.pos, 1, True))
+                d: List[int] = []
+                if self._spec_on:
+                    # draft at most the tokens this request can still emit
+                    # beyond the one it samples anyway, so accepted drafts
+                    # never overrun max_new_tokens or s_max
+                    d = self.drafter.propose(
+                        r.rid, r.all_tokens(),
+                        r.max_new_tokens - len(r.generated) - 1)
+                    # the draft extension must never preempt anyone or
+                    # evict cached prefixes — speculation is opportunistic;
+                    # shrink the draft until the row's free list covers it
+                    # (stage-1 COW already privatized the block holding
+                    # r.pos; extension blocks are freshly allocated)
+                    while d and not self.kv.ensure(r.slot,
+                                                   r.total_tokens + len(d)):
+                        d.pop()
+                if d:
+                    drafts[r.rid] = d
+                rows.append((r, r.pos, 1 + len(d), True))
+                decode_rows.add(r)
                 protect.add(r)
-        n_decode = len(rows)
+        n_decode = len(decode_rows)
+        n_spec = sum(len(d) for d in drafts.values())
         n_prefill_tok = 0
         for r in list(self.active):
             if r.slot is None or r.done or self._prefill_done(r) \
@@ -1068,9 +1132,10 @@ class ShiftEngine:
             return False
 
         attn_ctx = sum(off + ql for _, off, ql, _ in rows)
-        mode = self._choose(n_prefill_tok + n_decode, n_prefill_tok,
+        mode = self._choose(n_prefill_tok + n_decode + n_spec, n_prefill_tok,
                             attn_ctx, len(rows),
-                            max(off + ql for _, off, ql, _ in rows))
+                            max(off + ql for _, off, ql, _ in rows),
+                            spec_tokens=n_spec)
         model = self.base if mode == "base" else self.shift
         params = self.p_base if mode == "base" else self.p_shift
         # compact to active rows; bucket every axis so each (config, shape)
@@ -1109,6 +1174,10 @@ class ShiftEngine:
             if ql == 1 and off == r.pos:       # decode row: O(1) last token
                 toks[i, 0] = (r.generated[-1] if r.generated
                               else r.prompt[-1])
+            elif off == r.pos:                 # spec row: last token + draft
+                toks[i, 0] = (r.generated[-1] if r.generated
+                              else r.prompt[-1])
+                toks[i, 1:ql] = drafts[r.rid]
             else:
                 toks[i, :ql] = r.all_tokens()[off:off + ql]
             qlen[i] = ql
@@ -1117,6 +1186,12 @@ class ShiftEngine:
         self._apply_copies()               # COW copies land before the write
         args = [jnp.asarray(toks), jnp.asarray(qlen), jnp.asarray(offs),
                 jnp.asarray(bt)]
+        # speculative verify width: the extraction returns each row's last
+        # n_last sampled tokens. No drafts -> n_last == 1 -> the exact
+        # (bitwise) non-speculative compiled program.
+        n_last = (_pow2(1 + max(len(d) for d in drafts.values()))
+                  if drafts else 1)
+        fwd = self.deploy.forward_at(mode, n_last)
         fault = (self.faults.at(self.step_count, "forward")
                  if self.faults is not None else None)
         if fault is not None:
@@ -1124,26 +1199,80 @@ class ShiftEngine:
         if fault is None or fault.kind == "nan":
             # "nan" models poisoned logits: the launch runs (and rewrites
             # the same KV bytes a retry will), but its outputs are garbage
-            nxt, self.cache = self._forward[mode](params, self.cache, *args,
-                                                  *self._extras(Rb))
+            nxt, self.cache = fwd(params, self.cache, *args,
+                                  *self._extras(Rb))
             nxt = np.asarray(nxt)
         if fault is not None:
             # failed step: no token is applied, no progress is recorded —
             # every batched request retries with backoff or quarantines.
             # A retry recomputes the identical chunk (KV writes are
-            # position-idempotent), so streams stay bit-identical.
+            # position-idempotent), so streams stay bit-identical. Draft
+            # extensions are unmapped so the failed step leaves block
+            # accounting exactly as a non-speculative failure would (the
+            # retry re-proposes the identical drafts and re-ensures).
+            for r in decode_rows:
+                if r.rid in drafts and r.slot is not None:
+                    self.kv.truncate(r.slot, r.total_tokens)
             self._fail_step([e[0] for _, e in placed], n_ready,
                             attn_ctx if fault.kind == "nan" else 0)
             return True
         t = self.now()
+        n_dec_emit = 0          # decode-side tokens actually delivered
+        n_accepted = 0          # accepted draft tokens across spec rows
+        rollback_blocks = 0
         for i, (r, off, ql, produces) in placed:
-            r.prefilled = off + ql
             r.last_used = self.step_count
-            self.lens[r.slot] = r.prefilled
-            self._commit_prefix(r)         # before a finish frees the slot
-            if produces:
-                self._finish_token(r, int(nxt[i]), t)
-        self._log_step(n_prefill_tok, n_decode, n_ready, attn_ctx)
+            d = drafts.get(r.rid) if r in decode_rows else None
+            if d is None:
+                r.prefilled = off + ql
+                self.lens[r.slot] = r.prefilled
+                self._commit_prefix(r)     # before a finish frees the slot
+                if produces:
+                    tok = int(nxt[i, n_last - 1]) if n_last > 1 \
+                        else int(nxt[i])
+                    self._finish_token(r, tok, t)
+                    if r in decode_rows:
+                        n_dec_emit += 1
+                continue
+            # speculative verify: row outputs o_0..o_m sit in the last
+            # m+1 extraction columns; accept the longest prefix where
+            # draft j matched output j-1, then emit o_0..o_accepted —
+            # exactly the tokens sequential greedy decode would produce
+            m = len(d)
+            out = [int(nxt[i, n_last - 1 - m + j]) for j in range(m + 1)]
+            n_acc = 0
+            while n_acc < m and d[n_acc] == out[n_acc]:
+                n_acc += 1
+            emitted = out[:n_acc + 1]
+            # roll back rejected-draft KV first, while the slot is alive:
+            # a logical truncate of the uncommitted tail blocks (kept
+            # blocks' junk positions are masked by the context length and
+            # overwritten position-idempotently by later steps)
+            rollback_blocks += self.kv.truncate(r.slot, off + len(emitted))
+            delivered = 0
+            for j, tok in enumerate(emitted):
+                # commit BEFORE each append with the coverage a sequential
+                # step would have had (prefilled never exceeds the tokens
+                # known at commit time, so the index hashes no draft junk)
+                r.prefilled = off + j + 1
+                self.lens[r.slot] = r.prefilled
+                self._commit_prefix(r)
+                self._finish_token(r, tok, t)
+                delivered = j + 1
+                if r.finish_reason is not None:
+                    break                  # eos mid-accept: rest discarded
+            n_dec_emit += delivered
+            n_accepted += delivered - 1
+            self.obs.observe("spec_accepted_per_row", delivered - 1)
+        self._log_step(n_prefill_tok, n_dec_emit, n_ready, attn_ctx)
+        if n_spec:
+            self._step_stats["spec_proposed"] = n_spec
+            self._step_stats["spec_accepted"] = n_accepted
+            self.obs.inc("spec_proposed_total", n_spec)
+            if n_accepted:
+                self.obs.inc("spec_accepted_total", n_accepted)
+            if rollback_blocks:
+                self.obs.inc("spec_rollback_blocks_total", rollback_blocks)
         return True
 
     # --------------------------------------------------- serialized stepping
@@ -1314,6 +1443,17 @@ class ShiftEngine:
         # the failed row's slots)
         self._expire_deadlines()
         self._arm_step_faults()
+        if self._pending_reshard is not None \
+                and self._pending_reshard["countdown"] <= 0:
+            # lead steps served with admissions paused; execute the swap
+            # now, before this step admits into the old layout
+            p, self._pending_reshard = self._pending_reshard, None
+            rep = self.reshard(p["layout"], mesh=p["mesh"],
+                               row_blocks=p["row_blocks"])
+            self.last_reshard_report = dataclasses.replace(
+                rep, admission_paused_steps=p["paused"])
+        elif self._pending_reshard is not None:
+            self._pending_reshard["countdown"] -= 1
         self._admit()
         if self.mixed:
             # fused prefill+decode batch: no iteration-granularity
@@ -1529,6 +1669,10 @@ class ShiftEngine:
         self.slot_req = [None] * self.cfg.max_slots
         self.queue = []
         self._requests = {}
+        # drafter state is a pure function of each request's tokens: a
+        # fresh drafter rebuilds lazily from all_tokens() and proposes
+        # exactly what the pre-crash one would have (never snapshotted)
+        self.drafter.reset()
         for rd in snap["requests"]:
             r = Request(rd["rid"], rd["prompt"], rd["max_new_tokens"],
                         arrival=rd.get("arrival", 0.0))
@@ -1590,6 +1734,26 @@ class ShiftEngine:
                                for r in range(self.dp)))
 
     # --------------------------------------------------- elastic resharding
+    def schedule_reshard(self, layout: Layout, mesh=None,
+                         row_blocks: int = 0, lead_steps: int = 1):
+        """Plan a reshard ``lead_steps`` iterations ahead: admissions
+        pause immediately (so the swap re-pours only the blocks of
+        already-running requests, not a last-moment admission burst) and
+        the swap itself executes at the start of the target step. The
+        resulting :class:`ReshardReport` — with
+        ``admission_paused_steps`` counting the held iterations — lands
+        in ``last_reshard_report``. A step-0 schedule (``lead_steps=0``)
+        reshards on the very next step with no paused admissions."""
+        if self._pending_reshard is not None:
+            raise ReshardError("a reshard is already scheduled")
+        if lead_steps < 0:
+            raise ValueError(f"lead_steps must be >= 0, got {lead_steps}")
+        self._pending_reshard = {"layout": layout, "mesh": mesh,
+                                 "row_blocks": row_blocks,
+                                 "countdown": lead_steps, "paused": 0}
+        self.obs.emit("reshard_scheduled", step=self.step_count,
+                      lead_steps=lead_steps)
+
     def reshard(self, layout: Layout, mesh=None,
                 row_blocks: int = 0) -> ReshardReport:
         """Swap the engine onto a new parallel layout between iterations.

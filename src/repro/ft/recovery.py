@@ -27,7 +27,10 @@ class DeliveryLog:
     def poll(self, requests: Iterable) -> Dict[int, List[int]]:
         """Release each request's undelivered suffix. The already-delivered
         prefix must match ``generated`` bit-for-bit (replay check); returns
-        {rid: newly delivered tokens} for rids with new tokens."""
+        {rid: newly delivered tokens} for rids with new tokens. A suffix
+        may be SEVERAL tokens even between adjacent polls: a speculative
+        verify step delivers 1 + accepted tokens per row, so nothing here
+        (or in any consumer) may assume one sampled token per step."""
         out: Dict[int, List[int]] = {}
         for r in requests:
             stream = self.streams.setdefault(r.rid, [])

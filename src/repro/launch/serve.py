@@ -24,7 +24,7 @@ from repro.configs import get_config
 from repro.core.policy import (DEFAULT_SHIFT_THRESHOLD, ThresholdPolicy,
                                AdaptivePolicy)
 from repro.engine import (ShiftEngine, EngineConfig, FaultConfig,
-                          PrefixConfig, Request)
+                          PrefixConfig, Request, SpecConfig)
 from repro.ft import random_plan
 from repro.models import build_model
 from repro.models.model import Model
@@ -38,7 +38,8 @@ def _build_stack(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
                  threshold=DEFAULT_SHIFT_THRESHOLD, adaptive=False,
                  paged=None, block_size=16, num_blocks=0, prefix_cache=False,
                  dp=1, dtype=jnp.float32, deadline_s=None, max_queue=0,
-                 shed_policy="reject-newest", auto_snapshot_every=0):
+                 shed_policy="reject-newest", auto_snapshot_every=0,
+                 spec_k=0, spec_ngram=3):
     """Models + params + policy + EngineConfig, built once — replicas of a
     cluster share the stack (same weights: a migrated request decodes the
     same stream on any replica)."""
@@ -71,6 +72,7 @@ def _build_stack(arch: str, *, reduced=True, mesh=None, sp=2, tp=2,
         threshold=threshold, paged=paged, block_size=block_size,
         num_blocks=num_blocks,
         prefix=PrefixConfig(enabled=prefix_cache),
+        spec=SpecConfig(k=spec_k, ngram_max=spec_ngram),
         fault=FaultConfig(deadline_s=deadline_s, max_queue=max_queue,
                           shed_policy=shed_policy,
                           auto_snapshot_every=auto_snapshot_every))
@@ -100,6 +102,48 @@ def build_cluster(arch: str, replicas: int, *, routing="affinity",
     return Router(engines, routing=routing, rebalance_every=rebalance_every)
 
 
+def _is_idle(client) -> bool:
+    if hasattr(client, "engines"):                 # cluster Router
+        return all(st.queue_depth == 0 and st.active == 0
+                   for st in (e.stats() for e in client.engines))
+    return not client.queue and not client.active  # bare engine
+
+
+def serve_loop(client, *, refresh_s=0.0, prom_path=None, max_steps=10000,
+               now=time.monotonic):
+    """Drive ``client`` to idle like ``run_until_idle``, but with a LIVE
+    metrics scrape surface: with ``refresh_s`` > 0 and a ``prom_path``,
+    the Prometheus text exposition is rewritten every ``refresh_s``
+    seconds of serving (and once at exit), so a file-based scraper (e.g.
+    node_exporter's textfile collector) sees fresh counters while
+    requests are still in flight instead of one post-run artifact.
+    Returns the number of refreshes written; ``now`` is injectable so
+    tests can drive the refresh clock deterministically."""
+    writer = getattr(client, "write_prometheus", None) \
+        or client.obs.write_prometheus
+    if not (refresh_s and prom_path):
+        client.run_until_idle(max_steps)
+        return 0
+    poll = getattr(client, "poll", None)
+    n_refresh = 0
+    last = now()
+    for _ in range(max_steps):
+        if poll is not None:
+            poll()
+        progressed = client.step()
+        t = now()
+        if t - last >= refresh_s:
+            writer(prom_path)
+            last = t
+            n_refresh += 1
+        if not progressed and _is_idle(client):
+            break
+    if poll is not None:
+        poll()
+    writer(prom_path)                  # final state is always current
+    return n_refresh + 1
+
+
 def _print_engine_summary(eng, label=""):
     st = eng.stats()
     print(f"{label}configs used: base={st.config_counts['base']} "
@@ -120,6 +164,15 @@ def _print_engine_summary(eng, label=""):
         # the dense fallback is loud: say WHY paging is off (also recorded
         # in prefix stats / step records)
         print(f"{label}dense cache fallback: {st.paged_disabled_reason}")
+    if eng.cfg.spec.k:
+        if eng.spec_disabled_reason:
+            print(f"{label}spec decode DISABLED: {eng.spec_disabled_reason}")
+        else:
+            prop = int(eng.obs.registry.counter_total("spec_proposed_total"))
+            acc = int(eng.obs.registry.counter_total("spec_accepted_total"))
+            rate = f" ({acc / prop:.0%} acceptance)" if prop else ""
+            print(f"{label}spec decode: k={eng.cfg.spec.k}, {prop} drafted, "
+                  f"{acc} accepted{rate}")
 
 
 def _reshard_demo(arch: str, *, requests=4, max_new=8):
@@ -225,10 +278,20 @@ def main():
     ap.add_argument("--routing", default="affinity",
                     choices=["affinity", "round-robin", "least-loaded"],
                     help="Router policy for --replicas > 1")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: up to K self-drafted tokens "
+                         "verified per decode row per iteration (0 = off). "
+                         "Greedy streams are bitwise identical either way")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="longest suffix n-gram the self-drafter matches")
     ap.add_argument("--metrics-out", metavar="PATH",
                     help="write the observability dump as JSON to PATH and "
                          "the Prometheus text exposition next to it "
                          "(PATH with a .prom extension)")
+    ap.add_argument("--metrics-refresh-s", type=float, default=0.0,
+                    help="with --metrics-out: rewrite the .prom exposition "
+                         "every S seconds WHILE serving (live scrape "
+                         "surface), not just once at exit")
     ap.add_argument("--trace-out", metavar="PATH",
                     help="write a Chrome trace-event file (load in "
                          "chrome://tracing or ui.perfetto.dev) to PATH")
@@ -268,11 +331,14 @@ def main():
                              p_route=args.p_fault, dp=args.dp)
         print(f"fault plan: seed={args.fault_seed} "
               f"{len(faults)} faults over {args.fault_steps} steps")
+    if args.metrics_refresh_s and not args.metrics_out:
+        ap.error("--metrics-refresh-s requires --metrics-out")
     kw = dict(adaptive=args.adaptive, block_size=args.block_size,
               num_blocks=args.num_blocks, prefix_cache=args.prefix_cache,
               dp=args.dp, deadline_s=args.deadline_s,
               max_queue=args.max_queue, shed_policy=args.shed_policy,
-              auto_snapshot_every=args.auto_snapshot_every)
+              auto_snapshot_every=args.auto_snapshot_every,
+              spec_k=args.spec_k, spec_ngram=args.spec_ngram)
     if args.replicas > 1:
         client = build_cluster(args.arch, args.replicas,
                                routing=args.routing, faults=faults, **kw)
@@ -296,9 +362,15 @@ def main():
     except ValueError:
         pass                          # not on the main thread (tests)
 
+    prom = (os.path.splitext(args.metrics_out)[0] + ".prom"
+            if args.metrics_out else None)
     t0 = time.monotonic()
     try:
-        client.run_until_idle()
+        n_refresh = serve_loop(client, refresh_s=args.metrics_refresh_s,
+                               prom_path=prom)
+        if n_refresh:
+            print(f"live metrics: {prom} refreshed {n_refresh}x "
+                  f"(every {args.metrics_refresh_s}s)")
     except KeyboardInterrupt:
         print("\ninterrupt: draining in-flight requests, shedding queue...")
         client.drain()
@@ -335,7 +407,6 @@ def main():
     dump = client.dump() if args.replicas > 1 else client.obs.dump()
     print(format_report(build_report(dump)))
     if args.metrics_out:
-        prom = os.path.splitext(args.metrics_out)[0] + ".prom"
         if args.replicas > 1:
             client.write_json(args.metrics_out)
             client.write_prometheus(prom)

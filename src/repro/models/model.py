@@ -161,7 +161,7 @@ class Model:
         return self._wrap(body, tuple(in_specs), (out_tok, cspec))
 
     def forward_fn(self, paged: bool = True, sample: bool = True,
-                   kernel=None):
+                   kernel=None, n_last: int = 1):
         """Unified mixed-batch step: chunked-prefill rows (q_len up to the
         chunk width) and decode rows (q_len == 1) in ONE forward pass over
         the shared paged pool. For the paged engine this replaces the
@@ -169,7 +169,12 @@ class Model:
         combined token count and the device batch is compacted to active
         rows. Signature of the returned fn:
         ``(params, pool, tokens [B, C], q_lens [B], offsets [B],
-        block_tables [B, nmax], *extras) -> (next_tokens [B], pool)``."""
+        block_tables [B, nmax], *extras) -> (next_tokens [B], pool)``.
+
+        ``n_last`` > 1 is the speculative verify width: the ragged
+        extraction returns the last n_last query positions per row
+        (next_tokens [B, n_last]); n_last == 1 compiles the exact
+        original single-token program."""
         if not paged:
             raise ValueError("the mixed forward requires the paged KV cache")
         cfg, lay, pod = self.cfg, self.lay, self.pod_scale
@@ -188,9 +193,13 @@ class Model:
             fe = rest[0] if cfg.frontend == "vision_stub" else None
             return T.mixed_body(params, cache, tokens, q_lens, offsets, cfg,
                                 lay, pod, fe, block_tables=bt, sample=sample,
-                                kcfg=kcfg)
+                                kcfg=kcfg, n_last=n_last)
 
-        out_tok = P(dp) if sample else P(dp, lay.tp_axes or None)
+        if n_last > 1:
+            out_tok = P(dp, None) if sample else P(dp, None,
+                                                   lay.tp_axes or None)
+        else:
+            out_tok = P(dp) if sample else P(dp, lay.tp_axes or None)
         return self._wrap(body, tuple(args + extras), (out_tok, cspec))
 
     def loss_fn(self, remat: bool = True):

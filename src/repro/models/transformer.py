@@ -321,16 +321,26 @@ def prefill_body(params, cache, tokens, offsets, cfg, lay: Layout,
 
 def mixed_body(params, cache, tokens, q_lens, offsets, cfg, lay: Layout,
                pod_scale=False, frontend_embeds=None, block_tables=None,
-               sample=True, kcfg=None):
+               sample=True, kcfg=None, n_last=1):
     """Unified mixed prefill+decode step against the paged pool.
 
     tokens: [B, S_loc] — row b carries ``q_lens[b]`` fresh tokens written
-    at cache positions ``offsets[b] ..``; decode rows have q_len == 1,
+    at cache positions ``offsets[b] ..``; decode rows have q_len == 1
+    (plus up to k speculative draft tokens when the engine is verifying),
     chunked-prefill rows up to the chunk width, padding rows 0. Returns
     (next_token [B] greedy — or last-token logits [B, v_loc] with
     ``sample=False`` — and the updated pool). Rows whose chunk does not
     reach the end of their known tokens get a garbage next_token the
-    engine ignores."""
+    engine ignores.
+
+    ``n_last`` (static) is the speculative verify width: with n_last > 1
+    the ragged extraction takes the last ``n_last`` query positions of
+    each row instead of the single newest one, returning [B, n_last]
+    tokens (or [B, n_last, v_loc] logits). Row b's output j corresponds
+    to global column ``q_lens[b] - n_last + j``; columns before the
+    row's start are masked to zero logits and their outputs are garbage
+    the engine ignores. n_last == 1 is bit-for-bit the original
+    single-token path."""
     pos = _positions_prefill(tokens, offsets, lay)
     x = _embed_tokens(params, tokens, pos, cfg, lay, frontend_embeds)
     ctx = {"offsets": offsets, "q_lens": q_lens, "block_tables": block_tables,
@@ -342,11 +352,21 @@ def mixed_body(params, cache, tokens, q_lens, offsets, cfg, lay: Layout,
     # column q_lens[b]-1, which lives on exactly one sp rank
     B, S_loc = x.shape[:2]
     r = joint_axis_index(lay.sp_axes, dict(lay.axis_sizes)) if lay.sp > 1 else 0
-    loc = q_lens - 1 - r * S_loc                               # [B] local col
-    here = (loc >= 0) & (loc < S_loc)
-    take = jnp.take_along_axis(
-        x, jnp.clip(loc, 0, S_loc - 1)[:, None, None], axis=1)[:, 0]
-    last = jnp.where(here[:, None], take, jnp.zeros_like(take))
+    if n_last == 1:
+        loc = q_lens - 1 - r * S_loc                           # [B] local col
+        here = (loc >= 0) & (loc < S_loc)
+        take = jnp.take_along_axis(
+            x, jnp.clip(loc, 0, S_loc - 1)[:, None, None], axis=1)[:, 0]
+        last = jnp.where(here[:, None], take, jnp.zeros_like(take))
+    else:
+        # ragged last-k: global columns q_lens[b]-n_last .. q_lens[b]-1,
+        # each living on exactly one sp rank; columns < 0 masked
+        cols = q_lens[:, None] - n_last + jnp.arange(n_last)[None, :]
+        loc = cols - r * S_loc                                 # [B, n_last]
+        here = (loc >= 0) & (loc < S_loc) & (cols >= 0)
+        take = jnp.take_along_axis(
+            x, jnp.clip(loc, 0, S_loc - 1)[:, :, None], axis=1)
+        last = jnp.where(here[:, :, None], take, jnp.zeros_like(take))
     if lay.sp > 1:
         last = jax.lax.psum(last, lay.sp_axes)
     logits = (tied_lmhead_apply(params["embed"], last, lay) if cfg.tie_embeddings

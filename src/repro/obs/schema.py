@@ -92,6 +92,14 @@ COUNTERS = {
         ("Completed deployment reshards (layout swaps) on this engine", ()),
     "reshard_blocks_moved_total":
         ("KV blocks re-poured into the new pool layout by reshards", ()),
+    # ---------------------------------------------- speculative decoding
+    "spec_proposed_total":
+        ("Speculative draft tokens batched as verify queries", ()),
+    "spec_accepted_total":
+        ("Draft tokens accepted and delivered (excludes each row's "
+         "always-sampled bonus token)", ()),
+    "spec_rollback_blocks_total":
+        ("KV blocks unmapped when rolling back rejected drafts", ()),
 }
 
 # ``seam`` label values: the named injection points of repro.ft.faults —
@@ -123,6 +131,11 @@ HISTOGRAMS = {
     "e2e_seconds": ("Arrival to final token", (), LATENCY_BOUNDS),
     "step_seconds": ("Engine iteration wall time", (), LATENCY_BOUNDS),
     "step_tokens": ("Batched tokens per iteration", (), TOKEN_BOUNDS),
+    # per spec decode row: accepted draft tokens (0 = drafts all rejected,
+    # k = full acceptance). Small integer-aligned buckets — the acceptance
+    # histogram the ROADMAP's spec-decode item calls for.
+    "spec_accepted_per_row": ("Accepted draft tokens per verify row", (),
+                              (0, 1, 2, 3, 4, 6, 8, 12, 16)),
 }
 
 # ------------------------------------------------------- lifecycle events
@@ -154,6 +167,7 @@ EVENTS = (
     "migrate_out",   # live request extracted+released from this replica
     "migrate_in",    # live request admitted with migrated KV blocks
     # ------------------------------------------------ elastic resharding
+    "reshard_scheduled",  # swap planned; admissions pause for the lead steps
     "reshard_begin",  # deployment swap starting (attrs: old/new/kind)
     "reshard_end",    # deployment swap complete (attrs carry the report)
 )
@@ -169,7 +183,12 @@ EVENTS = (
 STEP_REQUIRED = ("step", "t_start", "dur_s", "config", "prefill_tokens",
                  "decode_tokens", "ready_decodes", "attn_ctx_tokens")
 STEP_OPTIONAL = ("n_tokens", "ctx_tokens", "ctx_max", "n_rows", "threshold",
-                 "paged_disabled_reason", "replica", "failed")
+                 "paged_disabled_reason", "replica", "failed",
+                 # speculative decoding: draft queries batched this step
+                 # (also what the policy saw) and how many were accepted;
+                 # decode_tokens counts DELIVERED tokens, so with drafts
+                 # accepted it exceeds the step's decode-row count
+                 "spec_tokens", "spec_proposed", "spec_accepted")
 
 # counters both the engine and the simulator must emit (the shared core of
 # the schema; either may additionally emit any other declared metric)

@@ -132,7 +132,8 @@ class CostModel:
         return 1.0 if self.attn_work_prop else self.GATHER_COPY_FACTOR
 
     def iteration_time(self, n_prefill: int, n_decode: int, ctx: int,
-                       strat: Strategy, *, ctx_lens=None) -> float:
+                       strat: Strategy, *, ctx_lens=None,
+                       n_spec: int = 0) -> float:
         """One engine iteration with n_prefill chunk tokens + n_decode
         decode tokens against average context ctx. A call with both terms
         nonzero prices a *mixed* batch (the engine's fused
@@ -152,7 +153,14 @@ class CostModel:
           sp — tokens sharded n ways but weights REPLICATED (DP-like decode:
                every rank streams the full weights); a2a volume ~1/n of TP;
                small batches pad to a multiple of n (§3.2.1)
-          dp — per-replica: no sharding at all."""
+          dp — per-replica: no sharding at all.
+
+        ``n_spec`` of the decode tokens are speculative draft queries
+        (verify-in-one-pass): they pay weight-side compute and comms like
+        any token but SHARE their row's KV read — the attention kernel
+        streams each row's context once regardless of how many query
+        tokens ride it. This is the verify-vs-decode asymmetry the
+        acceptance-aware shift policy prices."""
         n = strat.n
         tokens = n_prefill + n_decode
         if tokens == 0:
@@ -175,8 +183,11 @@ class CostModel:
         # (invariant layout) in both tp and sp -> /n
         kv_shard = 1 if strat.kind == "dp" else n
         w = self._weight_bytes() / w_shard
+        # draft queries share their row's context read: KV streams once
+        # per decode ROW (n_decode - n_spec), not once per query token
+        kv_rows = max(n_decode - n_spec, 0)
         kv_read = self._kv_bytes_per_tok() * ctx_eff * self._attn_copy_factor \
-            / kv_shard * (n_decode + 0.5 * (1 if n_prefill else 0))
+            / kv_shard * (kv_rows + 0.5 * (1 if n_prefill else 0))
         t_m = (w + kv_read) / (self.hw.hbm_bw * self.bw_eff)
 
         x = self._comm_bytes(tokens, strat)
@@ -186,6 +197,24 @@ class CostModel:
         # collectives sit on the critical path between layers (not
         # overlapped) — the paper's TP throughput penalty
         return max(t_c / util, t_m) + t_x + self.overhead_s
+
+    def verify_speedup(self, k: int, accepted: float, ctx: int,
+                       strat: Strategy, *, ctx_lens=None) -> float:
+        """Modeled delivered-token throughput of a k-draft verify row over
+        plain one-token decode, given the observed mean accepted drafts
+        per row (0 <= accepted <= k). Each verify iteration delivers
+        ``1 + accepted`` tokens and costs one (1 + k)-query pass whose k
+        draft queries share the row's KV read; the ratio > 1 means
+        speculation pays at this context/strategy, < 1 means the extra
+        verify compute outruns the iterations it saves — the
+        verify-vs-decode price the ROADMAP's acceptance-aware policy
+        item calls for."""
+        if k <= 0:
+            return 1.0
+        t_plain = self.iteration_time(0, 1, ctx, strat, ctx_lens=ctx_lens)
+        t_verify = self.iteration_time(0, 1 + k, ctx, strat,
+                                       ctx_lens=ctx_lens, n_spec=k)
+        return (1.0 + min(max(accepted, 0.0), k)) * t_plain / t_verify
 
     def attn_hbm_bytes(self, ctx_lens) -> float:
         """Modeled KV bytes one forward pass reads for the given per-row
@@ -197,10 +226,10 @@ class CostModel:
         return self._kv_bytes_per_tok() * per_row * len(ctx_lens)
 
     def best_config(self, n_prefill: int, n_decode: int, ctx: int, n: int,
-                    ctx_lens=None):
+                    ctx_lens=None, n_spec: int = 0):
         """Shift decision = argmin over {sp, tp} (AdaptivePolicy)."""
         t_sp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("sp", n),
-                                   ctx_lens=ctx_lens)
+                                   ctx_lens=ctx_lens, n_spec=n_spec)
         t_tp = self.iteration_time(n_prefill, n_decode, ctx, Strategy("tp", n),
-                                   ctx_lens=ctx_lens)
+                                   ctx_lens=ctx_lens, n_spec=n_spec)
         return ("sp", t_sp) if t_sp <= t_tp else ("tp", t_tp)

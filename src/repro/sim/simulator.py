@@ -26,6 +26,7 @@ import numpy as np
 from repro.cache import blocks_for_tokens
 from repro.ft.faults import FaultPlan
 from repro.obs import Observability
+from repro.spec import SpecConfig, SuffixDrafter
 from .costmodel import CostModel, Strategy
 
 # ``best_config`` names its winner in roofline terms ("sp" | "tp"); the
@@ -47,6 +48,11 @@ class SimRequest:
     # tokens prefill once per replica and later requests skip them.
     prefix_id: int = -1
     prefix_len: int = 0
+    # speculative decoding: the request's output TOKEN VALUES, drafted
+    # against by the same SuffixDrafter the engine runs (deterministic
+    # acceptance for A/B). Empty -> ServeSim synthesizes a periodic
+    # stream from the rid when spec_k > 0; ignored when spec is off.
+    out_stream: tuple = ()
     # outcome
     start: float = -1.0
     first_token: float = -1.0
@@ -99,7 +105,8 @@ class ServeSim:
                  shed_policy: str = "reject-newest",
                  quarantine_after: int = 3, retry_backoff: int = 2,
                  replicas: Optional[int] = None,
-                 routing: str = "least-loaded"):
+                 routing: str = "least-loaded",
+                 spec_k: int = 0, spec_ngram: int = 3):
         self.cost = cost
         self.strategy = strategy
         self.n = n_chips
@@ -142,6 +149,17 @@ class ServeSim:
         # prefill-OR-decode engine: an iteration that takes prefill tokens
         # makes no decode progress (the TPOT interference being measured).
         self.mixed = mixed
+        # speculative decoding mirror: decode rows carry up to spec_k
+        # verified draft queries from the SAME self-drafting suffix model
+        # the engine runs (repro.spec.SuffixDrafter over each request's
+        # out_stream), so acceptance — and therefore the A/B against a
+        # non-speculative run — is deterministic. Draft queries are priced
+        # via the cost model's n_spec (they share their row's KV read).
+        if spec_k and not mixed:
+            raise ValueError("spec_k > 0 requires mixed batching (verify "
+                             "rides the mixed iteration, as in the engine)")
+        self.spec = SpecConfig(k=spec_k, ngram_max=spec_ngram)
+        self.drafter = SuffixDrafter(self.spec)
         n_rep = (replicas if replicas is not None
                  else (n_chips if strategy == "dp" else 1))
         if n_rep < 1:
@@ -268,6 +286,17 @@ class ServeSim:
                 rep.queue.remove(victim)
             self._terminal(victim, "shed", rep)
 
+    def _spec_stream(self, r: SimRequest) -> tuple:
+        """The deterministic output stream a spec run drafts from and
+        verifies against. Callers may pin ``out_stream`` on the request;
+        otherwise a periodic stream is synthesized from the rid — mildly
+        repetitive, like the agentic traces the paper targets, so the
+        suffix drafter finds real matches without guaranteeing them."""
+        if not r.out_stream:
+            period = 3 + r.rid % 4
+            r.out_stream = tuple(2 + (j % period) for j in range(r.n_out))
+        return r.out_stream
+
     def _iteration(self, rep: ReplicaState):
         """Run one engine iteration on a replica; returns elapsed time."""
         self._expire_deadlines(rep)
@@ -382,24 +411,51 @@ class ServeSim:
             rep.t += 1e-4
             self.step_count += 1
             return 1e-4
+        # speculative mirror: draft from each decode row's own emitted
+        # stream (the engine's self-drafting proposer, deterministically
+        # reproduced over ``out_stream``), verify against what the row
+        # WILL emit, and deliver 1 + accepted tokens this iteration. The
+        # draft queries ride the same iteration (verify-in-one-pass), so
+        # they are priced into the cost model via ``n_spec``.
+        drafts: dict = {}
+        accepted: dict = {}
+        if self.spec.k and deco:
+            for r in deco:
+                budget = r.n_out - r.decoded - 1
+                stream = self._spec_stream(r)
+                d = self.drafter.propose(r.rid, list(stream[:r.decoded]),
+                                         budget)
+                if not d:
+                    continue
+                drafts[r.rid] = d
+                ref = stream[r.decoded:r.decoded + len(d)]
+                n_acc = 0
+                for got, want in zip(d, ref):
+                    if got != want:
+                        break
+                    n_acc += 1
+                accepted[r.rid] = n_acc
+        n_spec = sum(len(d) for d in drafts.values())
+        n_accepted = sum(accepted.values())
         # the ACTUAL per-row contexts of this iteration — the
         # work-proportional kernel prices these, not s_max or a bucket
         ctxs = [r.prefilled + r.decoded for r in rep.active] or [1]
         ctx = int(np.mean(ctxs))
 
         if self.strategy == "shift":
-            winner, dt = self.cost.best_config(n_prefill, n_decode, ctx,
-                                               self.n, ctx_lens=ctxs)
+            winner, dt = self.cost.best_config(n_prefill, n_decode + n_spec,
+                                               ctx, self.n, ctx_lens=ctxs,
+                                               n_spec=n_spec)
             cfgname = _SHIFT_CONFIG[winner]
         elif self.strategy == "dp":
-            dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
+            dt = self.cost.iteration_time(n_prefill, n_decode + n_spec, ctx,
                                           Strategy("dp", self.n),
-                                          ctx_lens=ctxs)
+                                          ctx_lens=ctxs, n_spec=n_spec)
             cfgname = "dp"
         else:
-            dt = self.cost.iteration_time(n_prefill, n_decode, ctx,
+            dt = self.cost.iteration_time(n_prefill, n_decode + n_spec, ctx,
                                           Strategy(self.strategy, self.n),
-                                          ctx_lens=ctxs)
+                                          ctx_lens=ctxs, n_spec=n_spec)
             cfgname = self.strategy
         t0 = rep.t
         rep.t += dt
@@ -423,24 +479,36 @@ class ServeSim:
             for r in batched:
                 self._fail(r, rep)
             return dt
-        self.trace_tokens.append((rep.t, n_prefill + n_decode))
-        self.obs.record_step({
+        self.trace_tokens.append((rep.t, n_prefill + n_decode + n_spec))
+        rec = {
             "step": self.step_count, "t_start": t0, "dur_s": dt,
             "config": cfgname, "prefill_tokens": n_prefill,
-            "decode_tokens": n_decode, "ready_decodes": n_ready,
+            "decode_tokens": n_decode + n_accepted, "ready_decodes": n_ready,
             "attn_ctx_tokens": int(sum(ctxs)) if rep.active else 0,
-            "n_tokens": n_prefill + n_decode, "ctx_tokens": int(sum(ctxs)),
-            "replica": rep.idx})
+            "n_tokens": n_prefill + n_decode + n_spec,
+            "ctx_tokens": int(sum(ctxs)), "replica": rep.idx}
+        if n_spec:
+            rec["spec_tokens"] = n_spec
+            rec["spec_proposed"] = n_spec
+            rec["spec_accepted"] = n_accepted
+            self.obs.inc("spec_proposed_total", n_spec)
+            self.obs.inc("spec_accepted_total", n_accepted)
+            for r in deco:
+                if r.rid in drafts:
+                    self.obs.observe("spec_accepted_per_row",
+                                     accepted.get(r.rid, 0))
+        self.obs.record_step(rec)
         self.step_count += 1
         for r in deco:
-            r.decoded += 1
-            if r.decoded == 1:
+            r.decoded += 1 + accepted.get(r.rid, 0)
+            if r.first_token < 0:
                 r.first_token = rep.t
                 ttft = r.first_token - r.arrival
                 self.obs.observe("ttft_seconds", ttft)
                 self.obs.emit("first_token", step=self.step_count, ts=rep.t,
                               rid=r.rid, ttft_s=ttft)
             if r.decoded >= r.n_out:
+                self.drafter.drop(r.rid)
                 r.finish = rep.t
                 r.finish_reason = "ok"
                 e2e = r.finish - r.arrival

@@ -1,0 +1,3 @@
+from .drafter import SpecConfig, SuffixDrafter
+
+__all__ = ["SpecConfig", "SuffixDrafter"]

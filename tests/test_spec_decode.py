@@ -1,0 +1,406 @@
+"""Speculative decoding on the mixed batch (repro.spec).
+
+The invariant everything here defends: speculation is an EXECUTION
+optimization, never a sampling change. Draft tokens ride the mixed
+forward pass as extra query tokens; the model's own greedy outputs decide
+acceptance; rejected drafts are rolled back block-exactly. So every
+stream must be bitwise identical with speculation on or off — on the
+mixed path, on the serialized fallback (where spec silently disables,
+loudly annotated), under dp>1, and across a mid-stream reshard — while
+the paged pool stays leak-free and the acceptance counters reconcile
+with the tokens actually delivered."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_mesh, reduced_cfg
+from repro.core.policy import ThresholdPolicy
+from repro.engine import (EngineConfig, Request, ShiftEngine, SpecConfig)
+from repro.models import build_model
+from repro.models.model import Model
+from repro.parallel import Layout
+from repro.roofline.terms import H200
+from repro.sim.costmodel import CostModel
+from repro.spec import SuffixDrafter
+
+
+# ---------------------------------------------------------------------------
+# drafter units
+# ---------------------------------------------------------------------------
+def _drafter(k=4, ngram_max=3, ngram_min=1):
+    return SuffixDrafter(SpecConfig(k=k, ngram_max=ngram_max,
+                                    ngram_min=ngram_min))
+
+
+def test_spec_config_validation():
+    assert not SpecConfig()                  # k=0 is falsy (disabled)
+    assert SpecConfig(k=2)
+    with pytest.raises(ValueError):
+        SpecConfig(k=-1)
+    with pytest.raises(ValueError):
+        SpecConfig(k=2, ngram_min=0)
+    with pytest.raises(ValueError):
+        SpecConfig(k=2, ngram_min=4, ngram_max=3)
+
+
+def test_drafter_suffix_match_proposes_continuation():
+    d = _drafter(k=3)
+    # ... 5 6 7 | 5 6 -> the trigram/bigram suffix (5, 6) last continued
+    # with 7, then 8 9; longest-n match wins and proposes what followed
+    toks = [1, 5, 6, 7, 8, 9, 5, 6]
+    assert d.propose(0, toks, budget=8) == [7, 8, 9][:3]
+
+
+def test_drafter_miss_and_cold_start():
+    d = _drafter()
+    assert d.propose(0, [], budget=8) == []            # nothing to index
+    assert d.propose(0, [1], budget=8) == []           # no history yet
+    assert d.propose(0, [1, 2, 3, 4], budget=8) == []  # suffix unseen
+
+
+def test_drafter_budget_caps_draft_len():
+    d = _drafter(k=4)
+    toks = [7, 1, 2, 3, 4, 5, 7]           # suffix (7,) continued by 1..5
+    assert d.propose(0, toks, budget=2) == [1, 2]
+    assert d.propose(0, toks, budget=0) == []
+    assert d.propose(0, toks, budget=-1) == []
+
+
+def test_drafter_incremental_equals_rebuild():
+    """The lazy cursor index must propose exactly what a fresh drafter
+    sees over the same tokens — this is what makes drafter state safe to
+    NOT snapshot (restore/reshard just rebuild it)."""
+    toks = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 1, 4, 1, 5, 9, 2]
+    inc, fresh = _drafter(), _drafter()
+    for n in range(1, len(toks) + 1):
+        got = inc.propose(42, toks[:n], budget=8)
+        ref = fresh.propose(n, toks[:n], budget=8)     # new rid = no reuse
+        assert got == ref, f"divergence at prefix length {n}"
+
+
+def test_drafter_most_recent_occurrence_wins():
+    d = _drafter(k=2, ngram_max=1)
+    #          v--- 5 first continues with 1, later with 9
+    toks = [5, 1, 2, 5, 9, 8, 5]
+    assert d.propose(0, toks, budget=8) == [9, 8]
+
+
+def test_drafter_drop_forgets_request():
+    d = _drafter()
+    toks = [5, 1, 2, 5]
+    assert d.propose(0, toks, budget=8) == [1, 2, 5][:4]
+    d.drop(0)
+    # a NEW request with a fresh, shorter history must not see rid 0's
+    # grams; same rid re-use after drop restarts cold
+    assert d.propose(0, [5], budget=8) == []
+
+
+# ---------------------------------------------------------------------------
+# engine: bitwise identity + leak freedom
+# ---------------------------------------------------------------------------
+def _prompts(n=3):
+    # mildly repetitive prompts (the workload speculation targets): the
+    # reduced greedy model settles into short cycles the drafter predicts
+    return [([2, 3, 4] * 4)[: 9 + i] for i in range(n)]
+
+
+def _run(m, params, *, spec_k=0, n_new=16, mixed=None, n=3, ecfg_kw=None,
+         policy=None):
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, mixed=mixed,
+                        spec=SpecConfig(k=spec_k), **(ecfg_kw or {}))
+    eng = ShiftEngine(m, m, params, params, ecfg,
+                      policy=policy or ThresholdPolicy(4))
+    reqs = [Request(i, p, max_new_tokens=n_new)
+            for i, p in enumerate(_prompts(n))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_idle()
+    return {r.rid: tuple(r.generated) for r in reqs}, eng
+
+
+@pytest.fixture(scope="module")
+def model_stack():
+    cfg = reduced_cfg("qwen3-8b")
+    m = build_model(cfg, dtype=jnp.float32)
+    return m, m.init_params(jax.random.key(0))
+
+
+def test_spec_streams_bitwise_identical_mixed(model_stack):
+    m, params = model_stack
+    ref, _ = _run(m, params, spec_k=0)
+    got, eng = _run(m, params, spec_k=4)
+    assert got == ref
+    assert eng.spec_disabled_reason is None
+    prop = eng.obs.registry.counter_total("spec_proposed_total")
+    acc = eng.obs.registry.counter_total("spec_accepted_total")
+    assert prop > 0, "repetitive trace must produce drafts"
+    assert 0 < acc <= prop
+
+
+def test_spec_rollback_is_block_leak_free(model_stack):
+    m, params = model_stack
+    _, eng = _run(m, params, spec_k=4)
+    led = eng.block_accounting()
+    assert led.used == 0 and led.pinned == 0
+    # rejected drafts really were rolled back (the model won't accept
+    # everything), and the rollbacks show up in the counter
+    prop = eng.obs.registry.counter_total("spec_proposed_total")
+    acc = eng.obs.registry.counter_total("spec_accepted_total")
+    assert acc < prop
+
+
+def test_spec_counters_reconcile_with_delivered_tokens(model_stack):
+    """decode_tokens counts DELIVERED tokens: identical totals spec-on vs
+    spec-off, with the acceptance surplus explaining the step savings."""
+    m, params = model_stack
+    ref, eng0 = _run(m, params, spec_k=0)
+    got, eng4 = _run(m, params, spec_k=4)
+    dec0 = eng0.obs.registry.counter_total("tokens_decode_total")
+    dec4 = eng4.obs.registry.counter_total("tokens_decode_total")
+    assert dec0 == dec4
+    acc = eng4.obs.registry.counter_total("spec_accepted_total")
+    rows = sum(r["decode_tokens"] - r.get("spec_accepted", 0)
+               for r in eng4.obs.step_records)
+    assert dec4 == rows + acc
+    # accepted drafts == decode steps SAVED vs the non-spec run
+    steps0 = sum(1 for r in eng0.obs.step_records if r["decode_tokens"])
+    steps4 = sum(1 for r in eng4.obs.step_records if r["decode_tokens"])
+    assert steps4 < steps0
+
+
+def test_spec_serialized_fallback_disables_loudly(model_stack):
+    """mixed=False has no verify pass to ride: spec must disable itself
+    (annotated, not crash) and the streams still match spec-off."""
+    m, params = model_stack
+    ref, _ = _run(m, params, spec_k=0, mixed=False)
+    got, eng = _run(m, params, spec_k=4, mixed=False)
+    assert got == ref
+    assert eng.spec_disabled_reason is not None
+    assert "mixed" in eng.spec_disabled_reason
+    assert eng.obs.registry.counter_total("spec_proposed_total") == 0
+
+
+class _Recorder(ThresholdPolicy):
+    """Threshold policy that records the spec_tokens fact it is fed."""
+
+    def __init__(self, threshold):
+        super().__init__(threshold)
+        object.__setattr__(self, "seen", [])
+
+    def use_base(self, n_tokens, n_prefill_tokens=0, ctx_tokens=0,
+                 n_rows=0, ctx_max=0, spec_tokens=0):
+        self.seen.append(spec_tokens)
+        return super().use_base(n_tokens, n_prefill_tokens)
+
+
+def test_policy_receives_spec_token_fact(model_stack):
+    m, params = model_stack
+    pol = _Recorder(4)
+    _, eng = _run(m, params, spec_k=4, policy=pol)
+    assert any(s > 0 for s in pol.seen), \
+        "policy never saw a speculative token count"
+    assert max(pol.seen) <= 4 * eng.cfg.max_slots
+    # and the audit trail carries the same fact
+    assert any(r.get("spec_tokens", 0) > 0 for r in eng.obs.step_records)
+
+
+# ---------------------------------------------------------------------------
+# paged-cache truncate (the rollback primitive)
+# ---------------------------------------------------------------------------
+def test_paged_truncate_frees_tail_blocks():
+    from repro.cache.paged import PagedKVCache
+    kv = PagedKVCache(num_blocks=16, block_size=4, max_seqs=2,
+                      max_blocks_per_seq=8)
+    kv.ensure(0, 10)                       # 3 blocks
+    free0 = kv.num_free_blocks
+    assert kv.truncate(0, 5) == 1          # back to 2 blocks
+    assert kv.num_free_blocks == free0 + 1
+    assert kv.truncate(0, 5) == 0          # idempotent at the same length
+    assert kv.truncate(0, 8) == 0          # growth is ensure's job
+    kv.free_seq(0)
+    assert kv.num_free_blocks == 15        # all but the null block
+
+
+# ---------------------------------------------------------------------------
+# dp>1 and mid-stream reshard
+# ---------------------------------------------------------------------------
+def _mesh_engine(cfg, mesh, lay, spec_k):
+    mb = Model(cfg=cfg, lay=lay, mesh=mesh, dtype=jnp.float32)
+    ms = Model(cfg=cfg, lay=lay.to_shift(), mesh=mesh, dtype=jnp.float32)
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8, block_size=8,
+                        spec=SpecConfig(k=spec_k))
+    return ShiftEngine(mb, ms, mb.init_params(jax.random.key(0)),
+                       ms.init_params(jax.random.key(0)), ecfg,
+                       policy=ThresholdPolicy(4))
+
+
+def _lay(shape):
+    return Layout.from_mesh(make_mesh(shape), dp=("data",), sp=("sp",),
+                            tp=("tp",))
+
+
+def _mesh_reqs(n=4, n_new=10):
+    return [Request(i, ([2, 3, 4] * 4)[: 9 + i], max_new_tokens=n_new)
+            for i in range(n)]
+
+
+def test_spec_bitwise_identical_dp2():
+    cfg = reduced_cfg("qwen3-8b")
+    mesh, lay = make_mesh((2, 1, 1)), _lay((2, 1, 1))
+
+    def run(spec_k):
+        eng = _mesh_engine(cfg, mesh, lay, spec_k)
+        reqs = _mesh_reqs()
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_idle()
+        return {r.rid: tuple(r.generated) for r in reqs}, eng
+
+    ref, _ = run(0)
+    got, eng = run(4)
+    assert got == ref
+    assert eng.obs.registry.counter_total("spec_proposed_total") > 0
+    led = eng.block_accounting()
+    assert led.used == 0 and led.pinned == 0
+
+
+def test_spec_bitwise_identical_across_scheduled_reshard():
+    """Drafter state is never moved: a reshard rebuilds it lazily, and
+    the streams still match an uninterrupted spec-off reference."""
+    cfg = reduced_cfg("qwen3-8b")
+    mesh_dp, lay_dp = make_mesh((2, 1, 1)), _lay((2, 1, 1))
+    mesh_tp, lay_tp = make_mesh((1, 1, 2)), _lay((1, 1, 2))
+
+    ref_eng = _mesh_engine(cfg, mesh_dp, lay_dp, 0)
+    ref_reqs = _mesh_reqs()
+    for r in ref_reqs:
+        ref_eng.submit(r)
+    ref_eng.run_until_idle()
+    expect = {r.rid: tuple(r.generated) for r in ref_reqs}
+
+    eng = _mesh_engine(cfg, mesh_dp, lay_dp, 4)
+    reqs = _mesh_reqs()
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.schedule_reshard(lay_tp, mesh=mesh_tp, lead_steps=1)
+    eng.run_until_idle()
+    assert eng.last_reshard_report is not None
+    assert eng.last_reshard_report.admission_paused_steps == 1
+    got = {r.rid: tuple(r.generated) for r in reqs}
+    assert got == expect
+    led = eng.block_accounting()
+    assert led.used == 0 and led.pinned == 0
+
+
+def test_scheduled_reshard_pauses_admissions():
+    """Satellite: admissions hold while a reshard is pending, so the swap
+    re-pours only already-running requests; the held steps are reported."""
+    cfg = reduced_cfg("qwen3-8b")
+    mesh_dp, lay_dp = make_mesh((2, 1, 1)), _lay((2, 1, 1))
+    mesh_tp, lay_tp = make_mesh((1, 1, 2)), _lay((1, 1, 2))
+    eng = _mesh_engine(cfg, mesh_dp, lay_dp, 0)
+    # more requests than slots: some stay queued behind the pause
+    reqs = _mesh_reqs(n=6, n_new=8)
+    for r in reqs[:4]:
+        eng.submit(r)
+    eng.step()
+    for r in reqs[4:]:
+        eng.submit(r)
+    eng.schedule_reshard(lay_tp, mesh=mesh_tp, lead_steps=2)
+    admitted0 = eng.obs.registry.counter_total("requests_admitted_total")
+    eng.step()                             # paused lead step 1
+    eng.step()                             # paused lead step 2
+    assert eng.obs.registry.counter_total(
+        "requests_admitted_total") == admitted0
+    eng.step()                             # reshard executes, admissions resume
+    assert eng.last_reshard_report is not None
+    assert eng.last_reshard_report.admission_paused_steps == 2
+    assert eng.deploy.signature == lay_tp.signature
+    eng.run_until_idle()
+    assert all(len(r.generated) == 8 for r in reqs)
+    assert any(e["kind"] == "reshard_scheduled"
+               for e in eng.obs.dump()["events"])
+
+
+# ---------------------------------------------------------------------------
+# simulator mirror
+# ---------------------------------------------------------------------------
+def test_sim_spec_ab_fewer_steps_same_tokens():
+    from repro.configs import get_config
+    from repro.sim.simulator import ServeSim, SimRequest
+
+    cm = CostModel(get_config("llama-70b"), hw=H200)
+
+    def run(spec_k):
+        sim = ServeSim(cm, "shift", n_chips=8, spec_k=spec_k)
+        reqs = [SimRequest(rid=i, arrival=0.0, n_in=64, n_out=32)
+                for i in range(4)]
+        sim.run(reqs)
+        return sim
+
+    s0, s4 = run(0), run(4)
+    ct = lambda s, k: s.obs.registry.counter_total(k)  # noqa: E731
+    assert s4.step_count < s0.step_count
+    assert ct(s4, "tokens_decode_total") == ct(s0, "tokens_decode_total")
+    assert ct(s4, "requests_finished_total") == 4
+    prop, acc = ct(s4, "spec_proposed_total"), ct(s4, "spec_accepted_total")
+    assert 0 < acc <= prop
+    # deterministic mirror: the A/B replays exactly
+    s4b = run(4)
+    assert s4b.step_count == s4.step_count
+    assert ct(s4b, "spec_accepted_total") == acc
+
+
+def test_sim_spec_requires_mixed():
+    from repro.configs import get_config
+    from repro.sim.simulator import ServeSim
+    cm = CostModel(get_config("llama-70b"), hw=H200)
+    with pytest.raises(ValueError):
+        ServeSim(cm, "shift", n_chips=8, mixed=False, spec_k=4)
+
+
+def test_costmodel_prices_verify_cheaper_than_serial_decode():
+    """k draft queries share their row's KV read: a (1+k)-query verify
+    pass must cost less than 1+k one-token iterations, and the modeled
+    speedup must grow with acceptance."""
+    from repro.configs import get_config
+    from repro.sim.costmodel import Strategy
+    cm = CostModel(get_config("llama-70b"), hw=H200)
+    strat = Strategy("tp", 8)
+    k = 4
+    t_plain = cm.iteration_time(0, 1, 4096, strat)
+    t_verify = cm.iteration_time(0, 1 + k, 4096, strat, n_spec=k)
+    assert t_verify < (1 + k) * t_plain
+    # n_spec only ever removes KV-read work
+    assert t_verify <= cm.iteration_time(0, 1 + k, 4096, strat)
+    s_none = cm.verify_speedup(k, 0.0, 4096, strat)
+    s_full = cm.verify_speedup(k, float(k), 4096, strat)
+    assert s_full > s_none
+    assert s_full > 1.0
+    assert cm.verify_speedup(0, 2.0, 4096, strat) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# live metrics refresh (serve loop)
+# ---------------------------------------------------------------------------
+def test_serve_loop_refreshes_prom_file(tmp_path, model_stack):
+    from repro.launch.serve import serve_loop
+    m, params = model_stack
+    ecfg = EngineConfig(max_slots=4, s_max=64, prefill_chunk=8)
+    eng = ShiftEngine(m, m, params, params, ecfg, policy=ThresholdPolicy(4))
+    for i, p in enumerate(_prompts()):
+        eng.submit(Request(i, p, max_new_tokens=6))
+    prom = tmp_path / "live.prom"
+    clock = iter(range(1000))              # fake time: 1s per call
+    n = serve_loop(eng, refresh_s=2.0, prom_path=str(prom),
+                   now=lambda: float(next(clock)))
+    assert n >= 2                          # refreshed mid-run, not just at exit
+    text = prom.read_text()
+    assert "repro_steps_total" in text
+    assert not eng.queue and not eng.active
+    # refresh off: the loop degrades to plain run_until_idle, no file
+    eng2 = ShiftEngine(m, m, params, params, ecfg, policy=ThresholdPolicy(4))
+    eng2.submit(Request(0, _prompts(1)[0], max_new_tokens=2))
+    assert serve_loop(eng2, refresh_s=0.0, prom_path=None) == 0
